@@ -1,0 +1,153 @@
+"""Roofline analysis from the dry-run artifacts (harness deliverable g).
+
+For every (arch x shape x mesh) record produced by launch/dryrun.py this
+computes the three per-step roofline terms on TPU v5e:
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s          [s]
+    memory term     = HLO_bytes_per_device / HBM_bw               [s]
+    collective term = collective_bytes_per_device / link_bw       [s]
+
+(the dry-run's cost_analysis numbers are already per-device under SPMD —
+verified in tests/test_hlo_analysis.py), identifies the dominant term,
+and reports MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) against
+the compiled HLO FLOPs to expose remat/redundancy waste.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline results/dryrun_*.json \\
+        [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float          # 6*N(active)*D tokens processed
+    hlo_total_flops: float      # per-device * n_devices
+    useful_fraction: float      # model_flops / hlo_total_flops
+    note: str = ""
+
+
+def tokens_processed(arch: str, shape_name: str) -> float:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "train":
+        return shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return shape.global_batch * shape.seq_len
+    return shape.global_batch * 1.0  # decode: one token per stream
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    n = cfg.active_param_count()
+    toks = tokens_processed(arch, shape_name)
+    kind = INPUT_SHAPES[shape_name].kind
+    # 6ND for training (fwd 2ND + bwd 4ND); 2ND for inference.
+    per_tok = 6.0 * n if kind == "train" else 2.0 * n
+    return per_tok * toks
+
+
+def _n_devices(mesh: str) -> int:
+    n = 1
+    for part in mesh.split("x"):
+        n *= int(part)
+    return n
+
+
+def analyze_records(records: List[dict]) -> List[RooflineRow]:
+    rows: List[RooflineRow] = []
+    for r in records:
+        if r["status"] != "ok":
+            continue
+        compute_s = r["flops"] / PEAK_FLOPS_BF16
+        memory_s = r["hbm_bytes"] / HBM_BW
+        coll_s = r["collective_bytes_per_device"] / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["shape"])
+        total_hlo = r["flops"] * _n_devices(r["mesh"])
+        rows.append(RooflineRow(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+            compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+            dominant=dominant, model_flops=mf,
+            hlo_total_flops=total_hlo,
+            useful_fraction=mf / total_hlo if total_hlo else 0.0,
+        ))
+    return rows
+
+
+_MOVE_HINTS = {
+    "compute": ("compute-bound: raise MFU via flash-attention kernel "
+                "(causal/SWA skip), drop remat recompute on cheap layers"),
+    "memory": ("memory-bound: bf16 cache/activations, fuse logprob "
+               "(Pallas), window-bound local-layer KV caches"),
+    "collective": ("collective-bound: reshard (tensor-parallel where "
+                   "divisible), overlap all-gather with compute, "
+                   "reduce-scatter grads instead of all-reduce"),
+}
+
+
+def to_markdown(rows: List[RooflineRow]) -> str:
+    out = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+        " | dominant | MODEL_FLOPS | useful frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** |"
+            f" {r.model_flops:.3e} | {r.useful_fraction:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("records", nargs="+", help="dryrun JSON file(s)")
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+
+    records: List[dict] = []
+    for path in args.records:
+        with open(path) as f:
+            records.extend(json.load(f))
+    rows = analyze_records(records)
+
+    if args.markdown:
+        print(to_markdown(rows))
+    else:
+        print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "model_flops,useful_fraction")
+        for r in rows:
+            print(f"{r.arch},{r.shape},{r.mesh},{r.compute_s:.4e},"
+                  f"{r.memory_s:.4e},{r.collective_s:.4e},{r.dominant},"
+                  f"{r.model_flops:.4e},{r.useful_fraction:.3f}")
+    # dominant-term summary + hints
+    print()
+    for kind in ("compute", "memory", "collective"):
+        n = sum(1 for r in rows if r.dominant == kind)
+        if n:
+            print(f"# {n:2d} combos {kind}-bound -> {_MOVE_HINTS[kind]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

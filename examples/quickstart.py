@@ -1,0 +1,39 @@
+"""Quickstart: VACO vs PPO under backward policy lag, in ~2 minutes.
+
+Runs the simulated-asynchronous setup (Fig. 1 left) on the pure-JAX
+pendulum with a policy buffer of K=8 stale policies, and prints the
+eval-return trajectories plus the final-policy TV divergence — VACO's TV
+should sit at its delta/2 = 0.1 constraint while improving return.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.train.runner_rl import AsyncRLRunConfig, run_async_rl  # noqa: E402
+
+
+def main() -> None:
+    print("=== VACO vs PPO under backward policy lag (K=8) ===\n")
+    for alg in ("vaco", "ppo"):
+        cfg = AsyncRLRunConfig(
+            env_name="pendulum",
+            algorithm=alg,
+            buffer_capacity=8,     # 8 stale policies in the actor mixture
+            n_actors=16,
+            rollout_steps=96,
+            total_phases=12,
+            seed=0,
+        )
+        res = run_async_rl(cfg)
+        curve = " -> ".join(f"{r:.0f}" for r in res.returns[::3])
+        print(f"{alg:5s} eval return: {curve}")
+        print(f"      final TV vs behavior data: {res.final_tv:.4f}"
+              + ("  (VACO constraint delta/2 = 0.100)"
+                 if alg == "vaco" else ""))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Batched serving demo: the actor-side engine (prefill + KV-cache decode)
+on a reduced assigned architecture, with verifier scoring.
+
+Demonstrates the serve path that the dry-run lowers at production scale
+(decode_32k / long_500k shapes):
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma3-12b
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import reduced_config  # noqa: E402
+from repro.data.mathgen import MathTaskDataset, verify  # noqa: E402
+from repro.data.tokenizer import get_tokenizer  # noqa: E402
+from repro.models.registry import build  # noqa: E402
+from repro.rollout.sampler import generate  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b",
+                    help="any assigned arch id (reduced variant is built)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    args = ap.parse_args()
+
+    tok = get_tokenizer()
+    cfg = reduced_config(args.arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    print(f"serving {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"window={cfg.sliding_window}, arch_type={cfg.arch_type}")
+
+    ds = MathTaskDataset(prompt_len=24, level=0)
+    toks_np, prompts, answers = ds.sample_batch(args.batch)
+
+    aux = {}
+    for name, shape in bundle.aux_input_shapes.items():
+        aux[name] = jnp.ones((args.batch,) + shape) * 0.01
+
+    gen = jax.jit(lambda p, t, k: generate(
+        bundle, p, t, k, max_new_tokens=args.max_new_tokens,
+        temperature=0.8, top_p=0.95, aux=aux or None))
+    key = jax.random.PRNGKey(1)
+    res = gen(params, jnp.asarray(toks_np), key)
+    jax.block_until_ready(res.tokens)
+    t0 = time.time()
+    res = gen(params, jnp.asarray(toks_np), key)
+    jax.block_until_ready(res.tokens)
+    dt = time.time() - t0
+    n = args.batch * args.max_new_tokens
+    print(f"{n} tokens in {dt*1e3:.0f} ms "
+          f"({n/dt:.0f} tok/s, CPU host, jitted decode loop)\n")
+
+    comp = np.asarray(res.completion)
+    for i in range(min(4, args.batch)):
+        text = tok.decode(comp[i])
+        print(f"  prompt: {prompts[i]!r}")
+        print(f"  output: {text!r}  "
+              f"(reward={verify(text, answers[i])}, untrained model)\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""repro — a JAX asynchronous on-policy RL framework implementing VACO.
+
+Reproduction of "Align and Filter: Improving Performance in Asynchronous
+On-Policy RL" (Honari et al., 2026): total-Variation-based Advantage-aligned
+Constrained policy Optimization (VACO), built as a production-grade
+multi-pod JAX training/serving framework.
+
+Public surface:
+    repro.core         -- VACO, V-trace realignment, TV filtering, baselines
+    repro.models       -- policy backbones (dense/MoE/SSM/hybrid/enc-dec/VLM)
+    repro.configs      -- assigned architecture configs + input-shape suite
+    repro.kernels      -- Pallas TPU kernels (+ jnp oracles)
+    repro.envs         -- pure-JAX control environments
+    repro.rollout      -- serve engine + async actor-learner simulator
+    repro.train        -- classic-RL and RLVR trainers
+    repro.launch       -- production meshes, dry-run, launchers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint
+
+__all__ = ["save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,100 @@
+"""msgpack-based pytree checkpointing (orbax/flax serialization absent).
+
+Layout: a single ``<step>.ckpt`` file per save containing
+    {"meta": {...}, "tree": <structure>, "leaves": [raw buffers]}
+Arrays are stored as (dtype, shape, bytes) triples; the tree structure is
+recorded via jax.tree flatten-with-path so restoration does not need an
+example pytree (but can verify against one when given).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _encode_leaf(x) -> Dict[str, Any]:
+    arr = np.asarray(jax.device_get(x))
+    return {
+        b"dtype": arr.dtype.str.encode(),
+        b"shape": list(arr.shape),
+        b"data": arr.tobytes(),
+    }
+
+
+def _decode_leaf(d: Dict[bytes, Any]) -> np.ndarray:
+    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode()))
+    return arr.reshape(d[b"shape"])
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(
+    directory: str, step: int, tree: Any, meta: Optional[Dict] = None
+) -> str:
+    """Serialize `tree` to `<directory>/<step>.ckpt`. Returns the path."""
+    os.makedirs(directory, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    payload = {
+        b"meta": {k.encode(): v for k, v in (meta or {}).items()},
+        b"step": step,
+        b"leaves": {
+            _path_str(p).encode(): _encode_leaf(x)
+            for p, x in leaves_with_paths
+        },
+    }
+    path = os.path.join(directory, f"{step}.ckpt")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload))
+    os.replace(tmp, path)
+    return path
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of `like` (shapes/dtypes verified).
+
+    Returns (tree, step, meta).
+    """
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), strict_map_key=False)
+    stored = {
+        k.decode() if isinstance(k, bytes) else k: v
+        for k, v in payload[b"leaves"].items()
+    }
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for p, x in leaves_with_paths:
+        key = _path_str(p)
+        if key not in stored:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = _decode_leaf(stored[key])
+        want = np.asarray(x)
+        if tuple(arr.shape) != tuple(want.shape):
+            raise ValueError(
+                f"shape mismatch at {key}: {arr.shape} vs {want.shape}"
+            )
+        new_leaves.append(jnp.asarray(arr).astype(want.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    meta = {
+        (k.decode() if isinstance(k, bytes) else k): v
+        for k, v in payload[b"meta"].items()
+    }
+    return tree, int(payload[b"step"]), meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[:-5]) for f in os.listdir(directory) if f.endswith(".ckpt")
+    ]
+    if not steps:
+        return None
+    return os.path.join(directory, f"{max(steps)}.ckpt")

@@ -1,0 +1,25 @@
+"""granite-20b — code model with MQA.  [arXiv:2405.04324]
+
+Assigned: 52L d_model=6144 48H (GQA kv=1 => MQA) d_ff=24576 vocab=49152.
+d_ff = 4*d_model with a plain (non-gated) GELU MLP — the gpt_bigcode-style
+block the 20B Granite code model actually uses (a gated swiglu at this
+d_ff would be ~28B, off the nameplate); attention follows the llama-style
+RoPE/RMSNorm conventions of the rest of the framework.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    arch_type="dense",
+    n_layers=52,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_head=128,
+    d_ff=24576,
+    vocab_size=49152,
+    rope_theta=10_000.0,
+    activation="gelu",
+    value_head=True,
+    source="arXiv:2405.04324 (Granite Code Models)",
+)

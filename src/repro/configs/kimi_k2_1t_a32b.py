@@ -1,0 +1,33 @@
+"""kimi-k2-1t-a32b — trillion-parameter MoE (paper-table scale).
+[arXiv:2501.kimi2]
+
+Assigned: 61L d_model=7168 64H (GQA kv=8) d_ff=2048(expert) vocab=163840,
+MoE 384 experts top-8 (+1 shared).  ~1.04T total / ~32B active params —
+the stress case for expert-parallel sharding and the dry-run's memory
+analysis (optimizer state at this scale needs the full 512-chip multi-pod
+mesh; see EXPERIMENTS.md §Dry-run).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    arch_type="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=2048,                 # per-expert intermediate
+    vocab_size=163840,
+    rope_theta=50_000.0,
+    activation="swiglu",
+    moe=MoEConfig(
+        n_experts=384,
+        top_k=8,
+        d_ff_expert=2048,
+        n_shared_experts=1,
+        capacity_factor=1.25,
+    ),
+    value_head=True,
+    source="arXiv:2501.kimi2 (Kimi K2)",
+)

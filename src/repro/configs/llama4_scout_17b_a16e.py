@@ -1,0 +1,30 @@
+"""llama4-scout-17b-a16e — MoE top-1 routing, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E]
+
+Assigned: 48L d_model=5120 40H (GQA kv=8) d_ff=8192(expert) vocab=202048,
+MoE 16 experts top-1 (+ shared expert, llama4-style).
+"""
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=202048,
+    rope_theta=500_000.0,
+    activation="swiglu",
+    moe=MoEConfig(
+        n_experts=16,
+        top_k=1,
+        d_ff_expert=8192,
+        n_shared_experts=1,
+        capacity_factor=1.25,
+    ),
+    value_head=True,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+)

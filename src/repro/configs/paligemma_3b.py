@@ -1,0 +1,27 @@
+"""paligemma-3b — SigLIP + gemma VLM, prefix-LM.  [arXiv:2407.07726]
+
+Assigned: 18L d_model=2048 8H (GQA kv=1 => MQA) d_ff=16384 vocab=257216.
+The SigLIP vision tower + projector input is the stubbed frontend
+(``input_specs`` provides [B, 256, 1152] patch embeddings); the projector
+linear and the gemma-2b language decoder are real.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    arch_type="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    d_head=256,
+    d_ff=16384,
+    vocab_size=257216,
+    rope_theta=10_000.0,
+    activation="swiglu",      # gemma geglu ~ swiglu-class gated MLP
+    tie_embeddings=True,
+    vision_prefix_len=256,    # 224px / 14 patch -> 256 tokens
+    prefix_lm=True,           # bidirectional prefix over image+prompt
+    value_head=True,
+    source="arXiv:2407.07726 (PaliGemma)",
+)

@@ -1,0 +1,44 @@
+"""The paper's primary contribution: VACO and its analysis tools.
+
+- vtrace        : advantage realignment (Eqs. 13-15) + IMPALA variant
+- tv_filter     : TV estimate (Eq. 8) + gradient filter (Eq. 19 / Alg. 1)
+- losses        : VACO, PPO(-KL), SPO, IMPALA, GRPO(+VACO) objectives
+- gae           : GAE baseline estimator
+- policy_lag    : simulated-async policy buffer (Fig. 1) + forward-lag
+                  schedule (section 5.2 protocol)
+- distributions : DiagGaussian / Categorical policy heads
+"""
+from repro.core.vtrace import vtrace, naive_vtrace, VTraceOutput
+from repro.core.gae import gae, GAEOutput, normalize_advantages
+from repro.core.tv_filter import (
+    tv_estimate,
+    tv_filter_mask,
+    apply_detach,
+    FilterResult,
+)
+from repro.core.losses import (
+    VACOConfig,
+    PPOConfig,
+    SPOConfig,
+    IMPALAConfig,
+    GRPOConfig,
+    vaco_total_loss,
+    vaco_policy_loss,
+    ppo_total_loss,
+    spo_total_loss,
+    impala_total_loss,
+    grpo_token_loss,
+    group_advantages,
+    TISConfig,
+    tis_token_loss,
+    ALGORITHMS,
+)
+from repro.core.policy_lag import (
+    PolicyBuffer,
+    buffer_init,
+    buffer_push,
+    buffer_sample,
+    buffer_latest,
+    ForwardLagSchedule,
+)
+from repro.core.distributions import DiagGaussian, Categorical

@@ -1,0 +1,82 @@
+"""Policy distributions.
+
+Two families cover the paper's experiments:
+
+* ``DiagGaussian`` — continuous control (the MuJoCo-analog setup of §5.1).
+  State-independent log-std parameters, tanh-free (CleanRL convention).
+* ``Categorical`` — token policies for the RLVR setup of §5.2 and for the
+  exact tabular-MDP theory tests.
+
+Both expose log_prob / sample / entropy and an *analytic* per-state total
+variation for the tabular/diagnostic paths.  The training-path TV estimate
+(Eq. 8 of the paper) lives in ``repro.core.tv_filter`` and only needs
+log-probs, so it is distribution-agnostic.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+class DiagGaussian(NamedTuple):
+    """Diagonal Gaussian with mean [.., D] and log_std [.., D]."""
+
+    mean: jax.Array
+    log_std: jax.Array
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        eps = jax.random.normal(key, self.mean.shape, self.mean.dtype)
+        return self.mean + jnp.exp(self.log_std) * eps
+
+    def log_prob(self, a: jax.Array) -> jax.Array:
+        """Sum over the trailing action dimension."""
+        z = (a - self.mean) * jnp.exp(-self.log_std)
+        lp = -0.5 * (z * z + _LOG_2PI) - self.log_std
+        return jnp.sum(lp, axis=-1)
+
+    def entropy(self) -> jax.Array:
+        return jnp.sum(self.log_std + 0.5 * (_LOG_2PI + 1.0), axis=-1)
+
+    def kl(self, other: "DiagGaussian") -> jax.Array:
+        """KL(self || other), summed over action dims."""
+        var_ratio = jnp.exp(2.0 * (self.log_std - other.log_std))
+        t1 = (self.mean - other.mean) * jnp.exp(-other.log_std)
+        kl = 0.5 * (var_ratio + t1 * t1 - 1.0) + (other.log_std - self.log_std)
+        return jnp.sum(kl, axis=-1)
+
+
+class Categorical(NamedTuple):
+    """Categorical over the trailing axis of `logits`."""
+
+    logits: jax.Array
+
+    @property
+    def log_probs(self) -> jax.Array:
+        return jax.nn.log_softmax(self.logits, axis=-1)
+
+    def sample(self, key: jax.Array) -> jax.Array:
+        return jax.random.categorical(key, self.logits, axis=-1)
+
+    def log_prob(self, a: jax.Array) -> jax.Array:
+        lp = self.log_probs
+        return jnp.take_along_axis(lp, a[..., None], axis=-1)[..., 0]
+
+    def entropy(self) -> jax.Array:
+        lp = self.log_probs
+        p = jnp.exp(lp)
+        return -jnp.sum(p * lp, axis=-1)
+
+    def kl(self, other: "Categorical") -> jax.Array:
+        lp, lq = self.log_probs, other.log_probs
+        return jnp.sum(jnp.exp(lp) * (lp - lq), axis=-1)
+
+    def tv(self, other: "Categorical") -> jax.Array:
+        """Exact per-state D_TV = (1/2) sum_a |p(a) - q(a)| (paper Thm 3.2)."""
+        p = jnp.exp(self.log_probs)
+        q = jnp.exp(other.log_probs)
+        return 0.5 * jnp.sum(jnp.abs(p - q), axis=-1)

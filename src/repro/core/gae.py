@@ -1,0 +1,50 @@
+"""Generalized Advantage Estimation (Schulman et al., 2015b).
+
+Used by the PPO / PPO-KL / SPO baselines.  Note the identity exercised in
+tests/test_vtrace.py: with on-policy data (log_ratios == 0) and
+rho_bar = c_bar = inf, V-trace's correction reduces exactly to GAE.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GAEOutput(NamedTuple):
+    advantages: jax.Array  # [B, T]
+    returns: jax.Array     # [B, T]  advantages + values (value targets)
+
+
+def gae(
+    *,
+    values: jax.Array,           # [B, T]
+    bootstrap_value: jax.Array,  # [B]
+    rewards: jax.Array,          # [B, T]
+    discounts: jax.Array,        # [B, T] gamma * (1 - done)
+    lam: float = 0.95,
+) -> GAEOutput:
+    values_tp1 = jnp.concatenate(
+        [values[:, 1:], bootstrap_value[:, None]], axis=1
+    )
+    deltas = rewards + discounts * values_tp1 - values
+
+    def step(acc, x):
+        delta_t, disc_t = x
+        acc = delta_t + disc_t * lam * acc
+        return acc, acc
+
+    _, adv = jax.lax.scan(
+        step,
+        jnp.zeros_like(bootstrap_value),
+        (deltas.T, discounts.T),
+        reverse=True,
+    )
+    advantages = adv.T
+    return GAEOutput(advantages=advantages, returns=advantages + values)
+
+
+def normalize_advantages(adv: jax.Array, eps: float = 1e-8) -> jax.Array:
+    """Batch-standardized advantages (CleanRL default for PPO)."""
+    return (adv - jnp.mean(adv)) / (jnp.std(adv) + eps)

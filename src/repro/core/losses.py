@@ -1,0 +1,403 @@
+"""Policy-optimization losses: VACO and the paper's comparison baselines.
+
+Every loss follows the same convention so the trainers and the RLVR stack
+can swap algorithms behind one interface:
+
+    loss_fn(log_pi, log_beta, advantages, ..., valid_mask) -> (loss, aux)
+
+* ``log_pi``      — log pi_theta(a|s) under the *current* parameters
+                    (differentiable).
+* ``log_beta``    — log beta_T(a|s) recorded at collection time (constant).
+* ``advantages``  — whatever estimator the algorithm prescribes:
+                    A_vtrace w.r.t. pi_T for VACO (realigned, fixed per
+                    phase), GAE for PPO/SPO, per-update V-trace for IMPALA,
+                    group-normalized MC returns for GRPO.
+* ``valid_mask``  — optional {0,1} mask (token padding / truncated steps).
+
+Shapes are arbitrary ([N] for classic RL, [B, S] per-token for RLVR); all
+reductions are masked means.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tv_filter import apply_detach, tv_estimate, tv_filter_mask
+
+
+def _masked_mean(x: jax.Array, mask: jax.Array | None) -> jax.Array:
+    if mask is None:
+        return jnp.mean(x)
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# VACO (the paper's contribution — Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+class VACOConfig(NamedTuple):
+    delta: float = 0.2          # TV threshold (constraint is delta/2)
+    entropy_coef: float = 0.0   # c_H — max-entropy term inside the ratio
+    value_coef: float = 0.5     # c_v
+    policy_coef: float = 1.0    # c_pi
+
+
+def vaco_policy_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    advantages: jax.Array,
+    cfg: VACOConfig,
+    valid_mask: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """TV-filtered importance-weighted policy loss (Algorithm 1).
+
+    L_pi = -(1/N) sum_i ratio_i * (A_i - c_H * log pi_theta(a_i|s_i))
+    with ratio_i detached on samples the TV filter removes.  The advantage
+    is A_vtrace w.r.t. pi_T, *stop-gradient'ed by the caller* (realignment
+    happens once per phase, outside this loss).
+    """
+    advantages = jax.lax.stop_gradient(advantages)
+    log_ratios = log_pi - jax.lax.stop_gradient(log_beta)
+
+    flt = tv_filter_mask(
+        log_ratios=jax.lax.stop_gradient(log_ratios),
+        advantages=advantages,
+        delta=cfg.delta,
+        entropy_coef=cfg.entropy_coef,
+        valid_mask=valid_mask,
+    )
+    filtered_log_ratios = apply_detach(log_ratios, flt.detach_mask)
+    ratios = jnp.exp(filtered_log_ratios)
+
+    # Entropy enters through the same importance weight (Eq. 20-21): the
+    # per-sample integrand is ratio * (A - c_H * log pi).
+    per_sample = ratios * (advantages - cfg.entropy_coef * log_pi)
+    loss = -_masked_mean(per_sample, valid_mask)
+
+    aux = {
+        "tv": flt.tv,
+        "filter_active": flt.active.astype(jnp.float32),
+        "frac_filtered": flt.frac_filtered,
+        "mean_ratio": _masked_mean(jnp.exp(log_ratios), valid_mask),
+    }
+    return loss, aux
+
+
+def value_loss_mse(
+    values: jax.Array,
+    targets: jax.Array,
+    valid_mask: jax.Array | None = None,
+) -> jax.Array:
+    """0.5 * mean (V_phi(s) - v_target)^2 (Algorithm 1's L_v)."""
+    targets = jax.lax.stop_gradient(targets)
+    return 0.5 * _masked_mean(jnp.square(values - targets), valid_mask)
+
+
+def vaco_total_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    advantages: jax.Array,
+    values: jax.Array,
+    value_targets: jax.Array,
+    cfg: VACOConfig,
+    valid_mask: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    l_pi, aux = vaco_policy_loss(
+        log_pi=log_pi,
+        log_beta=log_beta,
+        advantages=advantages,
+        cfg=cfg,
+        valid_mask=valid_mask,
+    )
+    l_v = value_loss_mse(values, value_targets, valid_mask)
+    loss = cfg.policy_coef * l_pi + cfg.value_coef * l_v
+    aux = dict(aux, policy_loss=l_pi, value_loss=l_v, total_loss=loss)
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# PPO (clip + optional KL penalty) — Schulman et al. 2017
+# ---------------------------------------------------------------------------
+
+
+class PPOConfig(NamedTuple):
+    clip_low: float = 0.2        # ratio clipped to [1-clip_low, 1+clip_high]
+    clip_high: float = 0.2       # DAPO-style asymmetric clipping supported
+    kl_coef: float = 0.0         # "PPO-KL Penalty=k" baselines of Fig. 3
+    entropy_coef: float = 0.0
+    value_coef: float = 0.5
+    clip_value: bool = False
+    value_clip_eps: float = 0.2
+
+
+def ppo_policy_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    advantages: jax.Array,
+    cfg: PPOConfig,
+    valid_mask: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    advantages = jax.lax.stop_gradient(advantages)
+    log_ratios = log_pi - jax.lax.stop_gradient(log_beta)
+    ratios = jnp.exp(log_ratios)
+    clipped = jnp.clip(ratios, 1.0 - cfg.clip_low, 1.0 + cfg.clip_high)
+    surrogate = jnp.minimum(ratios * advantages, clipped * advantages)
+    loss = -_masked_mean(surrogate, valid_mask)
+
+    # k3 estimator of KL(beta || pi): E[exp(-lr) - 1 + lr] >= 0.
+    approx_kl = _masked_mean(
+        jnp.expm1(-log_ratios) + log_ratios, valid_mask
+    )
+    if cfg.kl_coef > 0.0:
+        loss = loss + cfg.kl_coef * approx_kl
+
+    clip_frac = _masked_mean(
+        (jnp.abs(ratios - 1.0) > jnp.where(
+            ratios > 1.0, cfg.clip_high, cfg.clip_low
+        )).astype(jnp.float32),
+        valid_mask,
+    )
+    aux = {
+        "approx_kl": approx_kl,
+        "clip_frac": clip_frac,
+        "tv": tv_estimate(jax.lax.stop_gradient(log_ratios), valid_mask),
+        "mean_ratio": _masked_mean(ratios, valid_mask),
+    }
+    return loss, aux
+
+
+def ppo_total_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    advantages: jax.Array,
+    values: jax.Array,
+    value_targets: jax.Array,
+    entropy: jax.Array,
+    cfg: PPOConfig,
+    old_values: jax.Array | None = None,
+    valid_mask: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    l_pi, aux = ppo_policy_loss(
+        log_pi=log_pi,
+        log_beta=log_beta,
+        advantages=advantages,
+        cfg=cfg,
+        valid_mask=valid_mask,
+    )
+    if cfg.clip_value and old_values is not None:
+        v_clipped = old_values + jnp.clip(
+            values - old_values, -cfg.value_clip_eps, cfg.value_clip_eps
+        )
+        l_v = 0.5 * _masked_mean(
+            jnp.maximum(
+                jnp.square(values - value_targets),
+                jnp.square(v_clipped - value_targets),
+            ),
+            valid_mask,
+        )
+    else:
+        l_v = value_loss_mse(values, value_targets, valid_mask)
+    l_ent = _masked_mean(entropy, valid_mask)
+    loss = l_pi + cfg.value_coef * l_v - cfg.entropy_coef * l_ent
+    aux = dict(
+        aux, policy_loss=l_pi, value_loss=l_v, entropy=l_ent, total_loss=loss
+    )
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# SPO — Simple Policy Optimization (Xie et al., 2025): squared-TV penalty
+# ---------------------------------------------------------------------------
+
+
+class SPOConfig(NamedTuple):
+    penalty_coef: float = 20.0   # lambda on E[(ratio - 1)^2]
+    entropy_coef: float = 0.0
+    value_coef: float = 0.5
+
+
+def spo_total_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    advantages: jax.Array,
+    values: jax.Array,
+    value_targets: jax.Array,
+    entropy: jax.Array,
+    cfg: SPOConfig,
+    valid_mask: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    advantages = jax.lax.stop_gradient(advantages)
+    log_ratios = log_pi - jax.lax.stop_gradient(log_beta)
+    ratios = jnp.exp(log_ratios)
+    surrogate = ratios * advantages
+    penalty = jnp.square(ratios - 1.0)  # squared-TV surrogate, no clip
+    l_pi = -_masked_mean(surrogate - cfg.penalty_coef * penalty, valid_mask)
+    l_v = value_loss_mse(values, value_targets, valid_mask)
+    l_ent = _masked_mean(entropy, valid_mask)
+    loss = l_pi + cfg.value_coef * l_v - cfg.entropy_coef * l_ent
+    aux = {
+        "policy_loss": l_pi,
+        "value_loss": l_v,
+        "entropy": l_ent,
+        "tv": tv_estimate(jax.lax.stop_gradient(log_ratios), valid_mask),
+        "penalty": _masked_mean(penalty, valid_mask),
+        "total_loss": loss,
+    }
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# IMPALA — per-update V-trace actor-critic (Espeholt et al., 2018)
+# ---------------------------------------------------------------------------
+
+
+class IMPALAConfig(NamedTuple):
+    entropy_coef: float = 0.0
+    value_coef: float = 0.5
+    rho_bar_pg: float = 1.0
+
+
+def impala_total_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    pg_advantages: jax.Array,   # rho_t * (r + gamma v_{t+1} - V), re-estimated
+    values: jax.Array,
+    value_targets: jax.Array,   # vs from the per-update V-trace pass
+    entropy: jax.Array,
+    cfg: IMPALAConfig,
+    valid_mask: jax.Array | None = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    pg_advantages = jax.lax.stop_gradient(pg_advantages)
+    l_pi = -_masked_mean(log_pi * pg_advantages, valid_mask)
+    l_v = value_loss_mse(values, value_targets, valid_mask)
+    l_ent = _masked_mean(entropy, valid_mask)
+    loss = l_pi + cfg.value_coef * l_v - cfg.entropy_coef * l_ent
+    log_ratios = log_pi - jax.lax.stop_gradient(log_beta)
+    aux = {
+        "policy_loss": l_pi,
+        "value_loss": l_v,
+        "entropy": l_ent,
+        "tv": tv_estimate(jax.lax.stop_gradient(log_ratios), valid_mask),
+        "total_loss": loss,
+    }
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# GRPO (Shao et al., 2024) and GRPO+VACO — the §5.2 RLVR losses
+# ---------------------------------------------------------------------------
+
+
+class GRPOConfig(NamedTuple):
+    clip_low: float = 0.2
+    clip_high: float = 0.272     # DAPO clip-higher (Yu et al., 2025)
+    use_vaco: bool = False       # swap clipping for TV filtering
+    delta: float = 0.05          # TV threshold in the RLVR setup (Table 2)
+    entropy_coef: float = 0.0
+
+
+def grpo_token_loss(
+    *,
+    log_pi: jax.Array,        # [B, S] per-token logprobs, current policy
+    log_beta: jax.Array,      # [B, S] per-token logprobs at generation time
+    advantages: jax.Array,    # [B] or [B, S] group-normalized advantages
+    token_mask: jax.Array,    # [B, S] 1 on completion tokens
+    cfg: GRPOConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-level GRPO loss; PPO-clip or VACO-filter variants.
+
+    The advantage realignment ratio is 1 in this setup (no backward lag;
+    paper App. C.2) — the behavioral correction shows up only through the
+    ratio in the surrogate, exactly as the paper runs it.
+    """
+    if advantages.ndim == 1:
+        advantages = advantages[:, None] * jnp.ones_like(log_pi)
+    advantages = jax.lax.stop_gradient(advantages)
+
+    if cfg.use_vaco:
+        vcfg = VACOConfig(delta=cfg.delta, entropy_coef=cfg.entropy_coef)
+        return vaco_policy_loss(
+            log_pi=log_pi,
+            log_beta=log_beta,
+            advantages=advantages,
+            cfg=vcfg,
+            valid_mask=token_mask,
+        )
+    pcfg = PPOConfig(
+        clip_low=cfg.clip_low,
+        clip_high=cfg.clip_high,
+        entropy_coef=cfg.entropy_coef,
+    )
+    return ppo_policy_loss(
+        log_pi=log_pi,
+        log_beta=log_beta,
+        advantages=advantages,
+        cfg=pcfg,
+        valid_mask=token_mask,
+    )
+
+
+def group_advantages(
+    rewards: jax.Array, group_size: int, eps: float = 1e-6
+) -> jax.Array:
+    """GRPO Monte-Carlo group advantages: (r - mean_g) / (std_g + eps).
+
+    ``rewards`` is [B] with B = num_prompts * group_size, completions of
+    the same prompt contiguous.
+    """
+    r = rewards.reshape(-1, group_size)
+    mean = jnp.mean(r, axis=1, keepdims=True)
+    std = jnp.std(r, axis=1, keepdims=True)
+    return ((r - mean) / (std + eps)).reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# TIS — Truncated Importance Sampling (Yao et al., 2025), discussed by the
+# paper's App. C.2 as the alternative fix for the serve/train logprob
+# mismatch.  Beyond-paper baseline: per-token ratio capped at c_tis, no
+# clip window, no filtering.
+# ---------------------------------------------------------------------------
+
+
+class TISConfig(NamedTuple):
+    c_tis: float = 2.0          # ratio truncation
+    entropy_coef: float = 0.0
+
+
+def tis_token_loss(
+    *,
+    log_pi: jax.Array,
+    log_beta: jax.Array,
+    advantages: jax.Array,
+    token_mask: jax.Array,
+    cfg: TISConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """-E[min(c, ratio) * A] with the truncation detached (the gradient
+    keeps flowing through un-truncated ratios only)."""
+    if advantages.ndim == 1:
+        advantages = advantages[:, None] * jnp.ones_like(log_pi)
+    advantages = jax.lax.stop_gradient(advantages)
+    log_ratios = log_pi - jax.lax.stop_gradient(log_beta)
+    ratios = jnp.exp(log_ratios)
+    truncated = jnp.minimum(ratios, cfg.c_tis)
+    loss = -_masked_mean(truncated * advantages, token_mask)
+    aux = {
+        "tv": tv_estimate(jax.lax.stop_gradient(log_ratios), token_mask),
+        "trunc_frac": _masked_mean(
+            (ratios > cfg.c_tis).astype(jnp.float32), token_mask),
+        "mean_ratio": _masked_mean(ratios, token_mask),
+    }
+    return loss, aux
+
+
+ALGORITHMS = ("vaco", "ppo", "ppo_kl", "spo", "impala", "grpo",
+              "grpo_vaco", "tis")

@@ -1,0 +1,110 @@
+"""Simulated asynchronous RL: the policy-buffer mixture of Fig. 1 (left).
+
+The paper controls *backward* policy lag by keeping a FIFO buffer of the
+last K policies; at the start of each collection phase every actor samples
+a policy uniformly from the buffer, so the behavior policy is the episodic
+mixture beta_T(a|s) = E_{i~M}[pi_i(a|s)] of Eq. 1.  K = 1 recovers fully
+synchronous on-policy collection; larger K = more backward lag.
+
+*Forward* policy lag (§5.2) is a property of the update schedule, not the
+buffer: generate N minibatches from one frozen policy, then take N
+updates.  ``ForwardLagSchedule`` captures that protocol for the RLVR
+trainer.
+
+Everything here is jit-compatible: the buffer is a stacked pytree with a
+leading capacity axis, and sampling gathers per-actor parameter trees that
+can be consumed by a vmapped rollout.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PolicyBuffer(NamedTuple):
+    stacked: Any        # pytree; every leaf has leading dim = capacity
+    head: jax.Array     # scalar int32 — next write position
+    count: jax.Array    # scalar int32 — number of valid entries (<= capacity)
+
+    @property
+    def capacity(self) -> int:
+        return jax.tree.leaves(self.stacked)[0].shape[0]
+
+
+def buffer_init(params: Any, capacity: int) -> PolicyBuffer:
+    """Start the buffer with `capacity` copies of the initial policy."""
+    stacked = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (capacity,) + x.shape).copy(),
+        params,
+    )
+    return PolicyBuffer(
+        stacked=stacked,
+        head=jnp.zeros((), jnp.int32),
+        count=jnp.ones((), jnp.int32),  # the initial policy is valid
+    )
+
+
+def buffer_push(buf: PolicyBuffer, params: Any) -> PolicyBuffer:
+    """FIFO insert of a new policy snapshot."""
+    stacked = jax.tree.map(
+        lambda s, p: jax.lax.dynamic_update_index_in_dim(s, p, buf.head, 0),
+        buf.stacked,
+        params,
+    )
+    cap = buf.capacity
+    return PolicyBuffer(
+        stacked=stacked,
+        head=(buf.head + 1) % cap,
+        count=jnp.minimum(buf.count + 1, cap),
+    )
+
+
+def buffer_sample(buf: PolicyBuffer, key: jax.Array, n_actors: int):
+    """Uniformly sample `n_actors` policies from the valid buffer entries.
+
+    Returns (params_batched, indices): every leaf of `params_batched` has a
+    leading dim of n_actors, suitable for `jax.vmap(policy_apply)`.
+    """
+    idx = jax.random.randint(key, (n_actors,), 0, buf.count)
+    # Ring-buffer order: entry j (age order) lives at (head - count + j) % cap
+    cap = buf.capacity
+    slots = (buf.head - buf.count + idx) % cap
+    params_batched = jax.tree.map(lambda s: s[slots], buf.stacked)
+    return params_batched, slots
+
+
+def buffer_latest(buf: PolicyBuffer) -> Any:
+    """The most recently pushed policy (== the learner's pi_T)."""
+    cap = buf.capacity
+    slot = (buf.head - 1) % cap
+    return jax.tree.map(lambda s: s[slot], buf.stacked)
+
+
+class ForwardLagSchedule(NamedTuple):
+    """§5.2 protocol: N minibatches generated per frozen behavior policy.
+
+    The k-th update within a phase (k = 0..n_minibatches-1) trains on data
+    whose behavior policy is k steps stale — by the last minibatch the
+    learner is N-1 updates ahead of its data.
+    """
+
+    n_minibatches: int
+
+    def lag_at(self, update_in_phase: int) -> int:
+        return update_in_phase  # staleness grows linearly within the phase
+
+
+def mixture_log_prob(
+    log_probs_per_policy: jax.Array, axis: int = 0
+) -> jax.Array:
+    """log beta for an equal-weight mixture: logsumexp over policies - log K.
+
+    Used by diagnostics that compare the *true* mixture density (Eq. 1)
+    against the per-actor densities actually recorded in the rollouts.
+    """
+    k = log_probs_per_policy.shape[axis]
+    return jax.nn.logsumexp(log_probs_per_policy, axis=axis) - jnp.log(
+        float(k)
+    )

@@ -1,0 +1,28 @@
+from repro.data.tokenizer import CharTokenizer, get_tokenizer
+from repro.data.mathgen import (
+    MathTaskDataset,
+    Problem,
+    sample_problem,
+    verify,
+    extract_answer,
+)
+from repro.data.pipeline import (
+    PackedBatch,
+    Prefetcher,
+    pack_examples,
+    packed_warmup_batches,
+)
+
+__all__ = [
+    "CharTokenizer",
+    "get_tokenizer",
+    "MathTaskDataset",
+    "Problem",
+    "sample_problem",
+    "verify",
+    "extract_answer",
+    "PackedBatch",
+    "Prefetcher",
+    "pack_examples",
+    "packed_warmup_batches",
+]

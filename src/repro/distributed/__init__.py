@@ -1,0 +1,19 @@
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    params_shardings,
+    batch_sharding,
+    cache_shardings,
+    replicated,
+    param_spec,
+    data_axes,
+)
+
+__all__ = [
+    "ShardingPolicy",
+    "params_shardings",
+    "batch_sharding",
+    "cache_shardings",
+    "replicated",
+    "param_spec",
+    "data_axes",
+]

@@ -1,0 +1,199 @@
+"""Sharding rules for the production meshes.
+
+Default layout (the paper-faithful baseline recorded in EXPERIMENTS.md):
+
+* **weights** — FSDP-style: every parameter is sharded over the ``model``
+  axis on its largest mesh-divisible dimension.  This is divisibility-
+  robust across the assigned archs (hymba's 25 heads, whisper's 20 make
+  head-count tensor-parallel non-portable) — GSPMD then all-gathers
+  weights per layer.
+* **activations/batch** — batch dim over ``('pod', 'data')`` when
+  divisible (train_4k: 256 -> 8/chip on 2x16x16).
+* **long_500k decode** — batch=1, so the KV cache shards its *sequence*
+  axis over ``data``; softmax over the sharded axis lowers to the
+  max/sum all-reduce pair (distributed flash-decode without shard_map).
+* **MoE** — expert-bank weights shard the expert axis over ``model``
+  (expert parallelism -> all-to-all at the dispatch/combine boundary);
+  group axis of the dispatch follows the batch sharding.
+
+The §Perf hillclimbs override these per-arch via ``Overrides`` (e.g. true
+tensor-parallel for divisible archs, 2D (data, model) weight sharding) —
+see EXPERIMENTS.md for measured deltas.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh: Mesh) -> str:
+    return "model"
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Knobs the perf loop hillclimbs."""
+
+    weight_mode: str = "fsdp"      # fsdp | tensor | replicated | fsdp2d
+    shard_moe_experts: bool = True
+    batch_over_pod: bool = True
+    # batch_mode "data": batch over ('pod','data') only (baseline).
+    # batch_mode "dp_all": batch over EVERY mesh axis (256/512-way pure
+    # data parallelism) with weights still ZeRO-sharded over 'model' —
+    # turns the per-layer activation all-reduces into cheap per-layer
+    # weight all-gathers (EXPERIMENTS.md §Perf hillclimb #1).
+    batch_mode: str = "data"
+
+
+def param_spec(
+    path: str,
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    policy: ShardingPolicy,
+) -> P:
+    """PartitionSpec for one parameter leaf."""
+    m = model_axis(mesh)
+    msize = mesh.shape[m]
+    if policy.weight_mode == "replicated" or not shape:
+        return P()
+
+    dims: list = [None] * len(shape)
+
+    is_expert_bank = any(
+        k in path for k in ("gate_w", "up_w", "down_w")
+    ) and len(shape) >= 3
+    # Stacked layer params carry a leading [L] axis (scan over layers):
+    # never shard it (it is the scan axis).
+    start = 1 if "layers" in path and len(shape) > 1 else 0
+
+    if is_expert_bank and policy.shard_moe_experts:
+        # [(L,) E, d_in, d_out] — expert parallelism over 'model'.
+        e_dim = start
+        if shape[e_dim] % msize == 0:
+            dims[e_dim] = m
+            return P(*dims)
+
+    if policy.weight_mode == "tensor":
+        # Megatron-ish: shard the OUTPUT dim of up/gate/qkv, the INPUT dim
+        # of down/wo (falls back to fsdp choice when not divisible).
+        prefer = len(shape) - 1
+        if any(k in path for k in ("down", "wo", "w_cv")):
+            prefer = max(start, len(shape) - 2)
+        if shape[prefer] % msize == 0:
+            dims[prefer] = m
+            return P(*dims)
+
+    # FSDP: largest divisible trailing dim.
+    order = sorted(
+        range(start, len(shape)), key=lambda i: shape[i], reverse=True
+    )
+    for i in order:
+        if shape[i] % msize == 0 and shape[i] >= msize:
+            dims[i] = m
+            if policy.weight_mode == "fsdp2d":
+                # also shard a second dim over the data axes if divisible.
+                d_axes = data_axes(mesh)
+                dsize = _axis_size(mesh, d_axes)
+                for j in order:
+                    if j != i and shape[j] % dsize == 0 and shape[j] >= dsize:
+                        dims[j] = d_axes if len(d_axes) > 1 else d_axes[0]
+                        break
+            return P(*dims)
+    return P()
+
+
+def params_shardings(params: Any, mesh: Mesh,
+                     policy: Optional[ShardingPolicy] = None) -> Any:
+    """NamedSharding pytree matching `params` (works on ShapeDtypeStructs)."""
+    policy = policy or ShardingPolicy()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        specs.append(
+            NamedSharding(mesh, param_spec(pstr, leaf.shape, mesh, policy))
+        )
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_dim_axes(mesh: Mesh, batch: int,
+                   policy: Optional[ShardingPolicy] = None):
+    """Mesh axes to shard a batch dim of the given size, or None."""
+    policy = policy or ShardingPolicy()
+    if policy.batch_mode == "dp_all":
+        axes = tuple(mesh.axis_names)
+        if batch % _axis_size(mesh, axes) == 0:
+            return axes
+    axes = data_axes(mesh) if policy.batch_over_pod else ("data",)
+    if batch % _axis_size(mesh, axes) == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def batch_sharding(mesh: Mesh, batch: int, ndim: int,
+                   policy: Optional[ShardingPolicy] = None) -> NamedSharding:
+    ax = batch_dim_axes(mesh, batch, policy)
+    dims = [ax] + [None] * (ndim - 1)
+    return NamedSharding(mesh, P(*dims))
+
+
+def cache_shardings(
+    cache: Any,
+    mesh: Mesh,
+    *,
+    shard_seq: bool,
+    policy: Optional[ShardingPolicy] = None,
+) -> Any:
+    """Shardings for the decode cache.
+
+    Layout per leaf: k/v are [L, B, S, KV, Dh]; recurrent states are
+    [L, B, ...]; pos is [B].  ``shard_seq=True`` (long_500k) places the
+    cache sequence axis on ``data``; otherwise the batch axis carries the
+    data axes.
+    """
+    policy = policy or ShardingPolicy()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        shape = leaf.shape
+        if pstr.endswith("['pos']"):
+            out.append(NamedSharding(mesh, P()))
+            continue
+        dims: list = [None] * len(shape)
+        is_kv = ("['k']" in pstr or "['v']" in pstr) and len(shape) == 5
+        if is_kv:
+            if shard_seq and shape[2] % mesh.shape["data"] == 0:
+                dims[2] = "data"
+            else:
+                ax = batch_dim_axes(mesh, shape[1], policy)
+                dims[1] = ax
+        elif pstr.endswith("['enc']") and len(shape) == 3:
+            ax = batch_dim_axes(mesh, shape[0], policy)
+            dims[0] = ax
+        elif len(shape) >= 2:
+            # recurrent states [L, B, ...]: shard batch when possible.
+            ax = batch_dim_axes(mesh, shape[1], policy)
+            dims[1] = ax
+        out.append(NamedSharding(mesh, P(*dims)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,32 @@
+from repro.envs.base import Env, Timestep, wrap_autoreset, angle_normalize
+from repro.envs.normalize import (
+    RunningStat,
+    stat_init,
+    stat_update,
+    normalize,
+    reward_norm_init,
+    reward_norm_update,
+)
+from repro.envs.classic import (
+    ENV_MAKERS,
+    make_env,
+    make_pendulum,
+    make_cartpole_swingup,
+    make_acrobot,
+    make_pointmass,
+    make_reacher,
+)
+
+__all__ = [
+    "Env",
+    "Timestep",
+    "wrap_autoreset",
+    "angle_normalize",
+    "ENV_MAKERS",
+    "make_env",
+    "make_pendulum",
+    "make_cartpole_swingup",
+    "make_acrobot",
+    "make_pointmass",
+    "make_reacher",
+]

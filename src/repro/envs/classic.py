@@ -1,0 +1,294 @@
+"""Five pure-JAX continuous-control environments.
+
+pendulum        1-act swing-up, dense cost           (obs 3)
+cartpole_swingup 1-act cart + pole swing-up           (obs 5)
+acrobot         1-act two-link underactuated swing-up (obs 6)
+pointmass       2-act double integrator to random goal (obs 6)
+reacher         2-act two-link arm to random target    (obs 8)
+
+All dynamics are explicit-Euler at fixed dt with clipped torques, smooth
+rewards, and bounded states — well-conditioned for policy-gradient
+learning within a few hundred thousand steps on CPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, Timestep, angle_normalize
+
+
+# ---------------------------------------------------------------------------
+# Pendulum swing-up
+# ---------------------------------------------------------------------------
+
+
+class PendulumState(NamedTuple):
+    th: jax.Array
+    thdot: jax.Array
+
+
+def make_pendulum(max_steps: int = 200) -> Env:
+    g, m, l, dt = 10.0, 1.0, 1.0, 0.05
+    max_torque, max_speed = 2.0, 8.0
+
+    def observe(s: PendulumState):
+        return jnp.stack([jnp.cos(s.th), jnp.sin(s.th), s.thdot / max_speed])
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+        thdot = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+        return PendulumState(th=th, thdot=thdot)
+
+    def step(s: PendulumState, action, key):
+        u = jnp.clip(action[0], -1.0, 1.0) * max_torque
+        cost = (
+            angle_normalize(s.th) ** 2
+            + 0.1 * s.thdot**2
+            + 0.001 * u**2
+        )
+        thdot = s.thdot + (
+            3.0 * g / (2.0 * l) * jnp.sin(s.th)
+            + 3.0 / (m * l**2) * u
+        ) * dt
+        thdot = jnp.clip(thdot, -max_speed, max_speed)
+        th = s.th + thdot * dt
+        ns = PendulumState(th=th, thdot=thdot)
+        return ns, Timestep(
+            obs=observe(ns),
+            reward=-cost,
+            done=jnp.zeros((), bool),
+            info_steps=jnp.zeros((), jnp.int32),
+        )
+
+    return Env("pendulum", 3, 1, max_steps, reset, step, observe)
+
+
+# ---------------------------------------------------------------------------
+# CartPole swing-up (continuous force)
+# ---------------------------------------------------------------------------
+
+
+class CartPoleState(NamedTuple):
+    x: jax.Array
+    xdot: jax.Array
+    th: jax.Array
+    thdot: jax.Array
+
+
+def make_cartpole_swingup(max_steps: int = 250) -> Env:
+    g, mc, mp, l, dt = 9.8, 1.0, 0.1, 0.5, 0.02
+    force_mag, x_lim = 10.0, 2.4
+
+    def observe(s: CartPoleState):
+        return jnp.stack(
+            [s.x / x_lim, s.xdot / 5.0, jnp.cos(s.th), jnp.sin(s.th),
+             s.thdot / 10.0]
+        )
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        th = jnp.pi + 0.1 * jax.random.normal(k1)   # hanging down
+        x = 0.2 * jax.random.normal(k2)
+        return CartPoleState(
+            x=x, xdot=jnp.zeros(()), th=th, thdot=jnp.zeros(())
+        )
+
+    def step(s: CartPoleState, action, key):
+        f = jnp.clip(action[0], -1.0, 1.0) * force_mag
+        sin, cos = jnp.sin(s.th), jnp.cos(s.th)
+        total_m = mc + mp
+        tmp = (f + mp * l * s.thdot**2 * sin) / total_m
+        thacc = (g * sin - cos * tmp) / (
+            l * (4.0 / 3.0 - mp * cos**2 / total_m)
+        )
+        xacc = tmp - mp * l * thacc * cos / total_m
+        x = s.x + dt * s.xdot
+        xdot = jnp.clip(s.xdot + dt * xacc, -5.0, 5.0)
+        th = s.th + dt * s.thdot
+        thdot = jnp.clip(s.thdot + dt * thacc, -10.0, 10.0)
+        ns = CartPoleState(x=x, xdot=xdot, th=th, thdot=thdot)
+        # Upright bonus minus control / off-center penalty.
+        reward = jnp.cos(th) - 0.05 * (x / x_lim) ** 2 - 0.001 * f**2
+        done = jnp.abs(x) > x_lim
+        return ns, Timestep(
+            obs=observe(ns), reward=reward, done=done,
+            info_steps=jnp.zeros((), jnp.int32),
+        )
+
+    return Env("cartpole_swingup", 5, 1, max_steps, reset, step, observe)
+
+
+# ---------------------------------------------------------------------------
+# Acrobot swing-up (continuous torque)
+# ---------------------------------------------------------------------------
+
+
+class AcrobotState(NamedTuple):
+    th1: jax.Array
+    th2: jax.Array
+    dth1: jax.Array
+    dth2: jax.Array
+
+
+def make_acrobot(max_steps: int = 250) -> Env:
+    m1 = m2 = 1.0
+    l1 = 1.0
+    lc1 = lc2 = 0.5
+    i1 = i2 = 1.0
+    g, dt, max_torque = 9.8, 0.05, 2.0
+
+    def observe(s: AcrobotState):
+        return jnp.stack(
+            [jnp.cos(s.th1), jnp.sin(s.th1), jnp.cos(s.th2), jnp.sin(s.th2),
+             s.dth1 / (4.0 * jnp.pi), s.dth2 / (9.0 * jnp.pi)]
+        )
+
+    def reset(key):
+        vals = jax.random.uniform(key, (4,), minval=-0.1, maxval=0.1)
+        return AcrobotState(
+            th1=vals[0], th2=vals[1], dth1=vals[2], dth2=vals[3]
+        )
+
+    def step(s: AcrobotState, action, key):
+        tau = jnp.clip(action[0], -1.0, 1.0) * max_torque
+        d1 = (
+            m1 * lc1**2
+            + m2 * (l1**2 + lc2**2 + 2 * l1 * lc2 * jnp.cos(s.th2))
+            + i1 + i2
+        )
+        d2 = m2 * (lc2**2 + l1 * lc2 * jnp.cos(s.th2)) + i2
+        phi2 = m2 * lc2 * g * jnp.cos(s.th1 + s.th2 - jnp.pi / 2.0)
+        phi1 = (
+            -m2 * l1 * lc2 * s.dth2**2 * jnp.sin(s.th2)
+            - 2 * m2 * l1 * lc2 * s.dth2 * s.dth1 * jnp.sin(s.th2)
+            + (m1 * lc1 + m2 * l1) * g * jnp.cos(s.th1 - jnp.pi / 2.0)
+            + phi2
+        )
+        ddth2 = (
+            tau + d2 / d1 * phi1
+            - m2 * l1 * lc2 * s.dth1**2 * jnp.sin(s.th2) - phi2
+        ) / (m2 * lc2**2 + i2 - d2**2 / d1)
+        ddth1 = -(d2 * ddth2 + phi1) / d1
+        dth1 = jnp.clip(s.dth1 + dt * ddth1, -4 * jnp.pi, 4 * jnp.pi)
+        dth2 = jnp.clip(s.dth2 + dt * ddth2, -9 * jnp.pi, 9 * jnp.pi)
+        ns = AcrobotState(
+            th1=angle_normalize(s.th1 + dt * dth1),
+            th2=angle_normalize(s.th2 + dt * dth2),
+            dth1=dth1,
+            dth2=dth2,
+        )
+        # Tip height in [-2, 2]; dense shaping toward swing-up.
+        height = -jnp.cos(ns.th1) - jnp.cos(ns.th1 + ns.th2)
+        reward = 0.5 * height - 0.001 * tau**2
+        return ns, Timestep(
+            obs=observe(ns), reward=reward, done=jnp.zeros((), bool),
+            info_steps=jnp.zeros((), jnp.int32),
+        )
+
+    return Env("acrobot", 6, 1, max_steps, reset, step, observe)
+
+
+# ---------------------------------------------------------------------------
+# Point-mass goal reaching (double integrator)
+# ---------------------------------------------------------------------------
+
+
+class PointMassState(NamedTuple):
+    pos: jax.Array   # [2]
+    vel: jax.Array   # [2]
+    goal: jax.Array  # [2]
+
+
+def make_pointmass(max_steps: int = 150) -> Env:
+    dt, max_force, arena = 0.05, 1.0, 2.0
+
+    def observe(s: PointMassState):
+        return jnp.concatenate(
+            [s.pos / arena, s.vel, (s.goal - s.pos) / arena]
+        )
+
+    def reset(key):
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.uniform(k1, (2,), minval=-arena, maxval=arena)
+        goal = jax.random.uniform(k2, (2,), minval=-arena, maxval=arena)
+        return PointMassState(pos=pos, vel=jnp.zeros((2,)), goal=goal)
+
+    def step(s: PointMassState, action, key):
+        f = jnp.clip(action, -1.0, 1.0) * max_force
+        vel = jnp.clip(s.vel + dt * f - 0.02 * s.vel, -2.0, 2.0)
+        pos = jnp.clip(s.pos + dt * vel, -arena, arena)
+        ns = PointMassState(pos=pos, vel=vel, goal=s.goal)
+        dist = jnp.linalg.norm(s.goal - pos)
+        reward = -dist - 0.01 * jnp.sum(f**2) + jnp.where(dist < 0.1, 1.0, 0.0)
+        return ns, Timestep(
+            obs=observe(ns), reward=reward, done=jnp.zeros((), bool),
+            info_steps=jnp.zeros((), jnp.int32),
+        )
+
+    return Env("pointmass", 6, 2, max_steps, reset, step, observe)
+
+
+# ---------------------------------------------------------------------------
+# Two-link reacher
+# ---------------------------------------------------------------------------
+
+
+class ReacherState(NamedTuple):
+    th: jax.Array      # [2]
+    thdot: jax.Array   # [2]
+    target: jax.Array  # [2]
+
+
+def make_reacher(max_steps: int = 100) -> Env:
+    l1, l2, dt, max_torque = 0.1, 0.11, 0.02, 1.0
+
+    def _tip(th):
+        x = l1 * jnp.cos(th[0]) + l2 * jnp.cos(th[0] + th[1])
+        y = l1 * jnp.sin(th[0]) + l2 * jnp.sin(th[0] + th[1])
+        return jnp.stack([x, y])
+
+    def observe(s: ReacherState):
+        return jnp.concatenate(
+            [jnp.cos(s.th), jnp.sin(s.th), s.thdot / 10.0,
+             (s.target - _tip(s.th)) * 5.0]
+        )
+
+    def reset(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        th = jax.random.uniform(k1, (2,), minval=-jnp.pi, maxval=jnp.pi)
+        r = jax.random.uniform(k2, (), minval=0.05, maxval=l1 + l2 - 0.01)
+        ang = jax.random.uniform(k3, (), minval=-jnp.pi, maxval=jnp.pi)
+        target = r * jnp.stack([jnp.cos(ang), jnp.sin(ang)])
+        return ReacherState(th=th, thdot=jnp.zeros((2,)), target=target)
+
+    def step(s: ReacherState, action, key):
+        tau = jnp.clip(action, -1.0, 1.0) * max_torque
+        thdot = jnp.clip(s.thdot + dt * (tau * 40.0 - 1.0 * s.thdot),
+                         -10.0, 10.0)
+        th = s.th + dt * thdot
+        ns = ReacherState(th=th, thdot=thdot, target=s.target)
+        dist = jnp.linalg.norm(s.target - _tip(th))
+        reward = -dist - 0.01 * jnp.sum(tau**2)
+        return ns, Timestep(
+            obs=observe(ns), reward=reward, done=jnp.zeros((), bool),
+            info_steps=jnp.zeros((), jnp.int32),
+        )
+
+    return Env("reacher", 8, 2, max_steps, reset, step, observe)
+
+
+ENV_MAKERS = {
+    "pendulum": make_pendulum,
+    "cartpole_swingup": make_cartpole_swingup,
+    "acrobot": make_acrobot,
+    "pointmass": make_pointmass,
+    "reacher": make_reacher,
+}
+
+
+def make_env(name: str, **kwargs) -> Env:
+    return ENV_MAKERS[name](**kwargs)

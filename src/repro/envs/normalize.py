@@ -1,0 +1,75 @@
+"""Running observation/reward normalization (CleanRL's NormalizeObservation
+/ NormalizeReward, jit-compatible functional form).
+
+The paper's Table 1 setup uses CleanRL defaults, which normalize
+observations with running mean/variance (Welford) and scale rewards by a
+running std of discounted returns.  State is an explicit pytree carried
+by the rollout loop so everything stays inside jit and is shared across
+the mixture actors (normalization statistics belong to the *environment*
+stream, not to any one policy).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RunningStat(NamedTuple):
+    mean: jax.Array   # [D]
+    var: jax.Array    # [D]
+    count: jax.Array  # scalar
+
+
+def stat_init(dim: int) -> RunningStat:
+    return RunningStat(
+        mean=jnp.zeros((dim,)),
+        var=jnp.ones((dim,)),
+        count=jnp.asarray(1e-4),
+    )
+
+
+def stat_update(stat: RunningStat, batch: jax.Array) -> RunningStat:
+    """Parallel Welford update with a [N, D] batch."""
+    b_mean = jnp.mean(batch, axis=0)
+    b_var = jnp.var(batch, axis=0)
+    b_count = jnp.asarray(batch.shape[0], jnp.float32)
+
+    delta = b_mean - stat.mean
+    tot = stat.count + b_count
+    new_mean = stat.mean + delta * b_count / tot
+    m_a = stat.var * stat.count
+    m_b = b_var * b_count
+    m2 = m_a + m_b + jnp.square(delta) * stat.count * b_count / tot
+    return RunningStat(mean=new_mean, var=m2 / tot, count=tot)
+
+
+def normalize(stat: RunningStat, x: jax.Array,
+              clip: float = 10.0) -> jax.Array:
+    y = (x - stat.mean) / jnp.sqrt(stat.var + 1e-8)
+    return jnp.clip(y, -clip, clip)
+
+
+class RewardNormState(NamedTuple):
+    ret: jax.Array     # [N] running discounted returns per env stream
+    stat: RunningStat  # scalar statistics over returns
+
+
+def reward_norm_init(n_envs: int) -> RewardNormState:
+    return RewardNormState(ret=jnp.zeros((n_envs,)), stat=stat_init(1))
+
+
+def reward_norm_update(
+    state: RewardNormState,
+    rewards: jax.Array,   # [N]
+    dones: jax.Array,     # [N]
+    gamma: float = 0.99,
+    clip: float = 10.0,
+) -> Tuple[RewardNormState, jax.Array]:
+    """Scale rewards by the running std of discounted returns."""
+    ret = state.ret * gamma * (1.0 - dones.astype(jnp.float32)) + rewards
+    stat = stat_update(state.stat, ret[:, None])
+    scaled = jnp.clip(
+        rewards / jnp.sqrt(stat.var[0] + 1e-8), -clip, clip)
+    return RewardNormState(ret=ret, stat=stat), scaled

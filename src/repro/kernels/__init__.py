@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the performance hot-spots, with jnp oracles.
+
+- vtrace_pallas         : batch-tiled backward time-scan (Eqs. 14-15)
+- flash_attention_pallas: online-softmax causal/SWA attention, GQA-aware
+- wkv6_pallas           : chunked RWKV-6 linear-attention recurrence
+- fused_logprob_pallas  : vocab-streamed log-prob + entropy (RLVR hot-spot)
+- ops                   : jit'd dispatch (reference | pallas_interpret | pallas)
+- ref                   : pure-jnp oracles, autodiff/CPU fallback
+"""
+from repro.kernels import ops, ref

@@ -1,0 +1,105 @@
+"""jit'd dispatch wrappers over the Pallas kernels and their jnp oracles.
+
+Selection policy (``KernelMode``):
+
+* ``reference``         — pure-jnp oracles (CPU, autodiff, dry-run).
+* ``pallas_interpret``  — Pallas kernels executed by the interpreter
+                          (CPU validation of the TPU kernel bodies).
+* ``pallas``            — compiled Pallas (real TPU).
+
+Default comes from ``REPRO_KERNEL_MODE`` (falls back to ``reference`` on
+CPU hosts).  The wrappers keep one signature regardless of backend so the
+models/trainers never branch.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.flash_attention_pallas import flash_attention
+from repro.kernels.fused_logprob_pallas import logprobs_pallas
+from repro.kernels.ssm_scan_pallas import ssm_scan_pallas
+from repro.kernels.vtrace_pallas import vtrace_pallas
+from repro.kernels.wkv6_pallas import wkv6_pallas
+
+_VALID = ("reference", "pallas_interpret", "pallas")
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_MODE", "reference")
+    if mode not in _VALID:
+        raise ValueError(f"REPRO_KERNEL_MODE={mode!r}; want one of {_VALID}")
+    return mode
+
+
+def _pallas_kwargs(mode: Optional[str]) -> Optional[dict]:
+    mode = mode or kernel_mode()
+    if mode == "reference":
+        return None
+    return {"interpret": mode == "pallas_interpret"}
+
+
+def vtrace(
+    log_ratios, values, bootstrap_value, rewards, discounts,
+    *, rho_bar: float = 1.0, c_bar: float = 1.0, lam: float = 1.0,
+    mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_vtrace(
+            log_ratios, values, bootstrap_value, rewards, discounts,
+            rho_bar=rho_bar, c_bar=c_bar, lam=lam)
+    return vtrace_pallas(
+        log_ratios, values, bootstrap_value, rewards, discounts,
+        rho_bar=rho_bar, c_bar=c_bar, lam=lam, **kw)
+
+
+def attention(
+    q, k, v, *, window: Optional[int] = None, causal: bool = True,
+    mode: Optional[str] = None,
+):
+    kw = _pallas_kwargs(mode)
+    if kw is None or not causal:
+        return ref_mod.ref_attention(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, window=window, **kw)
+
+
+def wkv6(
+    r, k, v, w, u, state=None, *, mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_wkv6(r, k, v, w, u, state)
+    return wkv6_pallas(r, k, v, w, u, state, **kw)
+
+
+def ssm_scan(
+    u, dt, b_t, c_t, a, h0=None, *, mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_ssm_scan(u, dt, b_t, c_t, a, h0)
+    return ssm_scan_pallas(u, dt, b_t, c_t, a, h0, **kw)
+
+
+def logprobs_from_logits(
+    logits: jax.Array,    # [..., V]
+    targets: jax.Array,   # [...]
+    *, mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logp, entropy), shapes = targets.shape, fp32."""
+    lead = logits.shape[:-1]
+    vocab = logits.shape[-1]
+    flat_logits = logits.reshape(-1, vocab)
+    flat_targets = targets.reshape(-1)
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        logp = ref_mod.ref_logprobs_from_logits(flat_logits, flat_targets)
+        ent = ref_mod.ref_entropy_from_logits(flat_logits)
+    else:
+        logp, ent = logprobs_pallas(flat_logits, flat_targets, **kw)
+    return logp.reshape(lead), ent.reshape(lead)

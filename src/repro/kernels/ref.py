@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``ref_*`` is the semantic ground truth the kernels must reproduce;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.  These are
+also the CPU/autodiff fallback paths used by the models when the Pallas
+route is disabled.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# V-trace (paper Eqs. 14-15) — same math as repro.core.vtrace, re-exported
+# here so the kernel package is self-contained for its tests.
+# ---------------------------------------------------------------------------
+
+
+def ref_vtrace(
+    log_ratios: jax.Array,      # [B, T]
+    values: jax.Array,          # [B, T]
+    bootstrap_value: jax.Array,  # [B]
+    rewards: jax.Array,         # [B, T]
+    discounts: jax.Array,       # [B, T]
+    rho_bar: float = 1.0,
+    c_bar: float = 1.0,
+    lam: float = 1.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (vs, advantages)."""
+    from repro.core.vtrace import vtrace
+
+    out = vtrace(
+        log_ratios=log_ratios, values=values,
+        bootstrap_value=bootstrap_value, rewards=rewards,
+        discounts=discounts, rho_bar=rho_bar, c_bar=c_bar, lam=lam,
+    )
+    return out.vs, out.advantages
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (causal / sliding-window, GQA)
+# ---------------------------------------------------------------------------
+
+
+def ref_attention(
+    q: jax.Array,   # [B, S, H, D]
+    k: jax.Array,   # [B, S, KV, D]
+    v: jax.Array,   # [B, S, KV, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # None = global
+) -> jax.Array:
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+    qg = q.reshape(b, s, kv, g, d)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k,
+                        preferred_element_type=jnp.float32)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = qi >= ki
+    if window is not None:
+        mask = jnp.logical_and(mask, (qi - ki) < window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 linear-attention recurrence (rwkv6 time-mix)
+# ---------------------------------------------------------------------------
+
+
+def ref_wkv6(
+    r: jax.Array,   # [B, S, H, K]
+    k: jax.Array,   # [B, S, H, K]
+    v: jax.Array,   # [B, S, H, V]
+    w: jax.Array,   # [B, S, H, K]   decay in (0, 1)
+    u: jax.Array,   # [H, K]         bonus
+    state: Optional[jax.Array] = None,  # [B, H, K, V]
+) -> Tuple[jax.Array, jax.Array]:
+    from repro.models.rwkv6 import wkv6_scan
+
+    return wkv6_scan(r, k, v, w, u, state)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-token log-prob (the RLVR hot-spot)
+# ---------------------------------------------------------------------------
+
+
+def ref_logprobs_from_logits(
+    logits: jax.Array,   # [N, V] (callers flatten [B, S, V])
+    targets: jax.Array,  # [N] int32
+) -> jax.Array:
+    """log softmax gathered at targets, fp32 accumulation."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    tgt = jnp.take_along_axis(logits32, targets[:, None], axis=1)[:, 0]
+    return tgt - lse
+
+
+def ref_entropy_from_logits(logits: jax.Array) -> jax.Array:
+    """Per-row softmax entropy, fp32."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.sum(jnp.exp(lp) * lp, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Selective-SSM (Mamba/S6) scan — hymba's SSM branch
+# ---------------------------------------------------------------------------
+
+
+def ref_ssm_scan(
+    u: jax.Array,     # [B, S, I]
+    dt: jax.Array,    # [B, S, I]
+    b_t: jax.Array,   # [B, S, N]
+    c_t: jax.Array,   # [B, S, N]
+    a: jax.Array,     # [I, N]
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    from repro.models.ssm import _ssm_scan
+
+    return _ssm_scan(u, dt, b_t, c_t, a, h0)

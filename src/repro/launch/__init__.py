@@ -1,0 +1,14 @@
+"""Launchers: production meshes, the multi-pod dry-run, train/serve CLIs.
+
+NOTE: repro.launch.dryrun must be executed as __main__ (it sets XLA_FLAGS
+before importing jax); do not import it from a process that already
+initialized jax unless 512 host devices are intended.
+"""
+from repro.launch.mesh import (
+    make_production_mesh,
+    make_debug_mesh,
+    PEAK_FLOPS_BF16,
+    HBM_BW,
+    ICI_BW,
+    HBM_PER_CHIP,
+)

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production meshes, with no device allocation.
+
+For each combination this script:
+  1. builds the FULL assigned config and the matching step function
+     (train_step for train_4k, prefill_step for prefill_32k, serve_step
+     for decode_32k / long_500k);
+  2. constructs ShapeDtypeStruct inputs and NamedShardings from
+     repro.distributed.sharding;
+  3. ``jax.jit(step, in_shardings=...).lower(...).compile()`` on the
+     16x16 single-pod mesh AND the 2x16x16 multi-pod mesh;
+  4. records memory_analysis / cost_analysis / collective bytes for
+     EXPERIMENTS.md §Dry-run and §Roofline.
+
+Run:  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+          [--multi-pod] [--policy fsdp|tensor|fsdp2d] [--out results.json]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    batch_sharding,
+    cache_shardings,
+    params_shardings,
+    replicated,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as steps_mod
+from repro.models.registry import build
+from repro.utils.hlo import collective_bytes
+
+
+@dataclass
+class DryRunRecord:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                      # ok | skipped | failed
+    reason: str = ""
+    seconds: float = 0.0
+    # Raw per-device numbers from the full-depth compile.  NOTE: XLA's
+    # cost_analysis counts a scan (while-loop) body ONCE, so for the
+    # scan-over-layers models these are ~1/L of the true totals.
+    flops_raw: float = 0.0
+    hbm_bytes_raw: float = 0.0
+    # Depth-extrapolated per-device totals (see _extrapolate): the body
+    # cost is measured as compile(2 layers) - compile(1 layer) and scaled
+    # by the real layer count.  These feed §Roofline.
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes_per_device: float = 0.0
+    peak_memory_per_device: float = 0.0
+    argument_size_per_device: float = 0.0
+    output_size_per_device: float = 0.0
+    collective_breakdown: Dict[str, int] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+
+
+def should_skip(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.is_subquadratic:
+        return ("pure full-attention arch: long_500k requires "
+                "sub-quadratic attention (DESIGN.md policy)")
+    return None
+
+
+def _lower_compile(fn, in_shardings, args_abs, kwargs_abs=None,
+                   donate=()):
+    jitted = jax.jit(fn, in_shardings=in_shardings,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args_abs, **(kwargs_abs or {}))
+    compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _compile_combo(cfg, shape, mesh, policy, *, unroll_layers=False,
+                   remat=True):
+    """Lower + compile the step for one (config, shape) on `mesh`."""
+    # remat: per-layer activation rematerialization — the production
+    # training memory policy (a §Perf knob; serve paths ignore it).
+    # REPRO_DECODE_WINDOWED=1: unroll decode so local layers read only a
+    # window-sized cache slice (§Perf hillclimb #3b).
+    if (shape.kind == "decode"
+            and os.environ.get("REPRO_DECODE_WINDOWED") == "1"
+            and cfg.sliding_window is not None):
+        unroll_layers = True
+    if os.environ.get("REPRO_NO_REMAT") == "1":
+        remat = False  # §Perf knob: skip per-layer rematerialization
+    bundle = build(cfg, unroll_layers=unroll_layers,
+                   remat=remat and shape.kind == "train")
+    params_abs = steps_mod.abstract_params(bundle)
+    params_sh = params_shardings(params_abs, mesh, policy)
+
+    with mesh:
+        if shape.kind == "train":
+            prompt_len = shape.seq_len // 2
+            step = steps_mod.make_train_step(bundle, prompt_len)
+            opt_abs = steps_mod.abstract_opt_state(params_abs)
+            opt_sh = params_shardings(opt_abs, mesh, policy)
+            # AdamWState.step counter is replicated.
+            opt_sh = opt_sh._replace(step=replicated(mesh))
+            batch = steps_mod.train_batch_specs(bundle, shape, prompt_len)
+            batch_sh = {
+                k: batch_sharding(mesh, v.shape[0], v.ndim, policy)
+                for k, v in batch.items()
+            }
+            # params/opt are donated: the update is in-place on-device,
+            # as a real learner runs.
+            return _lower_compile(
+                step, (params_sh, opt_sh, batch_sh),
+                (params_abs, opt_abs, batch), donate=(0, 1),
+            )
+        if shape.kind == "prefill":
+            step = steps_mod.make_prefill_step(bundle)
+            specs = steps_mod.prefill_specs(bundle, shape)
+            tokens = specs.pop("tokens")
+            tok_sh = batch_sharding(
+                mesh, tokens.shape[0], tokens.ndim, policy)
+            aux_sh = {
+                k: batch_sharding(mesh, v.shape[0], v.ndim, policy)
+                for k, v in specs.items()
+            }
+            return _lower_compile(
+                step, (params_sh, tok_sh, aux_sh),
+                (params_abs, tokens, specs),
+            )
+        # decode
+        step = steps_mod.make_serve_step(bundle)
+        specs = steps_mod.serve_specs(bundle, shape)
+        shard_seq = shape.name == "long_500k"
+        cache_sh = cache_shardings(
+            specs["cache"], mesh, shard_seq=shard_seq, policy=policy)
+        # the KV cache is donated: decode updates it in place.
+        return _lower_compile(
+            step, (params_sh, replicated(mesh), cache_sh),
+            (params_abs, specs["token"], specs["cache"]), donate=(2,),
+        )
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis() or {}
+    stats = collective_bytes(compiled.as_text())
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        stats,
+    )
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    policy: Optional[ShardingPolicy] = None,
+    verbose: bool = True,
+    extrapolate: bool = True,
+    probe_depths: tuple = (1, 2),
+) -> DryRunRecord:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = DryRunRecord(arch=arch, shape=shape_name, mesh=mesh_name,
+                       status="ok")
+    skip = should_skip(arch, shape_name)
+    if skip:
+        rec.status, rec.reason = "skipped", skip
+        return rec
+
+    policy = policy or ShardingPolicy()
+    t0 = time.time()
+    try:
+        cfg = get_config(arch)
+        shape = INPUT_SHAPES[shape_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+        # 1. FULL-depth compile: proves the production lowering and gives
+        #    memory_analysis (+ raw, scan-body-once cost numbers).
+        lowered, compiled = _compile_combo(cfg, shape, mesh, policy)
+        rec.flops_raw, rec.hbm_bytes_raw, raw_stats = _costs(compiled)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            rec.peak_memory_per_device = float(
+                getattr(mem, "temp_size_in_bytes", 0))
+            rec.argument_size_per_device = float(
+                getattr(mem, "argument_size_in_bytes", 0))
+            rec.output_size_per_device = float(
+                getattr(mem, "output_size_in_bytes", 0))
+
+        # 2. Depth extrapolation: compile UNROLLED 1- and 2-layer variants
+        #    (XLA counts a while-loop body once; the unrolled delta is the
+        #    true per-layer cost).  total = m1 + (L-1) * (m2 - m1).
+        if extrapolate:
+            def depth_variant(k: int):
+                kwargs = {"n_layers": k}
+                if cfg.encoder_layers > 0:
+                    kwargs["encoder_layers"] = k
+                return cfg.replace(**kwargs)
+
+            da, db = probe_depths
+            # total = m_a + (L - a)/(b - a) * (m_b - m_a); heterogeneous
+            # layer patterns (gemma3 5:1) use (a, b) = one/two full
+            # pattern periods so the delta averages a whole period.
+            _, c1 = _compile_combo(depth_variant(da), shape, mesh, policy,
+                                   unroll_layers=True)
+            _, c2 = _compile_combo(depth_variant(db), shape, mesh, policy,
+                                   unroll_layers=True)
+            f1, b1, s1 = _costs(c1)
+            f2, b2, s2 = _costs(c2)
+            L = cfg.n_layers
+            scale = (L - da) / (db - da)
+            rec.flops = f1 + scale * max(f2 - f1, 0.0)
+            rec.hbm_bytes = b1 + scale * max(b2 - b1, 0.0)
+            kinds = set(s1.bytes_by_kind) | set(s2.bytes_by_kind)
+            for kind in kinds:
+                v1 = s1.bytes_by_kind.get(kind, 0)
+                v2 = s2.bytes_by_kind.get(kind, 0)
+                n1 = s1.count_by_kind.get(kind, 0)
+                n2 = s2.count_by_kind.get(kind, 0)
+                rec.collective_breakdown[kind] = int(
+                    v1 + scale * max(v2 - v1, 0))
+                rec.collective_counts[kind] = int(
+                    n1 + scale * max(n2 - n1, 0))
+            rec.collective_bytes_per_device = float(
+                sum(rec.collective_breakdown.values()))
+        else:
+            rec.flops, rec.hbm_bytes = rec.flops_raw, rec.hbm_bytes_raw
+            rec.collective_bytes_per_device = float(raw_stats.total_bytes)
+            rec.collective_breakdown = dict(raw_stats.bytes_by_kind)
+            rec.collective_counts = dict(raw_stats.count_by_kind)
+
+        rec.seconds = time.time() - t0
+        if verbose:
+            print(
+                f"[ok] {arch:24s} {shape_name:12s} {mesh_name:8s} "
+                f"{rec.seconds:6.1f}s flops/dev={rec.flops:.3e} "
+                f"bytes/dev={rec.hbm_bytes:.3e} "
+                f"coll/dev={rec.collective_bytes_per_device:.3e} "
+                f"peak_mem/dev={rec.peak_memory_per_device/2**30:.2f}GiB",
+                flush=True,
+            )
+    except Exception as e:  # noqa: BLE001 — record and continue the grid
+        rec.status = "failed"
+        rec.reason = f"{type(e).__name__}: {e}"
+        rec.seconds = time.time() - t0
+        if verbose:
+            print(f"[FAIL] {arch} {shape_name} {mesh_name}: {rec.reason}")
+            traceback.print_exc()
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None,
+                    help="single arch id (default: all 10)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES), help="single input shape")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 512-chip mesh")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod")
+    ap.add_argument("--policy", default="fsdp",
+                    choices=["fsdp", "tensor", "fsdp2d", "replicated"])
+    ap.add_argument("--batch-mode", default="data",
+                    choices=["data", "dp_all"])
+    ap.add_argument("--out", default=None, help="write JSON records here")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the 1/2-layer probes (compile-proof only)")
+    ap.add_argument("--probe-depths", nargs=2, type=int, default=[1, 2],
+                    help="layer depths for the cost extrapolation probes")
+    args = ap.parse_args(argv)
+
+    n_dev = len(jax.devices())
+    assert n_dev == 512, (
+        f"dry-run needs 512 host devices, got {n_dev} — "
+        "XLA_FLAGS was set too late?")
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    policy = ShardingPolicy(weight_mode=args.policy,
+                            batch_mode=args.batch_mode)
+
+    records: List[DryRunRecord] = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                records.append(
+                    run_one(arch, shape, multi_pod=mp, policy=policy,
+                            extrapolate=not args.no_extrapolate,
+                            probe_depths=tuple(args.probe_depths))
+                )
+
+    ok = sum(r.status == "ok" for r in records)
+    skipped = sum(r.status == "skipped" for r in records)
+    failed = sum(r.status == "failed" for r in records)
+    print(f"\ndry-run: {ok} ok, {skipped} skipped (documented), "
+          f"{failed} failed / {len(records)} total")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([asdict(r) for r in records], f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Serving launcher: batched completion generation against a reduced
+assigned architecture (the actor side of the async RLVR loop).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-0.5b \\
+      --batch 8 --max-new-tokens 16
+
+Loads a checkpoint when given (--checkpoint), else serves random init —
+the point on this host is exercising the prefill + KV-cache decode
+engine; on TPU the same ``generate`` runs under the production mesh with
+the serve_step shardings proven by the dry-run.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2.5-0.5b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--level", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import reduced_config
+    from repro.data.mathgen import MathTaskDataset, verify
+    from repro.data.tokenizer import get_tokenizer
+    from repro.models.registry import build
+    from repro.rollout.sampler import generate
+    from repro.checkpoint import load_checkpoint
+
+    tok = get_tokenizer()
+    cfg = reduced_config(args.arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(args.seed))
+    if args.checkpoint:
+        params, step, meta = load_checkpoint(args.checkpoint, params)
+        print(f"loaded checkpoint step={step} meta={meta}")
+
+    ds = MathTaskDataset(prompt_len=32, level=args.level,
+                         seed=args.seed + 1)
+    toks_np, prompts, answers = ds.sample_batch(args.batch)
+
+    gen_fn = jax.jit(lambda p, t, k: generate(
+        bundle, p, t, k, max_new_tokens=args.max_new_tokens,
+        temperature=args.temperature, top_p=args.top_p,
+    ))
+    # warm + timed call (measures the jitted serve loop on this host).
+    key = jax.random.PRNGKey(args.seed + 2)
+    res = gen_fn(params, jnp.asarray(toks_np), key)
+    jax.block_until_ready(res.tokens)
+    t0 = time.time()
+    res = gen_fn(params, jnp.asarray(toks_np), key)
+    jax.block_until_ready(res.tokens)
+    dt = time.time() - t0
+    n_tok = args.batch * args.max_new_tokens
+    print(f"decode: {n_tok} tokens in {dt*1e3:.1f} ms "
+          f"({n_tok/dt:.0f} tok/s on this host)")
+
+    comp = np.asarray(res.completion)
+    for i in range(min(args.batch, 8)):
+        text = tok.decode(comp[i])
+        r = verify(text, answers[i])
+        print(f"  [{i}] {prompts[i]!r} -> {text!r} "
+              f"(gold {answers[i]}, reward {r})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,158 @@
+"""The three lowered step functions (train / prefill / serve) and their
+abstract input specs — shared by the dry-run, the roofline harness and
+the real launchers.
+
+``input_specs`` returns ShapeDtypeStructs only (weak-type-correct,
+shardable, no device allocation): the FULL assigned configs are exercised
+exclusively through ``jit(...).lower(**specs).compile()``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.losses import GRPOConfig, grpo_token_loss, value_loss_mse
+from repro.models.registry import ModelBundle, build
+from repro.optim import AdamWConfig, adamw_init, adamw_update, \
+    clip_by_global_norm
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(bundle: ModelBundle, prompt_len: int,
+                    use_vaco: bool = True):
+    """RLVR policy update: forward -> GRPO(+VACO) token loss (+ value MSE)
+    -> global-norm clip -> AdamW.  This is the real learner step the
+    framework trains with, lowered at production shape."""
+    cfg = GRPOConfig(use_vaco=use_vaco, delta=0.05)
+    opt_cfg = AdamWConfig(lr=1e-5, weight_decay=0.0)
+
+    def loss_fn(params, batch):
+        out = bundle.forward(params, batch["tokens"], **{
+            k: v for k, v in batch.items()
+            if k in bundle.aux_input_shapes
+        })
+        logits = out.logits[:, prompt_len - 1 : -1]
+        targets = batch["tokens"][:, prompt_len:]
+        logits32 = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits32, axis=-1)
+        log_pi = jnp.take_along_axis(
+            logits32, targets[..., None], axis=-1)[..., 0] - lse
+        loss, aux = grpo_token_loss(
+            log_pi=log_pi, log_beta=batch["log_beta"],
+            advantages=batch["advantages"], token_mask=batch["mask"],
+            cfg=cfg,
+        )
+        if out.value is not None:
+            loss = loss + 0.5 * value_loss_mse(
+                out.value[:, prompt_len - 1 : -1],
+                batch["value_targets"], batch["mask"],
+            )
+        loss = loss + out.aux_loss
+        return loss, aux["tv"]
+
+    def train_step(params, opt_state, batch):
+        (loss, tv), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg)
+        return params, opt_state, {"loss": loss, "tv": tv,
+                                   "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(bundle: ModelBundle):
+    def prefill_step(params, tokens, aux):
+        # aux is a (possibly empty) dict pytree — positional because pjit
+        # rejects kwargs when in_shardings is given.
+        out = bundle.forward(params, tokens, return_cache=True, **aux)
+        return out.logits[:, -1], out.cache
+
+    return prefill_step
+
+
+def make_serve_step(bundle: ModelBundle):
+    def serve_step(params, token, cache):
+        out, cache = bundle.decode_step(params, token, cache)
+        return out.logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+
+def abstract_params(bundle: ModelBundle, dtype=PARAM_DTYPE):
+    return jax.eval_shape(
+        lambda: bundle.init(jax.random.PRNGKey(0), dtype=dtype)
+    )
+
+
+def abstract_opt_state(params_abs):
+    return jax.eval_shape(adamw_init, params_abs)
+
+
+def _aux_specs(bundle: ModelBundle, batch: int) -> Dict[str, Any]:
+    return {
+        name: jax.ShapeDtypeStruct((batch,) + shape, jnp.float32)
+        for name, shape in bundle.aux_input_shapes.items()
+    }
+
+
+def train_batch_specs(bundle: ModelBundle, shape: InputShape,
+                      prompt_len: int) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    comp = s - prompt_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "log_beta": jax.ShapeDtypeStruct((b, comp), jnp.float32),
+        "mask": jax.ShapeDtypeStruct((b, comp), jnp.float32),
+        "advantages": jax.ShapeDtypeStruct((b,), jnp.float32),
+        "value_targets": jax.ShapeDtypeStruct((b, comp), jnp.float32),
+    }
+    specs.update(_aux_specs(bundle, b))
+    return specs
+
+
+def prefill_specs(bundle: ModelBundle, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    cfg = bundle.cfg
+    s_text = s - cfg.vision_prefix_len  # VLM: patches occupy the prefix
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32)}
+    specs.update(_aux_specs(bundle, b))
+    return specs
+
+
+def abstract_cache(bundle: ModelBundle, shape: InputShape,
+                   dtype=PARAM_DTYPE):
+    b, s = shape.global_batch, shape.seq_len
+    cfg = bundle.cfg
+
+    def mk():
+        kwargs = {}
+        if cfg.encoder_layers > 0:
+            kwargs["encoder_out"] = jnp.zeros(
+                (b, cfg.encoder_seq_len, cfg.d_model), dtype)
+        return bundle.init_cache(None, b, s, dtype=dtype, **kwargs)
+
+    return jax.eval_shape(mk)
+
+
+def serve_specs(bundle: ModelBundle, shape: InputShape) -> Dict[str, Any]:
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "cache": abstract_cache(bundle, shape),
+    }

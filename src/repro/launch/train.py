@@ -1,0 +1,111 @@
+"""Training launcher.
+
+Two modes, matching the paper's two experimental regimes:
+
+  # classic RL (simulated-async MuJoCo-analog, §5.1)
+  PYTHONPATH=src python -m repro.launch.train rl \\
+      --env pendulum --algorithm vaco --buffer-capacity 4 --phases 30
+
+  # RLVR (forward-lag GRPO/VACO, §5.2) on a reduced assigned arch
+  PYTHONPATH=src python -m repro.launch.train rlvr \\
+      --arch qwen2.5-0.5b --algorithm grpo_vaco --n-minibatches 8 \\
+      --phases 20
+
+On a real TPU cluster the same entry point runs under
+``jax.distributed.initialize()`` with the production mesh from
+launch/mesh.py; on this CPU host it runs the reduced configs end-to-end.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="mode", required=True)
+
+    rl = sub.add_parser("rl", help="simulated-async classic RL (§5.1)")
+    rl.add_argument("--env", default="pendulum")
+    rl.add_argument("--algorithm", default="vaco",
+                    choices=["vaco", "ppo", "ppo_kl", "spo", "impala"])
+    rl.add_argument("--buffer-capacity", type=int, default=1)
+    rl.add_argument("--n-actors", type=int, default=32)
+    rl.add_argument("--rollout-steps", type=int, default=128)
+    rl.add_argument("--phases", type=int, default=30)
+    rl.add_argument("--seed", type=int, default=0)
+    rl.add_argument("--delta", type=float, default=0.2)
+    rl.add_argument("--checkpoint-dir", default=None)
+
+    rv = sub.add_parser("rlvr", help="forward-lag RLVR (§5.2)")
+    rv.add_argument("--arch", default="qwen2.5-0.5b")
+    rv.add_argument("--algorithm", default="grpo_vaco",
+                    choices=["grpo", "grpo_vaco"])
+    rv.add_argument("--n-minibatches", type=int, default=4)
+    rv.add_argument("--phases", type=int, default=10)
+    rv.add_argument("--level", type=int, default=0,
+                    help="math curriculum level")
+    rv.add_argument("--warmup-steps", type=int, default=300)
+    rv.add_argument("--seed", type=int, default=0)
+    rv.add_argument("--delta", type=float, default=0.05)
+    rv.add_argument("--checkpoint-dir", default=None)
+
+    args = ap.parse_args(argv)
+
+    if args.mode == "rl":
+        from repro.train.runner_rl import AsyncRLRunConfig, run_async_rl
+        from repro.train.trainer_rl import RLHyperparams
+
+        res = run_async_rl(AsyncRLRunConfig(
+            env_name=args.env, algorithm=args.algorithm,
+            buffer_capacity=args.buffer_capacity,
+            n_actors=args.n_actors, rollout_steps=args.rollout_steps,
+            total_phases=args.phases, seed=args.seed,
+            hp=RLHyperparams(delta=args.delta),
+        ))
+        print(json.dumps({
+            "returns": res.returns,
+            "final_tv": res.final_tv,
+        }, indent=1))
+        return 0
+
+    # rlvr
+    from repro.configs import reduced_config, get_config
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+    from repro.models.registry import build
+    from repro.train.trainer_rlvr import RLVRHyperparams, RLVRTrainer
+    from repro.checkpoint import save_checkpoint
+
+    tok = get_tokenizer()
+    cfg = reduced_config(args.arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    ds = MathTaskDataset(prompt_len=32, level=args.level)
+    hp = RLVRHyperparams(
+        algorithm=args.algorithm, n_minibatches=args.n_minibatches,
+        warmup_steps=args.warmup_steps, delta=args.delta,
+    )
+    trainer = RLVRTrainer(bundle, ds, hp, seed=args.seed)
+    wl = trainer.warmup()
+    print(f"[warmup] loss={wl:.4f} acc={trainer.evaluate(128):.3f}")
+    res = trainer.train(args.phases, eval_every=max(args.phases // 4, 1))
+    print(json.dumps({
+        "arch": cfg.name,
+        "algorithm": args.algorithm,
+        "n_minibatches": args.n_minibatches,
+        "eval_accuracy": res.eval_accuracy,
+        "final_tv": res.phase_logs[-1].tv if res.phase_logs else None,
+    }, indent=1))
+    if args.checkpoint_dir:
+        path = save_checkpoint(
+            args.checkpoint_dir, args.phases, trainer.state.params,
+            meta={"arch": cfg.name})
+        print(f"checkpoint: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+from repro.metrics.aggregate import (
+    iqm,
+    median,
+    mean,
+    optimality_gap,
+    aggregate_metrics,
+    stratified_bootstrap_ci,
+    minmax_normalize,
+)
+
+__all__ = [
+    "iqm",
+    "median",
+    "mean",
+    "optimality_gap",
+    "aggregate_metrics",
+    "stratified_bootstrap_ci",
+    "minmax_normalize",
+]

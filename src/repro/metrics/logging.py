@@ -1,0 +1,52 @@
+"""Minimal structured metric logging (CSV/JSONL writers for trainers).
+
+No tensorboard/wandb offline — trainers append JSONL rows; benchmarks
+read them back for curves.  Kept deliberately tiny and dependency-free.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+
+class MetricLogger:
+    def __init__(self, path: Optional[str] = None, echo: bool = False):
+        self.path = path
+        self.echo = echo
+        self._start = time.time()
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a")
+        else:
+            self._fh = None
+
+    def log(self, step: int, **metrics: Any) -> None:
+        row: Dict[str, Any] = {
+            "step": step,
+            "wall": round(time.time() - self._start, 3),
+        }
+        for k, v in metrics.items():
+            try:
+                row[k] = float(v)
+            except (TypeError, ValueError):
+                row[k] = v
+        if self._fh:
+            self._fh.write(json.dumps(row) + "\n")
+            self._fh.flush()
+        if self.echo:
+            pretty = " ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in row.items() if k not in ("wall",)
+            )
+            print(pretty, flush=True)
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+
+
+def read_jsonl(path: str):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]

@@ -1,0 +1,28 @@
+from repro.models.registry import ModelBundle, build
+from repro.models.transformer import (
+    ModelOutput,
+    init_params,
+    forward,
+    decode_step,
+    init_cache,
+)
+from repro.models.mlp_policy import (
+    mlp_policy_init,
+    policy_dist,
+    value_fn,
+    act,
+)
+
+__all__ = [
+    "ModelBundle",
+    "build",
+    "ModelOutput",
+    "init_params",
+    "forward",
+    "decode_step",
+    "init_cache",
+    "mlp_policy_init",
+    "policy_dist",
+    "value_fn",
+    "act",
+]

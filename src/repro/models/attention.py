@@ -1,0 +1,279 @@
+"""Grouped-query attention with RoPE, sliding windows, prefix-LM masks and
+KV-cache decode — the reference (pure-jnp/XLA) path.
+
+The Pallas flash kernel in ``repro.kernels`` implements the same math for
+TPU; ``impl="pallas_interpret"`` routes through it in interpreter mode for
+CPU validation.  Sliding windows are expressed as a *traced* per-layer
+scalar (``jnp.inf`` = global), so a scan over heterogeneous layers (e.g.
+gemma3's 5 local : 1 global) stays a single fused HLO loop.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_apply, dense_init
+
+NEG_INF = -1e30
+
+# KV-cache row-insert strategy: "onehot" (baseline) | "scatter" (optimized;
+# EXPERIMENTS.md §Perf hillclimb #3).  Env-switchable so the dry-run can
+# A/B the two lowerings.
+import os as _os
+
+CACHE_UPDATE_MODE = _os.environ.get("REPRO_CACHE_UPDATE", "onehot")
+
+
+def attn_init(
+    key,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+    dtype=jnp.float32,
+) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype,
+                         bias=qkv_bias),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype,
+                         bias=qkv_bias),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype,
+                         bias=qkv_bias),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def make_attention_mask(
+    q_positions: jax.Array,   # [B, Sq]
+    kv_positions: jax.Array,  # [B, Sk]
+    *,
+    window,                   # scalar (may be traced); jnp.inf = global
+    kv_valid: Optional[jax.Array] = None,  # [B, Sk] bool
+    prefix_len: int = 0,      # prefix-LM: keys with pos < prefix_len visible
+    causal: bool = True,
+) -> jax.Array:
+    """Boolean [B, 1, Sq, Sk] mask (True = attend)."""
+    q = q_positions[:, :, None].astype(jnp.int32)
+    k = kv_positions[:, None, :].astype(jnp.int32)
+    if causal:
+        mask = q >= k
+    else:
+        mask = jnp.ones_like(q >= k)
+    mask = jnp.logical_and(mask, (q - k).astype(jnp.float32) < window)
+    if prefix_len > 0:
+        mask = jnp.logical_or(mask, k < prefix_len)
+    if kv_valid is not None:
+        mask = jnp.logical_and(mask, kv_valid[:, None, :])
+    return mask[:, None, :, :]
+
+
+def _sdpa(
+    q: jax.Array,  # [B, Sq, H, Dh]
+    k: jax.Array,  # [B, Sk, KV, Dh]
+    v: jax.Array,  # [B, Sk, KV, Dh]
+    mask: jax.Array,  # [B, 1, Sq, Sk]
+) -> jax.Array:
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, kv, g, dh)
+    # [B, KV, G, Sq, Sk]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k,
+                        preferred_element_type=jnp.float32)
+    scores = jnp.where(mask[:, :, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h * dh)
+
+
+# Above this query length the XLA path switches to the q-chunked
+# memory-efficient attention (Rabe & Staats-style): full [Sq, Sk] score
+# materialization at 32k+ would dominate the memory roofline.  The Pallas
+# flash kernel replaces both paths on real TPU.
+CHUNKED_ATTN_THRESHOLD = 2048
+CHUNK_Q = 512
+
+
+def _sdpa_chunked(
+    q: jax.Array,            # [B, Sq, H, Dh]
+    k: jax.Array,            # [B, Sk, KV, Dh]
+    v: jax.Array,            # [B, Sk, KV, Dh]
+    q_positions: jax.Array,  # [B, Sq]
+    kv_positions: jax.Array,  # [B, Sk]
+    *,
+    window,
+    kv_valid,
+    prefix_len: int,
+    causal: bool = True,
+) -> jax.Array:
+    """Query-chunked attention: peak score memory O(CHUNK_Q * Sk).
+
+    Chunks are checkpointed so the backward pass recomputes scores per
+    chunk instead of storing them (the standard memory-efficient
+    attention trade: ~1 extra forward of compute for O(S^2) -> O(S)
+    activation memory).
+    """
+    b, sq, h, dh = q.shape
+    pad = (-sq) % CHUNK_Q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)))
+    nq = q.shape[1] // CHUNK_Q
+    # [nq, B, C, H, Dh] for lax.map over chunks.
+    qc = q.reshape(b, nq, CHUNK_Q, h, dh).transpose(1, 0, 2, 3, 4)
+    pc = q_positions.reshape(b, nq, CHUNK_Q).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one_chunk(args):
+        q_i, p_i = args  # [B, C, H, Dh], [B, C]
+        mask = make_attention_mask(
+            p_i, kv_positions, window=window, kv_valid=kv_valid,
+            prefix_len=prefix_len, causal=causal,
+        )
+        return _sdpa(q_i, k, v, mask)  # [B, C, H*Dh]
+
+    out = jax.lax.map(one_chunk, (qc, pc))       # [nq, B, C, H*Dh]
+    out = out.transpose(1, 0, 2, 3).reshape(b, nq * CHUNK_Q, h * dh)
+    return out[:, :sq]
+
+
+def attn_forward(
+    p: Dict,
+    x: jax.Array,              # [B, S, D]
+    positions: jax.Array,      # [B, S]
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window,                    # scalar, jnp.inf for global
+    kv_valid: Optional[jax.Array] = None,
+    prefix_len: int = 0,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train / prefill).
+
+    Returns (out [B,S,D], (k, v) [B,S,KV,Dh] post-RoPE for cache writes).
+    """
+    q = _split_heads(dense_apply(p["wq"], x), n_heads)
+    k = _split_heads(dense_apply(p["wk"], x), n_kv_heads)
+    v = _split_heads(dense_apply(p["wv"], x), n_kv_heads)
+    q = apply_rope(q, positions, rope_theta)
+    k = apply_rope(k, positions, rope_theta)
+    if x.shape[1] > CHUNKED_ATTN_THRESHOLD:
+        out = _sdpa_chunked(
+            q, k, v, positions, positions, window=window,
+            kv_valid=kv_valid, prefix_len=prefix_len,
+        )
+    else:
+        mask = make_attention_mask(
+            positions, positions, window=window, kv_valid=kv_valid,
+            prefix_len=prefix_len,
+        )
+        out = _sdpa(q, k, v, mask)
+    return dense_apply(p["wo"], out), (k, v)
+
+
+def attn_decode(
+    p: Dict,
+    x: jax.Array,              # [B, 1, D]
+    position: jax.Array,       # [B] current absolute position
+    cache_k: jax.Array,        # [B, Smax, KV, Dh]
+    cache_v: jax.Array,        # [B, Smax, KV, Dh]
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    rope_theta: float,
+    window,
+    prefix_len: int = 0,
+    window_slice: Optional[int] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Single-token decode against a (possibly seq-sharded) KV cache.
+
+    The caller owns the cache write; we return the new (k, v) row.  The
+    validity mask is positional: slots with index <= position are valid
+    (the cache is written densely in position order).
+
+    ``window_slice`` (static, §Perf hillclimb): for sliding-window layers
+    with a STATIC window (unrolled decode), attention reads only a
+    window-sized dynamic slice of the cache instead of all ``Smax`` rows —
+    the cache-read bytes drop by window/Smax (e.g. 32x for gemma3 local
+    layers at decode_32k).  Assumes the batch decodes in lockstep
+    (uniform ``position``), which holds for the serve engine.
+    """
+    b, smax = cache_k.shape[0], cache_k.shape[1]
+    q = _split_heads(dense_apply(p["wq"], x), n_heads)
+    k_new = _split_heads(dense_apply(p["wk"], x), n_kv_heads)
+    v_new = _split_heads(dense_apply(p["wv"], x), n_kv_heads)
+    q = apply_rope(q, position[:, None], rope_theta)
+    k_new = apply_rope(k_new, position[:, None], rope_theta)
+
+    # Insert the new row.  Two strategies (a §Perf knob, see
+    # EXPERIMENTS.md hillclimb #3):
+    #   onehot  — blend via a one-hot mask: reads AND rewrites the whole
+    #             cache every step (3x cache traffic) but places no
+    #             constraint on sharding.  The paper-faithful baseline
+    #             shipped with this.
+    #   scatter — jnp .at[].set row scatter: writes one row per stream;
+    #             cache traffic drops to ~1 read of k+v.  Lowers cleanly
+    #             under GSPMD for batch- and seq-sharded caches.
+    if CACHE_UPDATE_MODE == "scatter":
+        b_idx = jnp.arange(b)
+        cache_k = cache_k.at[b_idx, position].set(k_new[:, 0])
+        cache_v = cache_v.at[b_idx, position].set(v_new[:, 0])
+    else:
+        oh = jax.nn.one_hot(position, smax, dtype=cache_k.dtype)
+        oh = oh[:, :, None, None]
+        cache_k = cache_k * (1.0 - oh) + oh * k_new
+        cache_v = cache_v * (1.0 - oh) + oh * v_new
+
+    if window_slice is not None and window_slice < smax:
+        start = jnp.clip(
+            position[0].astype(jnp.int32) - window_slice + 1,
+            0, smax - window_slice,
+        )
+        k_read = jax.lax.dynamic_slice_in_dim(
+            cache_k, start, window_slice, axis=1)
+        v_read = jax.lax.dynamic_slice_in_dim(
+            cache_v, start, window_slice, axis=1)
+        kv_pos = start + jnp.arange(window_slice, dtype=jnp.int32)
+        kv_pos = jnp.broadcast_to(kv_pos, (b, window_slice))
+    else:
+        k_read, v_read = cache_k, cache_v
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(smax, dtype=jnp.int32), (b, smax))
+    mask = make_attention_mask(
+        position[:, None], kv_pos, window=window,
+        kv_valid=kv_pos <= position[:, None], prefix_len=prefix_len,
+    )
+    out = _sdpa(q, k_read, v_read, mask)
+    return dense_apply(p["wo"], out), (cache_k, cache_v)
+
+
+def cross_attn_forward(
+    p: Dict,
+    x: jax.Array,            # [B, Sq, D] decoder states
+    enc: jax.Array,          # [B, Se, D] encoder outputs
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+) -> jax.Array:
+    """Encoder-decoder cross attention (whisper). No RoPE, no mask."""
+    b, se, _ = enc.shape
+    q = _split_heads(dense_apply(p["wq"], x), n_heads)
+    k = _split_heads(dense_apply(p["wk"], enc), n_kv_heads)
+    v = _split_heads(dense_apply(p["wv"], enc), n_kv_heads)
+    mask = jnp.ones((b, 1, x.shape[1], se), bool)
+    out = _sdpa(q, k, v, mask)
+    return dense_apply(p["wo"], out)

@@ -1,0 +1,233 @@
+"""Whisper-style encoder-decoder backbone (audio frontend stubbed).
+
+Per the harness carve-out, the mel-spectrogram + conv feature extractor is
+NOT implemented: ``input_specs`` supplies precomputed frame embeddings
+``[B, S_enc, d_model]`` (post-conv, post-subsampling — whisper-large-v3's
+1500 frames). The transformer itself — encoder self-attention stack and
+decoder with causal self-attention + cross-attention + KV cache — is real
+and fully trainable, with sinusoidal encoder positions and learned decoder
+positions like Whisper (arXiv:2212.04356).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    dense_apply,
+    dense_init,
+    embedding_apply,
+    embedding_init,
+    layernorm_apply,
+    layernorm_init,
+    mlp_apply,
+    mlp_init,
+)
+from repro.models.transformer import ModelOutput, scan_layers
+
+
+def _enc_layer_init(key, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype),
+        "attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                               cfg.n_kv_heads, cfg.head_dim, dtype=dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "norm1": layernorm_init(cfg.d_model, dtype),
+        "self_attn": attn.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.n_kv_heads, cfg.head_dim,
+                                    dtype=dtype),
+        "norm2": layernorm_init(cfg.d_model, dtype),
+        "cross_attn": attn.attn_init(ks[1], cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.head_dim,
+                                     dtype=dtype),
+        "norm3": layernorm_init(cfg.d_model, dtype),
+        "mlp": mlp_init(ks[2], cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    k_emb, k_enc, k_dec, k_val = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.n_layers)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(
+            lambda k: _enc_layer_init(k, cfg, dtype))(enc_keys),
+        "dec_layers": jax.vmap(
+            lambda k: _dec_layer_init(k, cfg, dtype))(dec_keys),
+        "enc_final_norm": layernorm_init(cfg.d_model, dtype),
+        "dec_final_norm": layernorm_init(cfg.d_model, dtype),
+    }
+    if cfg.value_head:
+        p["value_head"] = dense_init(k_val, cfg.d_model, 1, dtype, bias=True)
+    return p
+
+
+def _sinusoids(length: int, channels: int) -> jax.Array:
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2))
+    scaled = jnp.arange(length)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+def encode(params: Dict, cfg: ModelConfig,
+           frames: jax.Array, unroll_layers: bool = False,
+           remat: bool = False) -> jax.Array:
+    """Encoder over stubbed frame embeddings [B, S_enc, D]."""
+    b, se, d = frames.shape
+    x = frames + _sinusoids(se, d).astype(frames.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+
+    def body(x, lp):
+        h = layernorm_apply(lp["norm1"], x)
+        x = x + _bidir_attn(lp["attn"], h, cfg)
+        h = layernorm_apply(lp["norm2"], x)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, None
+
+    x, _ = scan_layers(body, x, params["enc_layers"], unroll_layers,
+                       remat)
+    return layernorm_apply(params["enc_final_norm"], x)
+
+
+def _bidir_attn(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Bidirectional self-attention (encoder): cross-attn of x onto x."""
+    return attn.cross_attn_forward(
+        p, x, x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim,
+    )
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,          # [B, S_dec]
+    *,
+    frames: jax.Array,          # [B, S_enc, D] stubbed audio features
+    encoder_out: Optional[jax.Array] = None,  # reuse cached encoding
+    kv_valid: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    cache_len: Optional[int] = None,
+    unroll_layers: bool = False,
+    remat: bool = False,
+) -> ModelOutput:
+    enc = encoder_out if encoder_out is not None else encode(
+        params, cfg, frames, unroll_layers, remat)
+    b, s = tokens.shape
+    x = embedding_apply(params["embed"], tokens)
+    enc = enc.astype(x.dtype)  # keep the decoder residual carry uniform
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x, lp):
+        h = layernorm_apply(lp["norm1"], x)
+        out, (k, v) = attn.attn_forward(
+            lp["self_attn"], h, positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=jnp.inf, kv_valid=kv_valid,
+        )
+        x = x + out
+        h = layernorm_apply(lp["norm2"], x)
+        x = x + attn.cross_attn_forward(
+            lp["cross_attn"], h, enc,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+        )
+        h = layernorm_apply(lp["norm3"], x)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        ys = {}
+        if return_cache:
+            pad = cache_len if cache_len is not None else s
+            kc = jnp.zeros((b, pad) + k.shape[2:], k.dtype)
+            vc = jnp.zeros((b, pad) + v.shape[2:], v.dtype)
+            ys = {
+                "k": jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0)),
+            }
+        return x, ys
+
+    x, cache_ys = scan_layers(body, x, params["dec_layers"],
+                              unroll_layers, remat)
+    x = layernorm_apply(params["dec_final_norm"], x)
+    logits = x @ params["embed"]["table"].astype(x.dtype).T  # tied
+    value = None
+    if cfg.value_head:
+        value = dense_apply(params["value_head"], x)[..., 0]
+    cache = None
+    if return_cache:
+        cache = dict(cache_ys)
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
+        cache["enc"] = enc
+    return ModelOutput(logits=logits, value=value, cache=cache,
+                       aux_loss=jnp.zeros((), jnp.float32))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               encoder_out: jax.Array, dtype=jnp.float32) -> Dict:
+    L = cfg.n_layers
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "enc": encoder_out,
+    }
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,     # [B]
+    cache: Dict,
+    unroll_layers: bool = False,
+) -> Tuple[ModelOutput, Dict]:
+    x = embedding_apply(params["embed"], token[:, None])
+    pos = cache["pos"]
+    enc = cache["enc"].astype(x.dtype)
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = layernorm_apply(lp["norm1"], x)
+        out, (ck, cv) = attn.attn_decode(
+            lp["self_attn"], h, pos, ck, cv,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=jnp.inf,
+        )
+        x = x + out
+        h = layernorm_apply(lp["norm2"], x)
+        x = x + attn.cross_attn_forward(
+            lp["cross_attn"], h, enc,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim,
+        )
+        h = layernorm_apply(lp["norm3"], x)
+        x = x + mlp_apply(lp["mlp"], h, "gelu")
+        return x, {"k": ck, "v": cv}
+
+    x, new = scan_layers(body, x, (params["dec_layers"], cache["k"],
+                               cache["v"]), unroll_layers)
+    x = layernorm_apply(params["dec_final_norm"], x)
+    logits = x @ params["embed"]["table"].astype(x.dtype).T
+    value = None
+    if cfg.value_head:
+        value = dense_apply(params["value_head"], x)[..., 0]
+    out = ModelOutput(
+        logits=logits[:, 0], value=None if value is None else value[:, 0],
+        cache=None, aux_loss=jnp.zeros((), jnp.float32),
+    )
+    new_cache = dict(new, pos=pos + 1, enc=enc)
+    return out, new_cache

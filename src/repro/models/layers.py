@@ -1,0 +1,132 @@
+"""Shared neural building blocks (pure JAX, dict-pytree parameters).
+
+Conventions:
+* params are nested dicts of jnp arrays; init_* functions return them.
+* apply functions are pure: f(params, x, ...) -> y.
+* compute dtype follows the input x; params may be bf16 or fp32.
+* all matmul inits are truncated-normal with 1/sqrt(fan_in) scaling.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               bias: bool = False, scale: float = 1.0) -> Dict:
+    std = scale / (d_in ** 0.5)
+    w = std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (d_in, d_out), jnp.float32
+    )
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p: Dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32) -> Dict:
+    emb = jax.random.normal(key, (vocab, d), jnp.float32)
+    return {"table": (emb * (d ** -0.5)).astype(dtype)}
+
+
+def embedding_apply(p: Dict, ids: jax.Array) -> jax.Array:
+    return p["table"][ids]
+
+
+def embedding_attend(p: Dict, x: jax.Array) -> jax.Array:
+    """Tied-softmax readout: x @ table^T."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm_apply(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim // 2] inverse frequencies."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(
+    x: jax.Array,                 # [..., S, H, Dh]
+    positions: jax.Array,         # [..., S] absolute positions
+    theta: float = 10000.0,
+) -> jax.Array:
+    dh = x.shape[-1]
+    inv_freq = rope_frequencies(dh, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [...,S,Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward blocks
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d: int, d_ff: int, activation: str,
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 3)
+    if activation == "swiglu":
+        return {
+            "gate": dense_init(ks[0], d, d_ff, dtype),
+            "up": dense_init(ks[1], d, d_ff, dtype),
+            "down": dense_init(ks[2], d_ff, d, dtype),
+        }
+    return {
+        "up": dense_init(ks[0], d, d_ff, dtype),
+        "down": dense_init(ks[1], d_ff, d, dtype),
+    }
+
+
+def mlp_apply(p: Dict, x: jax.Array, activation: str) -> jax.Array:
+    if activation == "swiglu":
+        h = jax.nn.silu(dense_apply(p["gate"], x)) * dense_apply(p["up"], x)
+    else:
+        h = jax.nn.gelu(dense_apply(p["up"], x))
+    return dense_apply(p["down"], h)
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-style logit soft-capping: cap * tanh(logits / cap)."""
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,59 @@
+"""Gaussian MLP actor-critic for the classic-RL (§5.1) experiments.
+
+CleanRL's PPO architecture: two separate 2x64-tanh MLPs (actor mean +
+critic), state-independent log-std.  Orthogonal-ish init via scaled
+truncated normals (the exact CleanRL orthogonal init is immaterial to the
+lag study; scale factors match: 0.01 on the policy head, 1.0 on value).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributions import DiagGaussian
+from repro.models.layers import dense_apply, dense_init
+
+
+def mlp_policy_init(key, obs_dim: int, act_dim: int,
+                    hidden: int = 64) -> Dict:
+    ks = jax.random.split(key, 7)
+    return {
+        "actor": {
+            "l1": dense_init(ks[0], obs_dim, hidden, bias=True),
+            "l2": dense_init(ks[1], hidden, hidden, bias=True),
+            "head": dense_init(ks[2], hidden, act_dim, bias=True,
+                               scale=0.01),
+        },
+        "log_std": jnp.zeros((act_dim,), jnp.float32),
+        "critic": {
+            "l1": dense_init(ks[3], obs_dim, hidden, bias=True),
+            "l2": dense_init(ks[4], hidden, hidden, bias=True),
+            "head": dense_init(ks[5], hidden, 1, bias=True),
+        },
+    }
+
+
+def _mlp(p: Dict, x: jax.Array) -> jax.Array:
+    x = jnp.tanh(dense_apply(p["l1"], x))
+    x = jnp.tanh(dense_apply(p["l2"], x))
+    return dense_apply(p["head"], x)
+
+
+def policy_dist(params: Dict, obs: jax.Array) -> DiagGaussian:
+    mean = _mlp(params["actor"], obs)
+    log_std = jnp.broadcast_to(params["log_std"], mean.shape)
+    return DiagGaussian(mean=mean, log_std=log_std)
+
+
+def value_fn(params: Dict, obs: jax.Array) -> jax.Array:
+    return _mlp(params["critic"], obs)[..., 0]
+
+
+def act(params: Dict, obs: jax.Array, key: jax.Array
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Sample an action and its log-prob."""
+    dist = policy_dist(params, obs)
+    a = dist.sample(key)
+    return a, dist.log_prob(a)

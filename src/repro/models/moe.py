@@ -1,0 +1,248 @@
+"""Mixture-of-Experts block: top-k router + capacity-factor dispatch.
+
+Dispatch/combine are the Shazeer einsum formulation so that sharding the
+expert axis over the mesh's ``model`` dimension yields the canonical
+expert-parallel all-to-all pattern under GSPMD (kimi-k2's 384-expert
+top-8 and llama4-scout's 16-expert top-1 both route through here).
+
+The router aux (load-balance) loss follows Switch Transformer:
+    aux = E * sum_e f_e * p_e
+with f_e the fraction of tokens dispatched to expert e and p_e the mean
+router probability of e.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import dense_apply, dense_init, mlp_apply, mlp_init
+
+# §Perf hillclimb #2: when enabled (REPRO_MOE_HINTS=1), pin the dispatch
+# boundary tensors with explicit sharding constraints — groups on 'data',
+# experts on 'model' — so GSPMD lowers the exchange as the canonical
+# expert-parallel all-to-all instead of replicating the dispatch one-hots
+# over the model axis.  No-op outside a ('data','model') mesh context.
+import os as _os
+
+MOE_SHARDING_HINTS = _os.environ.get("REPRO_MOE_HINTS", "0") == "1"
+
+
+def _hint(x: jax.Array, spec_dims) -> jax.Array:
+    if not MOE_SHARDING_HINTS:
+        return x
+    try:
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P(*spec_dims))
+    except (ValueError, RuntimeError, NameError):
+        return x  # no mesh context / axis names absent
+
+
+# --- sharded-backward einsums (hillclimb #2, iter 4) -----------------------
+#
+# GSPMD does not propagate the forward hints to einsum COTANGENTS: the
+# backward of combine (`gsec,egcd->gsd`) otherwise all-gathers a full
+# [E,G,C,D] fp32 cotangent (17 GiB/layer for kimi-k2).  These custom_vjp
+# wrappers pin the expert axis of both backward products to 'model'.
+#
+# NOTE: d(dispatch)/d(combine-onehots) are returned as REAL cotangents
+# only where the caller needs them; `moe_apply` stop-gradients the
+# routing one-hots, so `_dispatch_einsum` returns a zero cotangent for
+# `dispatch` instead of materializing a [G,Sg,E,C] product.
+
+
+@jax.custom_vjp
+def _dispatch_einsum(dispatch, xg):
+    return jnp.einsum("gsec,gsd->egcd", dispatch, xg)
+
+
+def _dispatch_fwd(dispatch, xg):
+    return _dispatch_einsum(dispatch, xg), (dispatch,)
+
+
+def _dispatch_bwd(res, g):
+    (dispatch,) = res
+    g = _hint(g, ("model", "data", None, None))
+    d_xg = jnp.einsum("gsec,egcd->gsd", dispatch, g)
+    d_xg = _hint(d_xg, ("data", None, None))
+    return jnp.zeros_like(dispatch), d_xg
+
+
+_dispatch_einsum.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def _combine_einsum(combine, out_buf):
+    return jnp.einsum("gsec,egcd->gsd", combine, out_buf)
+
+
+def _combine_fwd(combine, out_buf):
+    return _combine_einsum(combine, out_buf), (combine, out_buf)
+
+
+def _combine_bwd(res, g):
+    combine, out_buf = res
+    g = _hint(g, ("data", None, None))
+    # d_combine keeps its expert axis on 'model': it is consumed by the
+    # gates contraction (sum over e,c), which reduces locally per expert
+    # shard + a small [G,S,k] all-reduce — never materializing a
+    # replicated [G,Sg,E,C] (= the 17 GiB/layer gather on kimi-k2).
+    d_combine = jnp.einsum("gsd,egcd->gsec", g, out_buf)
+    d_combine = _hint(d_combine, ("data", None, "model", None))
+    d_out = jnp.einsum("gsec,gsd->egcd", combine, g)
+    d_out = _hint(d_out, ("model", "data", None, None))
+    return d_combine, d_out
+
+
+_combine_einsum.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, activation: str,
+             dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 4)
+    e, dff = cfg.n_experts, cfg.d_ff_expert
+
+    def expert_bank(k, d_in, d_out):
+        w = (d_in ** -0.5) * jax.random.truncated_normal(
+            k, -2.0, 2.0, (e, d_in, d_out), jnp.float32
+        )
+        return w.astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d_model, e, dtype),
+        "gate_w": expert_bank(ks[1], d_model, dff),    # [E, D, F]
+        "up_w": expert_bank(ks[2], d_model, dff),      # [E, D, F]
+        "down_w": expert_bank(ks[3], dff, d_model),    # [E, F, D]
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = mlp_init(
+            jax.random.fold_in(key, 7), d_model,
+            cfg.n_shared_experts * cfg.d_ff_expert, activation, dtype,
+        )
+    return p
+
+
+def _topk_routing(
+    logits: jax.Array, top_k: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gate_weights [N, k], expert_ids [N, k], probs [N, E])."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def moe_apply(
+    p: Dict,
+    x: jax.Array,          # [B, S, D]
+    cfg: MoEConfig,
+    activation: str,
+    group_size: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
+    """Grouped capacity dispatch (mesh-TF / GShard formulation).
+
+    Tokens are split into groups of `group_size`; each group routes into a
+    per-group expert capacity C = ceil(cf * group_size * k / E).  The
+    dispatch one-hot is then [G, S_g, E, C] with total size
+    N * S_g * k * cf — *independent of the expert count*, which is what
+    keeps kimi-k2's 384-expert train_4k dispatch (~1e10 elements global,
+    sharded over (data x model)) within per-device budgets.  Groups shard
+    over the data axes, experts over the model axis: GSPMD lowers the
+    buffer exchange to the canonical expert-parallel all-to-all pair.
+
+    Returns (output [B,S,D], router aux loss scalar).
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    sg = min(group_size, n)
+    pad = (-n) % sg
+    xf = x.reshape(n, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    g = (n + pad) // sg
+    xg = xf.reshape(g, sg, d)                                 # [G, Sg, D]
+    cap = max(1, int(cfg.capacity_factor * sg * k / e))
+
+    logits = dense_apply(p["router"], xg)                     # [G, Sg, E]
+    gates, ids, probs = _topk_routing(logits, k)              # [G,Sg,k], ...
+
+    # Per-group position of each (token, choice) in its expert's buffer.
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.int32)          # [G, Sg, k, E]
+    flat = onehot.reshape(g, sg * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat           # [G, Sg*k, E]
+    pos = jnp.sum(flat * pos_in_expert, axis=-1).reshape(g, sg, k)
+    keep = pos < cap
+
+    cap_onehot = jax.nn.one_hot(
+        jnp.where(keep, pos, cap), cap + 1, dtype=x.dtype
+    )[..., :cap]                                              # [G, Sg, k, C]
+    # The routing one-hots are piecewise-constant: stop_gradient keeps the
+    # backward pass from materializing (and resharding) a phantom
+    # [G,Sg,E,C] cotangent — gradients flow to the router only through
+    # `gates` in the combine weights (§Perf hillclimb #2, iter 3).
+    onehot_f = jax.lax.stop_gradient(onehot.astype(x.dtype))
+    cap_onehot = jax.lax.stop_gradient(cap_onehot)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot_f, cap_onehot)
+    combine = jnp.einsum(
+        "gske,gskc,gsk->gsec", onehot_f, cap_onehot, gates.astype(x.dtype)
+    )
+
+    dispatch = _hint(dispatch, ("data", None, None, None))
+    combine = _hint(combine, ("data", None, None, None))
+
+    # Expert buffers [E, G, C, D] — the all-to-all boundary.
+    buf = _dispatch_einsum(dispatch, xg)
+    buf = _hint(buf, ("model", "data", None, None))
+    h_gate = jnp.einsum("egcd,edf->egcf", buf,
+                        p["gate_w"].astype(x.dtype))
+    h_up = jnp.einsum("egcd,edf->egcf", buf, p["up_w"].astype(x.dtype))
+    h = jax.nn.silu(h_gate) * h_up
+    out_buf = jnp.einsum("egcf,efd->egcd", h,
+                         p["down_w"].astype(x.dtype))
+    out_buf = _hint(out_buf, ("model", "data", None, None))
+    yg = _combine_einsum(combine, out_buf)
+    yg = _hint(yg, ("data", None, None))
+
+    yf = yg.reshape(g * sg, d)[:n]
+    if "shared" in p:
+        yf = yf + mlp_apply(p["shared"], xf[:n], activation)
+
+    # Switch-style load-balance aux (over all tokens incl. groups).
+    frac_dispatched = jnp.mean(
+        jnp.sum(onehot.astype(jnp.float32), axis=2), axis=(0, 1)
+    )                                                         # [E]
+    mean_prob = jnp.mean(probs, axis=(0, 1))                  # [E]
+    aux = cfg.router_aux_coef * e * jnp.sum(frac_dispatched * mean_prob)
+
+    return yf.reshape(b, s, d), aux
+
+
+def moe_apply_dense_fallback(
+    p: Dict, x: jax.Array, cfg: MoEConfig, activation: str
+) -> Tuple[jax.Array, jax.Array]:
+    """Decode-friendly path: compute all experts densely, weight by gates.
+
+    For single-token decode (S == 1) the capacity machinery degenerates;
+    weighting a dense [E] bank by the router is cheaper in HLO and shards
+    identically over the expert axis.
+    """
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = dense_apply(p["router"], xf)
+    gates, ids, probs = _topk_routing(logits, cfg.top_k)
+    w = jnp.zeros_like(probs).at[
+        jnp.arange(xf.shape[0])[:, None], ids
+    ].set(gates)                                               # [N, E]
+    h_gate = jnp.einsum("nd,edf->nef", xf, p["gate_w"].astype(x.dtype))
+    h_up = jnp.einsum("nd,edf->nef", xf, p["up_w"].astype(x.dtype))
+    h = jax.nn.silu(h_gate) * h_up
+    y = jnp.einsum("nef,efd,ne->nd", h, p["down_w"].astype(x.dtype),
+                   w.astype(x.dtype))
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xf, activation)
+    aux = jnp.zeros((), jnp.float32)
+    return y.reshape(b, s, d), aux

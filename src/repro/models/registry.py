@@ -1,0 +1,98 @@
+"""Model registry: one uniform interface over the backbone families.
+
+``build(cfg)`` returns a ``ModelBundle`` of pure functions so trainers,
+the serve engine and the dry-run never special-case architecture types:
+
+    bundle.init(key, dtype)                        -> params
+    bundle.forward(params, tokens, **aux)          -> ModelOutput
+    bundle.decode_step(params, token, cache)       -> (ModelOutput, cache)
+    bundle.init_cache(params, batch, max_len, ...) -> cache
+    bundle.aux_inputs(batch, dtype)                -> dict of stub-frontend
+                                                      inputs (VLM patches /
+                                                      audio frames), or {}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as tf_mod
+from repro.models.transformer import ModelOutput, vision_stub_dim
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    decode_step: Callable
+    init_cache: Callable
+    aux_input_shapes: Dict[str, tuple]  # name -> shape suffix (per-batch)
+
+
+def build(cfg: ModelConfig, unroll_layers: bool = False,
+          remat: bool = False) -> ModelBundle:
+    if cfg.encoder_layers > 0:
+        return _build_encdec(cfg, unroll_layers, remat)
+    return _build_decoder_only(cfg, unroll_layers, remat)
+
+
+def _build_decoder_only(cfg: ModelConfig,
+                        unroll_layers: bool = False,
+                        remat: bool = False) -> ModelBundle:
+    aux_shapes: Dict[str, tuple] = {}
+    if cfg.vision_prefix_len > 0:
+        aux_shapes["prefix_embeds"] = (
+            cfg.vision_prefix_len, vision_stub_dim(cfg)
+        )
+
+    def init(key, dtype=jnp.float32):
+        return tf_mod.init_params(key, cfg, dtype)
+
+    def forward(params, tokens, **aux):
+        return tf_mod.forward(params, cfg, tokens,
+                              unroll_layers=unroll_layers, remat=remat,
+                              **aux)
+
+    def decode_step(params, token, cache):
+        return tf_mod.decode_step(params, cfg, token, cache,
+                                  unroll_layers=unroll_layers)
+
+    def init_cache(params, batch, max_len, dtype=jnp.float32, **aux):
+        return tf_mod.init_cache(cfg, batch, max_len, dtype)
+
+    return ModelBundle(cfg, init, forward, decode_step, init_cache,
+                       aux_shapes)
+
+
+def _build_encdec(cfg: ModelConfig,
+                  unroll_layers: bool = False,
+                  remat: bool = False) -> ModelBundle:
+    aux_shapes = {"frames": (cfg.encoder_seq_len, cfg.d_model)}
+
+    def init(key, dtype=jnp.float32):
+        return encdec_mod.init_params(key, cfg, dtype)
+
+    def forward(params, tokens, **aux):
+        return encdec_mod.forward(params, cfg, tokens,
+                                  unroll_layers=unroll_layers, remat=remat,
+                                  **aux)
+
+    def decode_step(params, token, cache):
+        return encdec_mod.decode_step(params, cfg, token, cache,
+                                      unroll_layers=unroll_layers)
+
+    def init_cache(params, batch, max_len, dtype=jnp.float32, *,
+                   encoder_out=None, frames=None):
+        if encoder_out is None:
+            assert frames is not None, "whisper cache needs encoder output"
+            encoder_out = encdec_mod.encode(params, cfg, frames)
+        return encdec_mod.init_cache(cfg, batch, max_len, encoder_out,
+                                     dtype)
+
+    return ModelBundle(cfg, init, forward, decode_step, init_cache,
+                       aux_shapes)

@@ -1,0 +1,169 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): data-dependent decay linear
+attention (time-mix) + squared-ReLU channel-mix.
+
+Recurrence per head (head dim K = V = 64):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (w_t in (0,1), learned
+    y_t = (S_{t-1} + diag(u) k_t v_t^T)^T r_t     data-dependent decay)
+
+State is [B, H, K, V] — O(1) per token in decode, making rwkv6 the
+canonical long_500k architecture.  Training uses a chunked parallel form
+(see repro.kernels.wkv6) or this scan reference.
+
+Simplifications vs. the released Finch (documented in DESIGN.md §8): the
+low-rank "token-shift LoRA" mixers are collapsed to plain learned
+interpolation vectors, and the decay LoRA keeps a single hidden layer.
+The recurrence itself — the architectural contribution — is exact.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_apply, dense_init
+
+
+HEAD_DIM = 64
+
+
+def rwkv6_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Dict:
+    n_heads = d_model // HEAD_DIM
+    ks = jax.random.split(key, 12)
+    decay_hidden = max(32, d_model // 32)
+    return {
+        # time-mix interpolation vectors (token shift).
+        "mu_r": 0.5 * jnp.ones((d_model,), dtype),
+        "mu_k": 0.5 * jnp.ones((d_model,), dtype),
+        "mu_v": 0.5 * jnp.ones((d_model,), dtype),
+        "mu_w": 0.5 * jnp.ones((d_model,), dtype),
+        "mu_g": 0.5 * jnp.ones((d_model,), dtype),
+        "w_r": dense_init(ks[0], d_model, d_model, dtype),
+        "w_k": dense_init(ks[1], d_model, d_model, dtype),
+        "w_v": dense_init(ks[2], d_model, d_model, dtype),
+        "w_g": dense_init(ks[3], d_model, d_model, dtype),
+        # data-dependent decay: d -> hidden -> d (low-rank MLP), plus base.
+        "decay_a": dense_init(ks[4], d_model, decay_hidden, dtype),
+        "decay_b": dense_init(ks[5], decay_hidden, d_model, dtype),
+        "decay_base": jnp.linspace(-6.0, -1.0, d_model).astype(jnp.float32),
+        "bonus_u": 0.1 * jax.random.normal(
+            ks[6], (n_heads, HEAD_DIM), jnp.float32
+        ).astype(dtype),
+        "w_o": dense_init(ks[7], d_model, d_model, dtype),
+        "ln_x_scale": jnp.ones((d_model,), dtype),
+        # channel-mix.
+        "mu_ck": 0.5 * jnp.ones((d_model,), dtype),
+        "w_ck": dense_init(ks[8], d_model, d_ff, dtype),
+        "w_cv": dense_init(ks[9], d_ff, d_model, dtype),
+        "w_cr": dense_init(ks[10], d_model, d_model, dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """x_{t-1} stream; `prev` is the last token of the previous segment."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x: jax.Array, x_prev: jax.Array, mu: jax.Array) -> jax.Array:
+    return x + (x_prev - x) * mu.astype(x.dtype)[None, None, :]
+
+
+def wkv6_scan(
+    r: jax.Array,   # [B, S, H, K]
+    k: jax.Array,   # [B, S, H, K]
+    v: jax.Array,   # [B, S, H, V]
+    w: jax.Array,   # [B, S, H, K] decay in (0, 1)
+    u: jax.Array,   # [H, K] bonus
+    state: Optional[jax.Array] = None,  # [B, H, K, V]
+) -> Tuple[jax.Array, jax.Array]:
+    """Reference WKV6 recurrence. Returns (y [B,S,H,V], final_state)."""
+    bsz, s, h, kd = r.shape
+    vd = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((bsz, h, kd, vd), jnp.float32)
+
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = [a.astype(jnp.float32) for a in xs]  # [B,H,*]
+        kv = k_t[..., :, None] * v_t[..., None, :]                # [B,H,K,V]
+        y = jnp.einsum(
+            "bhkv,bhk->bhv", S + u.astype(jnp.float32)[None, :, :, None] * kv,
+            r_t,
+        )
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), final
+
+
+class RWKVState(Tuple):
+    pass
+
+
+def rwkv6_time_mix(
+    p: Dict,
+    x: jax.Array,   # [B, S, D]
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Time-mix sub-block. state = (wkv_state [B,H,K,V], shift [B,1,D])."""
+    d = x.shape[-1]
+    h = d // HEAD_DIM
+    wkv_state = state[0] if state is not None else None
+    shift = state[1] if state is not None else None
+    xp = _token_shift(x, shift)
+
+    r = dense_apply(p["w_r"], _mix(x, xp, p["mu_r"]))
+    k = dense_apply(p["w_k"], _mix(x, xp, p["mu_k"]))
+    v = dense_apply(p["w_v"], _mix(x, xp, p["mu_v"]))
+    g = jax.nn.silu(dense_apply(p["w_g"], _mix(x, xp, p["mu_g"])))
+
+    wx = _mix(x, xp, p["mu_w"])
+    decay_raw = p["decay_base"].astype(jnp.float32)[None, None, :] + (
+        dense_apply(p["decay_b"], jnp.tanh(dense_apply(p["decay_a"], wx)))
+    ).astype(jnp.float32)
+    # w_t = exp(-exp(decay_raw)) in (0,1): the Finch parameterization.
+    w = jnp.exp(-jnp.exp(decay_raw)).astype(x.dtype)
+
+    def heads(t):
+        return t.reshape(t.shape[0], t.shape[1], h, HEAD_DIM)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, new_state = kops.wkv6(
+            heads(r), heads(k), heads(v), heads(w),
+            p["bonus_u"].astype(x.dtype), wkv_state,
+        )
+    else:
+        y, new_state = wkv6_scan(
+            heads(r), heads(k), heads(v), heads(w),
+            p["bonus_u"].astype(x.dtype), wkv_state,
+        )
+    y = y.reshape(x.shape[0], x.shape[1], d)
+    # group-norm-lite over heads (Finch uses GroupNorm(h)).
+    y32 = y.astype(jnp.float32).reshape(*y.shape[:2], h, HEAD_DIM)
+    y32 = y32 * jax.lax.rsqrt(
+        jnp.mean(jnp.square(y32), axis=-1, keepdims=True) + 1e-5
+    )
+    y = (y32.reshape(*y.shape) * p["ln_x_scale"].astype(jnp.float32)).astype(
+        x.dtype
+    )
+    out = dense_apply(p["w_o"], y * g)
+    return out, (new_state, x[:, -1:])
+
+
+def rwkv6_channel_mix(
+    p: Dict,
+    x: jax.Array,
+    shift: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Squared-ReLU channel mix. Returns (out, new_shift)."""
+    xp = _token_shift(x, shift)
+    k = dense_apply(p["w_ck"], _mix(x, xp, p["mu_ck"]))
+    kv = dense_apply(p["w_cv"], jnp.square(jax.nn.relu(k)))
+    rgate = jax.nn.sigmoid(dense_apply(p["w_cr"], xp))
+    return rgate * kv, x[:, -1:]

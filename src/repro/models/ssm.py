@@ -1,0 +1,128 @@
+"""Mamba-style selective SSM block (hymba's SSM heads).
+
+Implements the S6 recurrence with input-dependent (Δ, B, C):
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + Δ_t ⊙ (B_t ⊗ x_t)
+    y_t = C_t · h_t + D ⊙ x_t
+
+State is [inner, state_dim] per channel (diagonal A), which is hymba's
+``ssm_state=16``.  Training runs a jax.lax.scan over time (the Pallas
+chunked kernel in repro.kernels accelerates the same recurrence);
+decode carries the [B, inner, N] state explicitly — O(1) per token, the
+reason the hybrid archs serve long_500k.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import dense_apply, dense_init
+
+
+def ssm_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> Dict:
+    inner = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    # A: negative-real diagonal init (S4D-real): -(1..N) per channel.
+    a_init = -jnp.tile(
+        jnp.arange(1, cfg.state_dim + 1, dtype=jnp.float32)[None, :],
+        (inner, 1),
+    )
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * inner, dtype),
+        "conv_w": (
+            0.1 * jax.random.normal(ks[1], (cfg.conv_width, inner),
+                                    jnp.float32)
+        ).astype(dtype),
+        "conv_b": jnp.zeros((inner,), dtype),
+        "x_proj": dense_init(ks[2], inner, dt_rank + 2 * cfg.state_dim,
+                             dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, inner, dtype, bias=True),
+        "a_log": jnp.log(-a_init).astype(jnp.float32),  # A = -exp(a_log)
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], inner, d_model, dtype),
+    }
+
+
+def _ssm_scan(
+    u: jax.Array,       # [B, S, I] post-conv activations
+    dt: jax.Array,      # [B, S, I]
+    b_t: jax.Array,     # [B, S, N]
+    c_t: jax.Array,     # [B, S, N]
+    a: jax.Array,       # [I, N] (negative)
+    init_state: Optional[jax.Array],  # [B, I, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential selective scan. Returns (y [B,S,I], final_state)."""
+    bsz, s, inner = u.shape
+    n = a.shape[1]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, inner, n), jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, bb, cc = xs  # [B,I], [B,I], [B,N], [B,N]
+        decay = jnp.exp(dt_t[..., None] * a[None])            # [B,I,N]
+        drive = dt_t[..., None] * u_t[..., None] * bb[:, None, :]
+        h = decay * h + drive
+        y = jnp.einsum("bin,bn->bi", h, cc)
+        return h, y
+
+    xs = (
+        u.transpose(1, 0, 2).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        b_t.transpose(1, 0, 2).astype(jnp.float32),
+        c_t.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    final, ys = jax.lax.scan(step, init_state, xs)
+    return ys.transpose(1, 0, 2).astype(u.dtype), final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d. state = last (width-1) inputs [B,W-1,I]."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return out + b[None, None, :], new_state
+
+
+def ssm_forward(
+    p: Dict,
+    x: jax.Array,        # [B, S, D]
+    cfg: SSMConfig,
+    state: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence (or incremental, with `state`) selective-SSM block.
+
+    state = (ssm_state [B,I,N], conv_state [B,W-1,I]).
+    """
+    dt_rank = p["dt_proj"]["w"].shape[0]
+    n = p["a_log"].shape[1]
+
+    xz = dense_apply(p["in_proj"], x)
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state[1] if state is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"].astype(x.dtype),
+                               p["conv_b"].astype(x.dtype), conv_state)
+    u = jax.nn.silu(u)
+
+    proj = dense_apply(p["x_proj"], u)
+    dt_lowrank = proj[..., :dt_rank]
+    b_t = proj[..., dt_rank : dt_rank + n]
+    c_t = proj[..., dt_rank + n :]
+    dt = jax.nn.softplus(dense_apply(p["dt_proj"], dt_lowrank))
+
+    a = -jnp.exp(p["a_log"])
+    ssm_state = state[0] if state is not None else None
+    y, new_state = _ssm_scan(u, dt, b_t, c_t, a, ssm_state)
+    y = y + u * p["d_skip"].astype(x.dtype)[None, None, :]
+    y = y * jax.nn.silu(z)
+    return dense_apply(p["out_proj"], y), (new_state, new_conv)

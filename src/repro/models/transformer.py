@@ -1,0 +1,422 @@
+"""Decoder-only policy backbone: dense / MoE / hybrid / VLM / attn-free.
+
+One assembly covers eight of the ten assigned architectures (whisper's
+encoder-decoder lives in ``repro.models.encdec``; the Gaussian MLP policy
+for classic RL in ``repro.models.mlp_policy``).
+
+Design points:
+
+* **scan over layers** — layer parameters are stacked with a leading
+  ``[L]`` axis and the block is a single ``jax.lax.scan`` body, keeping
+  HLO size O(1) in depth (48-61-layer archs compile quickly and the
+  dry-run stays tractable).
+* **heterogeneous layers without unrolling** — per-layer differences
+  (gemma3's 5 local : 1 global window pattern, hymba's 3 global layers)
+  are expressed as a traced ``[L]`` window array (jnp.inf = global), so
+  the mask math is data-dependent and the scan body stays uniform.
+* **KV cache as scan ys/xs** — caches are ``[L, ...]`` stacked pytrees
+  threaded through the same scan.
+* **value head** — per-token critic for VACO/PPO RLVR (Alg. 1's V_phi).
+
+The forward returns per-token logits; per-token log-probs for the RL
+losses are computed by ``repro.kernels.ops.logprobs_from_logits`` (fused
+Pallas path or jnp reference).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense_apply,
+    dense_init,
+    embedding_apply,
+    embedding_attend,
+    embedding_init,
+    mlp_apply,
+    mlp_init,
+    rmsnorm_apply,
+    rmsnorm_init,
+    softcap,
+)
+
+
+class ModelOutput(NamedTuple):
+    logits: jax.Array            # [B, S, V]
+    value: Optional[jax.Array]   # [B, S] or None
+    cache: Any                   # updated cache pytree (or None)
+    aux_loss: jax.Array          # router load-balance etc.
+
+
+def scan_layers(body, carry, xs, unroll: bool = False,
+                remat: bool = False):
+    """jax.lax.scan over stacked layers, or a Python unroll.
+
+    ``remat=True`` wraps the body in jax.checkpoint (per-layer activation
+    rematerialization) — the standard training memory policy: backward
+    recomputes each layer instead of storing its internals, bounding
+    activation memory to the inter-layer residual stream.
+
+    The unrolled form exists for the dry-run's cost extrapolation: XLA's
+    cost_analysis counts a while-loop body once regardless of trip count,
+    so exact per-layer FLOP/byte/collective numbers come from compiling
+    shallow *unrolled* variants (launch/dryrun.py).
+    """
+    if remat:
+        body = jax.checkpoint(body)
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys_all = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys_all.append(y)
+    if not ys_all or not jax.tree.leaves(ys_all[0]):
+        return carry, ys_all[0] if ys_all else None
+    ys = jax.tree.map(lambda *zs: jnp.stack(zs), *ys_all)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> Dict:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {
+        "norm1": rmsnorm_init(cfg.d_model, dtype),
+        "norm2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.attn_free:
+        p["rwkv"] = rwkv_mod.rwkv6_init(ks[0], cfg.d_model, cfg.d_ff, dtype)
+        return p
+    p["attn"] = attn.attn_init(
+        ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        qkv_bias=cfg.qkv_bias, dtype=dtype,
+    )
+    if cfg.hybrid_attn_ssm:
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg.d_model, cfg.ssm, dtype)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_init(
+            ks[2], cfg.d_model, cfg.moe, cfg.activation, dtype
+        )
+    else:
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.activation,
+                            dtype)
+    return p
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict:
+    k_emb, k_layers, k_head, k_val, k_vis = jax.random.split(key, 5)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys)
+    p: Dict[str, Any] = {
+        "embed": embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": layers,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.value_head:
+        p["value_head"] = dense_init(k_val, cfg.d_model, 1, dtype, bias=True)
+    if cfg.vision_prefix_len > 0:
+        # Projector from the (stubbed) vision tower embedding dim.
+        p["vision_proj"] = dense_init(k_vis, vision_stub_dim(cfg),
+                                      cfg.d_model, dtype)
+    return p
+
+
+def vision_stub_dim(cfg: ModelConfig) -> int:
+    """Embedding dim of the stubbed modality frontend (SigLIP-so400m)."""
+    return 1152
+
+
+def layer_windows(cfg: ModelConfig, decode_cache_len: Optional[int] = None
+                  ) -> jax.Array:
+    """[L] float32 window sizes; jnp.inf marks global layers."""
+    ws = []
+    for l in range(cfg.n_layers):
+        w = cfg.window_for_layer(l)
+        ws.append(jnp.inf if w is None else float(w))
+    return jnp.asarray(ws, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.float32) -> Dict:
+    """Allocate the decode cache for `batch` streams of up to `max_len`."""
+    c: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    L = cfg.n_layers
+    if cfg.attn_free:
+        h = cfg.d_model // rwkv_mod.HEAD_DIM
+        c["wkv"] = jnp.zeros((L, batch, h, rwkv_mod.HEAD_DIM,
+                              rwkv_mod.HEAD_DIM), jnp.float32)
+        c["shift_tm"] = jnp.zeros((L, batch, 1, cfg.d_model), dtype)
+        c["shift_cm"] = jnp.zeros((L, batch, 1, cfg.d_model), dtype)
+        return c
+    c["k"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       dtype)
+    c["v"] = jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+                       dtype)
+    if cfg.hybrid_attn_ssm:
+        inner = cfg.ssm.expand * cfg.d_model
+        c["ssm"] = jnp.zeros((L, batch, inner, cfg.ssm.state_dim),
+                             jnp.float32)
+        c["conv"] = jnp.zeros((L, batch, cfg.ssm.conv_width - 1, inner),
+                              dtype)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    prefix_embeds: Optional[jax.Array],
+) -> Tuple[jax.Array, int]:
+    x = embedding_apply(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma-style scaling
+    prefix_len = 0
+    if cfg.vision_prefix_len > 0:
+        assert prefix_embeds is not None, (
+            f"{cfg.name}: vision/audio prefix embeddings required"
+        )
+        proj = dense_apply(params["vision_proj"], prefix_embeds)
+        x = jnp.concatenate([proj.astype(x.dtype), x], axis=1)
+        prefix_len = cfg.vision_prefix_len
+    return x, prefix_len
+
+
+def forward(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,                       # [B, S]
+    *,
+    prefix_embeds: Optional[jax.Array] = None,  # [B, P, vision_dim]
+    kv_valid: Optional[jax.Array] = None,       # [B, S(+P)] padding mask
+    return_cache: bool = False,
+    cache_len: Optional[int] = None,            # cache capacity for prefill
+    unroll_layers: bool = False,
+    remat: bool = False,
+) -> ModelOutput:
+    x, prefix_len = _embed_inputs(params, cfg, tokens, prefix_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = layer_windows(cfg)
+    prefix = prefix_len if cfg.prefix_lm else 0
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        ys = {}
+        if cfg.attn_free:
+            h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+            out, (wkv_state, shift_tm) = rwkv_mod.rwkv6_time_mix(
+                lp["rwkv"], h
+            )
+            x = x + out
+            h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+            out, shift_cm = rwkv_mod.rwkv6_channel_mix(lp["rwkv"], h)
+            x = x + out
+            if return_cache:
+                ys = {"wkv": wkv_state, "shift_tm": shift_tm,
+                      "shift_cm": shift_cm}
+            return (x, aux), ys
+
+        h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+        attn_out, (k, v) = attn.attn_forward(
+            lp["attn"], h, positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=window, kv_valid=kv_valid, prefix_len=prefix,
+        )
+        if cfg.hybrid_attn_ssm:
+            ssm_out, (ssm_state, conv_state) = ssm_mod.ssm_forward(
+                lp["ssm"], h, cfg.ssm
+            )
+            mix = 0.5 * (attn_out + ssm_out)   # hymba: mean-fused heads
+            x = x + mix
+            if return_cache:
+                ys = {"ssm": ssm_state, "conv": conv_state}
+        else:
+            x = x + attn_out
+        if return_cache:
+            pad = cache_len if cache_len is not None else s
+            kc = jnp.zeros((b, pad) + k.shape[2:], k.dtype)
+            vc = jnp.zeros((b, pad) + v.shape[2:], v.dtype)
+            kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+            ys = dict(ys, k=kc, v=vc)
+
+        h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            mlp_out, moe_aux = moe_mod.moe_apply(
+                lp["moe"], h, cfg.moe, cfg.activation,
+                group_size=cfg.moe.group_size,
+            )
+            aux = aux + moe_aux
+        else:
+            mlp_out = mlp_apply(lp["mlp"], h, cfg.activation)
+        x = x + mlp_out
+        return (x, aux), ys
+
+    (x, aux), cache_ys = scan_layers(
+        body, (x, aux0), (params["layers"], windows), unroll_layers, remat
+    )
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], x)
+    else:
+        logits = dense_apply(params["lm_head"], x)
+    logits = softcap(logits, cfg.logit_softcap)
+
+    value = None
+    if cfg.value_head:
+        value = dense_apply(params["value_head"], x)[..., 0]
+
+    cache = None
+    if return_cache:
+        cache = dict(cache_ys)
+        cache["pos"] = jnp.full((b,), s, jnp.int32)
+    # Strip the prefix positions from the heads (policy over text tokens).
+    if prefix_len > 0:
+        logits = logits[:, prefix_len:]
+        if value is not None:
+            value = value[:, prefix_len:]
+    return ModelOutput(logits=logits, value=value, cache=cache, aux_loss=aux)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,       # [B] current token ids
+    cache: Dict,
+    unroll_layers: bool = False,
+) -> Tuple[ModelOutput, Dict]:
+    """One autoregressive step against the cache. Returns logits [B, V]."""
+    x = embedding_apply(params["embed"], token[:, None])
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    pos = cache["pos"]
+    windows = layer_windows(cfg)
+    prefix = cfg.vision_prefix_len if cfg.prefix_lm else 0
+
+    if cfg.attn_free:
+        def body(x, xs):
+            lp, wkv, sh_tm, sh_cm = xs
+            h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+            out, (wkv, sh_tm) = rwkv_mod.rwkv6_time_mix(
+                lp["rwkv"], h, state=(wkv, sh_tm)
+            )
+            x = x + out
+            h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+            out, sh_cm = rwkv_mod.rwkv6_channel_mix(lp["rwkv"], h, sh_cm)
+            x = x + out
+            return x, {"wkv": wkv, "shift_tm": sh_tm, "shift_cm": sh_cm}
+
+        x, new = scan_layers(
+            body, x,
+            (params["layers"], cache["wkv"], cache["shift_tm"],
+             cache["shift_cm"]),
+            unroll_layers,
+        )
+        new_cache = dict(new, pos=pos + 1)
+    else:
+        def layer_step(x, xs, window_slice=None):
+            if cfg.hybrid_attn_ssm:
+                lp, window, ck, cv, ssm_state, conv_state = xs
+            else:
+                lp, window, ck, cv = xs
+            ys = {}
+            h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+            attn_out, (ck, cv) = attn.attn_decode(
+                lp["attn"], h, pos, ck, cv,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+                window=window, prefix_len=prefix,
+                window_slice=window_slice,
+            )
+            ys["k"], ys["v"] = ck, cv
+            if cfg.hybrid_attn_ssm:
+                ssm_out, (ssm_state, conv_state) = ssm_mod.ssm_forward(
+                    lp["ssm"], h, cfg.ssm, state=(ssm_state, conv_state)
+                )
+                ys["ssm"], ys["conv"] = ssm_state, conv_state
+                x = x + 0.5 * (attn_out + ssm_out)
+            else:
+                x = x + attn_out
+            h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+            if cfg.moe is not None:
+                # Same grouped dispatch as training (group = the decode
+                # batch) so expert parallelism lowers to the identical
+                # all-to-all pattern in serve_step.
+                mlp_out, _ = moe_mod.moe_apply(
+                    lp["moe"], h, cfg.moe, cfg.activation,
+                    group_size=h.shape[0],
+                )
+            else:
+                mlp_out = mlp_apply(lp["mlp"], h, cfg.activation)
+            x = x + mlp_out
+            return x, ys
+
+        if cfg.hybrid_attn_ssm:
+            xs = (params["layers"], windows, cache["k"], cache["v"],
+                  cache["ssm"], cache["conv"])
+        else:
+            xs = (params["layers"], windows, cache["k"], cache["v"])
+
+        if unroll_layers and cfg.sliding_window is not None:
+            # Unrolled decode with STATIC per-layer windows: local layers
+            # read only a window-sized dynamic slice of the cache (§Perf
+            # hillclimb #3b — cache-read bytes on local layers drop by
+            # ~window/Smax, e.g. 32x for gemma3 decode_32k).
+            ys_all = []
+            for i in range(cfg.n_layers):
+                xs_i = jax.tree.map(lambda a: a[i], xs)
+                x, ys = layer_step(
+                    x, xs_i, window_slice=cfg.window_for_layer(i))
+                ys_all.append(ys)
+            new = jax.tree.map(lambda *z: jnp.stack(z), *ys_all)
+        else:
+            x, new = scan_layers(
+                lambda c, xs_i: layer_step(c, xs_i), x, xs, unroll_layers)
+        new_cache = dict(new, pos=pos + 1)
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], x)
+    else:
+        logits = dense_apply(params["lm_head"], x)
+    logits = softcap(logits, cfg.logit_softcap)
+    value = None
+    if cfg.value_head:
+        value = dense_apply(params["value_head"], x)[..., 0]
+    out = ModelOutput(
+        logits=logits[:, 0], value=None if value is None else value[:, 0],
+        cache=None, aux_loss=jnp.zeros((), jnp.float32),
+    )
+    return out, new_cache

@@ -1,0 +1,27 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    sgd_update,
+)
+from repro.optim.schedule import (
+    constant_schedule,
+    linear_anneal,
+    cosine_schedule,
+    warmup_cosine,
+)
+from repro.optim.clip import clip_by_global_norm
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "sgd_update",
+    "constant_schedule",
+    "linear_anneal",
+    "cosine_schedule",
+    "warmup_cosine",
+    "clip_by_global_norm",
+]

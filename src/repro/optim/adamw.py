@@ -1,0 +1,79 @@
+"""AdamW, from scratch (optax is not available in this container).
+
+Moments are kept in float32 regardless of parameter dtype, mirroring the
+mixed-precision layout the dry-run shards (params bf16, m/v fp32).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # scalar int32
+    m: Any           # first moment, float32 pytree
+    v: Any           # second moment, float32 pytree
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros32, params),
+        v=jax.tree.map(zeros32, params),
+    )
+
+
+def adamw_update(
+    grads: Any,
+    state: AdamWState,
+    params: Any,
+    cfg: AdamWConfig,
+    lr_scale: jax.Array | float = 1.0,
+):
+    """One AdamW step. Returns (new_params, new_state).
+
+    ``lr_scale`` multiplies cfg.lr — schedules pass the current factor so
+    the config stays hashable/static under jit.
+    """
+    step = state.step + 1
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd_m(m, g):
+        return b1 * m + (1.0 - b1) * g.astype(jnp.float32)
+
+    def upd_v(v, g):
+        g32 = g.astype(jnp.float32)
+        return b2 * v + (1.0 - b2) * g32 * g32
+
+    m = jax.tree.map(upd_m, state.m, grads)
+    v = jax.tree.map(upd_v, state.v, grads)
+
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    lr = cfg.lr * lr_scale
+
+    def upd_p(p, m_, v_):
+        update = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + cfg.eps)
+        if cfg.weight_decay > 0.0:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+
+    new_params = jax.tree.map(upd_p, params, m, v)
+    return new_params, AdamWState(step=step, m=m, v=v)
+
+
+def sgd_update(grads: Any, params: Any, lr: float):
+    """Plain SGD — used by tests and tiny tabular experiments."""
+    return jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)

@@ -1,0 +1,19 @@
+"""Global-norm gradient clipping (Table 1: Max Grad Norm = 0.5)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_global_norm
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    """Scale `grads` so their global L2 norm is at most `max_norm`.
+
+    Returns (clipped_grads, pre_clip_norm).
+    """
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm

@@ -1,0 +1,49 @@
+"""Learning-rate schedules, returned as step -> lr_scale callables.
+
+Scales multiply ``AdamWConfig.lr``; the classic-RL setup uses
+``linear_anneal`` (CleanRL's "Learning Rate Annealing = True", Table 1),
+the RLVR setup uses a constant 1e-6 (Table 2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule():
+    def f(step):
+        return jnp.ones_like(jnp.asarray(step, jnp.float32))
+
+    return f
+
+
+def linear_anneal(total_steps: int, floor: float = 0.0):
+    def f(step):
+        t = jnp.asarray(step, jnp.float32) / float(max(total_steps, 1))
+        return jnp.maximum(1.0 - t, floor)
+
+    return f
+
+
+def cosine_schedule(total_steps: int, floor: float = 0.0):
+    def f(step):
+        t = jnp.clip(
+            jnp.asarray(step, jnp.float32) / float(max(total_steps, 1)),
+            0.0,
+            1.0,
+        )
+        return floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+    return f
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_schedule(max(total_steps - warmup_steps, 1), floor)
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / float(max(warmup_steps, 1))
+        return jnp.where(
+            step < warmup_steps, warm, cos(step - warmup_steps)
+        )
+
+    return f

@@ -1,0 +1,25 @@
+from repro.rollout.env_rollout import (
+    RolloutBatch,
+    collect_rollout,
+    init_env_states,
+    evaluate_policy,
+)
+from repro.rollout.sampler import GenerationResult, generate, score_tokens
+from repro.rollout.async_engine import (
+    SimulatedAsyncActors,
+    ForwardLagGenerator,
+    ForwardLagBatch,
+)
+
+__all__ = [
+    "RolloutBatch",
+    "collect_rollout",
+    "init_env_states",
+    "evaluate_policy",
+    "GenerationResult",
+    "generate",
+    "score_tokens",
+    "SimulatedAsyncActors",
+    "ForwardLagGenerator",
+    "ForwardLagBatch",
+]

@@ -1,0 +1,182 @@
+"""Asynchronous actor-learner simulators for both experimental regimes.
+
+*Backward lag* (§5.1, Fig. 1 left): ``SimulatedAsyncActors`` owns the
+policy buffer; each collection phase samples one stale policy per actor
+and rolls the vectorized environments — yielding the episodic-mixture
+behavior policy β_T of Eq. 1 with a controllable degree of asynchronicity
+(the buffer capacity K).
+
+*Forward lag* (§5.2): ``ForwardLagGenerator`` freezes the current policy,
+generates N minibatches of completions with the serve engine, and hands
+them to the learner one per update — by minibatch k the learner is k
+updates ahead of the data's behavior policy, reproducing the paper's
+N-minibatch protocol (Noukhovitch et al., 2025 style).
+
+Both are thin, jit-friendly coordinators over repro.core.policy_lag,
+repro.rollout.env_rollout and repro.rollout.sampler.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy_lag import (
+    PolicyBuffer,
+    buffer_init,
+    buffer_push,
+    buffer_sample,
+)
+from repro.envs.base import Env
+from repro.rollout.env_rollout import (
+    RolloutBatch,
+    collect_rollout,
+    init_env_states,
+)
+from repro.rollout.sampler import GenerationResult, generate
+
+
+class SimulatedAsyncActors:
+    """Policy-buffer actors over vectorized pure-JAX environments."""
+
+    def __init__(
+        self,
+        env: Env,
+        policy_apply: Callable,
+        init_params: Any,
+        *,
+        n_actors: int,
+        buffer_capacity: int,
+        rollout_steps: int,
+        seed: int = 0,
+    ) -> None:
+        self.env = env
+        self.n_actors = n_actors
+        self.rollout_steps = rollout_steps
+        self._key = jax.random.PRNGKey(seed)
+        self.buffer: PolicyBuffer = buffer_init(init_params, buffer_capacity)
+        self._env_states = init_env_states(
+            env, self._next_key(), n_actors
+        )
+
+        def _collect(buffer, env_states, key):
+            k_sample, k_roll = jax.random.split(key)
+            actor_params, slots = buffer_sample(buffer, k_sample, n_actors)
+            env_states, batch = collect_rollout(
+                env, policy_apply, actor_params, env_states, k_roll,
+                rollout_steps,
+            )
+            return env_states, batch, slots
+
+        self._collect = jax.jit(_collect)
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def push_policy(self, params: Any) -> None:
+        """Learner publishes a new policy snapshot (end of train phase)."""
+        self.buffer = buffer_push(self.buffer, params)
+
+    def collect(self) -> Tuple[RolloutBatch, jax.Array]:
+        """One collection phase: every actor re-samples a stale policy and
+        rolls `rollout_steps` steps.  Returns (batch, sampled buffer slots).
+        """
+        self._env_states, batch, slots = self._collect(
+            self.buffer, self._env_states, self._next_key()
+        )
+        return batch, slots
+
+
+class ForwardLagBatch(NamedTuple):
+    gen: GenerationResult
+    rewards: jax.Array         # [B] binary verifier rewards
+    answers: List[str]
+    staleness: int             # updates the learner is ahead when consumed
+
+
+class ForwardLagGenerator:
+    """Generate-N-then-train-N protocol for RLVR (§5.2)."""
+
+    def __init__(
+        self,
+        bundle,
+        dataset,
+        *,
+        n_minibatches: int,
+        prompts_per_minibatch: int,
+        completions_per_prompt: int,
+        max_new_tokens: int,
+        temperature: float = 1.0,
+        seed: int = 0,
+    ) -> None:
+        self.bundle = bundle
+        self.dataset = dataset
+        self.n_minibatches = n_minibatches
+        self.prompts_per_minibatch = prompts_per_minibatch
+        self.group_size = completions_per_prompt
+        self.max_new_tokens = max_new_tokens
+        self._key = jax.random.PRNGKey(seed)
+
+        def _gen(params, prompt_tokens, key):
+            return generate(
+                bundle, params, prompt_tokens, key,
+                max_new_tokens=max_new_tokens, temperature=temperature,
+            )
+
+        self._gen = jax.jit(_gen)
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def generate_phase(self, params: Any) -> List[ForwardLagBatch]:
+        """Freeze `params` as β and produce N minibatches of labeled data.
+
+        Minibatch k will be trained on after k prior updates — its
+        ``staleness`` field records the forward lag at consumption time.
+        """
+        from repro.data.mathgen import verify
+
+        out: List[ForwardLagBatch] = []
+        tok = self.dataset.tok
+        for k in range(self.n_minibatches):
+            toks_np, _, answers = self.dataset.sample_batch(
+                self.prompts_per_minibatch
+            )
+            # Group: repeat each prompt G times (GRPO groups contiguous).
+            toks_np = np.repeat(toks_np, self.group_size, axis=0)
+            answers = [a for a in answers for _ in range(self.group_size)]
+            gen = self._gen(params, jnp.asarray(toks_np), self._next_key())
+            comp_np = np.asarray(gen.completion)
+            rewards = jnp.asarray(
+                [
+                    verify(tok.decode(row), ans)
+                    for row, ans in zip(comp_np, answers)
+                ],
+                jnp.float32,
+            )
+            out.append(ForwardLagBatch(
+                gen=gen, rewards=rewards, answers=answers, staleness=k,
+            ))
+        return out
+
+    def eval_accuracy(self, params: Any, n: Optional[int] = 256) -> float:
+        """Greedy-decode exact-match accuracy on the held-out set."""
+        from repro.data.mathgen import verify
+
+        toks_np, _, answers = self.dataset.eval_batch(n)
+        gen = jax.jit(
+            lambda p, t, k: generate(
+                self.bundle, p, t, k,
+                max_new_tokens=self.max_new_tokens, temperature=1e-4,
+            )
+        )(params, jnp.asarray(toks_np), self._next_key())
+        comp = np.asarray(gen.completion)
+        hits = [
+            verify(self.dataset.tok.decode(row), ans)
+            for row, ans in zip(comp, answers)
+        ]
+        return float(np.mean(hits))

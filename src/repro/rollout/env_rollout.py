@@ -1,0 +1,104 @@
+"""Vectorized environment rollout collector with per-actor policies.
+
+The simulated-async protocol (Fig. 1 left) requires each parallel actor to
+run a *different* policy (sampled from the policy buffer).  The collector
+therefore vmaps the policy apply over a stacked actor-parameter pytree and
+scans the environment for ``num_steps``, entirely inside jit.
+
+Output layout is batch-major [N_actors, T, ...] to match the advantage
+estimators in repro.core.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+
+
+class RolloutBatch(NamedTuple):
+    obs: jax.Array        # [N, T, obs_dim]
+    actions: jax.Array    # [N, T, act_dim]
+    log_beta: jax.Array   # [N, T]   behavior log-probs at collection
+    rewards: jax.Array    # [N, T]
+    dones: jax.Array      # [N, T]   episode boundary AFTER this step
+    final_obs: jax.Array  # [N, obs_dim]  for bootstrap values
+
+
+def collect_rollout(
+    env: Env,
+    policy_apply: Callable[[Any, jax.Array, jax.Array],
+                           Tuple[jax.Array, jax.Array]],
+    actor_params: Any,      # pytree, leaves lead with N (one policy/actor)
+    env_states: Any,        # pytree, leaves lead with N
+    key: jax.Array,
+    num_steps: int,
+) -> Tuple[Any, RolloutBatch]:
+    """Run every actor for `num_steps` with its own policy.
+
+    ``policy_apply(params_i, obs_i [obs_dim], key) -> (action, log_prob)``.
+    Returns (new_env_states, batch).
+    """
+    n = jax.tree.leaves(env_states)[0].shape[0]
+    observe = jax.vmap(env.observe)
+
+    def step_fn(carry, key_t):
+        states = carry
+        obs = observe(states)
+        k_act, k_env = jax.random.split(key_t)
+        act_keys = jax.random.split(k_act, n)
+        actions, log_probs = jax.vmap(policy_apply)(
+            actor_params, obs, act_keys
+        )
+        env_keys = jax.random.split(k_env, n)
+        states, ts = jax.vmap(env.step)(states, actions, env_keys)
+        out = (obs, actions, log_probs, ts.reward, ts.done)
+        return states, out
+
+    keys = jax.random.split(key, num_steps)
+    env_states, (obs, actions, log_beta, rewards, dones) = jax.lax.scan(
+        step_fn, env_states, keys
+    )
+    # time-major -> batch-major
+    tm = lambda x: jnp.swapaxes(x, 0, 1)
+    batch = RolloutBatch(
+        obs=tm(obs),
+        actions=tm(actions),
+        log_beta=tm(log_beta),
+        rewards=tm(rewards),
+        dones=tm(dones),
+        final_obs=observe(env_states),
+    )
+    return env_states, batch
+
+
+def init_env_states(env: Env, key: jax.Array, n: int) -> Any:
+    return jax.vmap(env.reset)(jax.random.split(key, n))
+
+
+def evaluate_policy(
+    env: Env,
+    policy_apply_det: Callable[[Any, jax.Array], jax.Array],
+    params: Any,
+    key: jax.Array,
+    n_episodes: int = 16,
+) -> jax.Array:
+    """Mean undiscounted return of the (deterministic) policy."""
+    def one_episode(k):
+        k0, k1 = jax.random.split(k)
+        state = env.reset(k0)
+
+        def step(carry, k_t):
+            state, ret = carry
+            obs = env.observe(state)
+            a = policy_apply_det(params, obs)
+            state, ts = env.step(state, a, k_t)
+            return (state, ret + ts.reward), None
+
+        keys = jax.random.split(k1, env.max_episode_steps)
+        (_, ret), _ = jax.lax.scan(step, (state, 0.0), keys)
+        return ret
+
+    return jnp.mean(jax.vmap(one_episode)(jax.random.split(key, n_episodes)))

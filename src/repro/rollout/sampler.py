@@ -1,0 +1,137 @@
+"""LLM serve engine: prefill + KV-cache decode generation loop.
+
+This is the actor side of the §5.2 asynchronous RLVR setup — the role
+vLLM plays in the paper.  ``generate`` runs a jitted prefill + a
+``lax.scan`` of single-token decode steps, returning the sampled
+completions together with the *behavior log-probs* recorded at sampling
+time (the β_T(a|s) term every loss in repro.core consumes).
+
+Because our learner scores sequences with the same forward pass (same
+kernels, same dtype), the vllm-vs-transformers logprob mismatch the paper
+flags (Yao et al., 2025) does not arise here; the realignment ratio at
+generation time is exactly 1 for fresh data.
+
+Sampling: temperature + top-p nucleus, both jit-static.  EOS handling:
+rows that emitted EOS produce PAD and a zero completion mask afterwards.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokenizer import EOS, PAD
+from repro.models.registry import ModelBundle
+
+
+class GenerationResult(NamedTuple):
+    tokens: jax.Array        # [B, P + N] prompt + completion ids
+    completion: jax.Array    # [B, N]
+    log_beta: jax.Array      # [B, N] behavior log-probs of sampled tokens
+    mask: jax.Array          # [B, N] 1.0 up to and including EOS
+    values: Optional[jax.Array]  # [B, N] critic values at sampling (or None)
+
+
+def _top_p_filter(logits: jax.Array, top_p: float) -> jax.Array:
+    """Zero out (set -inf) the tail outside the nucleus."""
+    if top_p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # smallest set with cumulative prob >= top_p; keep at least 1 token.
+    cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+    cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+    return jnp.where(logits >= cutoff, logits, -jnp.inf)
+
+
+def generate(
+    bundle: ModelBundle,
+    params: Any,
+    prompt: jax.Array,          # [B, P] (left-padded) prompt token ids
+    key: jax.Array,
+    *,
+    max_new_tokens: int,
+    temperature: float = 1.0,
+    top_p: float = 1.0,
+    aux: Optional[dict] = None,
+) -> GenerationResult:
+    """Sample completions; fully jittable (call under jax.jit)."""
+    b, p = prompt.shape
+    total = p + max_new_tokens
+    aux = aux or {}
+
+    # Prefill: write the prompt into a cache sized for the full rollout.
+    out = bundle.forward(
+        params, prompt, return_cache=True, cache_len=total, **aux
+    )
+    cache = out.cache
+    last_logits = out.logits[:, -1]  # [B, V]
+
+    def sample_token(logits, k):
+        logits = logits.astype(jnp.float32) / max(temperature, 1e-6)
+        logits = _top_p_filter(logits, top_p)
+        tok = jax.random.categorical(k, logits, axis=-1)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+        return tok, lp
+
+    def step(carry, k_t):
+        cache, logits, alive = carry
+        tok, lp = sample_token(logits, k_t)
+        tok = jnp.where(alive, tok, PAD)
+        mask = alive.astype(jnp.float32)
+        alive = jnp.logical_and(alive, tok != EOS)
+        out, cache = bundle.decode_step(params, tok, cache)
+        value = out.value if out.value is not None else jnp.zeros((b,))
+        return (cache, out.logits, alive), (tok, lp, mask, value)
+
+    keys = jax.random.split(key, max_new_tokens)
+    alive0 = jnp.ones((b,), bool)
+    (_, _, _), (toks, lps, masks, values) = jax.lax.scan(
+        step, (cache, last_logits, alive0), keys
+    )
+    completion = toks.T           # [B, N]
+    log_beta = lps.T
+    mask = masks.T
+    values = values.T
+
+    tokens = jnp.concatenate([prompt, completion], axis=1)
+    return GenerationResult(
+        tokens=tokens,
+        completion=completion,
+        log_beta=log_beta,
+        mask=mask,
+        values=values if bundle.cfg.value_head else None,
+    )
+
+
+def score_tokens(
+    bundle: ModelBundle,
+    params: Any,
+    tokens: jax.Array,         # [B, T] full sequences (prompt + completion)
+    prompt_len: int,
+    *,
+    aux: Optional[dict] = None,
+    kernel_mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Teacher-forced per-completion-token (logp, entropy, value).
+
+    logits at position t predict token t+1; completion tokens live at
+    positions [prompt_len, T), so we score logits [prompt_len-1, T-1).
+    Uses the fused logprob kernel path when enabled.
+    """
+    from repro.kernels import ops as kops
+
+    aux = aux or {}
+    out = bundle.forward(params, tokens, **aux)
+    logits = out.logits[:, prompt_len - 1 : -1]          # [B, N, V]
+    targets = tokens[:, prompt_len:]                     # [B, N]
+    logp, entropy = kops.logprobs_from_logits(
+        logits, targets, mode=kernel_mode
+    )
+    value = None
+    if out.value is not None:
+        value = out.value[:, prompt_len - 1 : -1]
+    return logp, entropy, value

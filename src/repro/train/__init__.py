@@ -1,0 +1,31 @@
+from repro.train.trainer_rl import (
+    RLHyperparams,
+    RLTrainState,
+    init_train_state,
+    make_train_phase,
+)
+from repro.train.runner_rl import (
+    AsyncRLRunConfig,
+    AsyncRLResult,
+    run_async_rl,
+    run_grid,
+)
+from repro.train.trainer_rlvr import (
+    RLVRHyperparams,
+    RLVRTrainer,
+    RLVRResult,
+)
+
+__all__ = [
+    "RLHyperparams",
+    "RLTrainState",
+    "init_train_state",
+    "make_train_phase",
+    "AsyncRLRunConfig",
+    "AsyncRLResult",
+    "run_async_rl",
+    "run_grid",
+    "RLVRHyperparams",
+    "RLVRTrainer",
+    "RLVRResult",
+]

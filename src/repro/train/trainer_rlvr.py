@@ -1,0 +1,218 @@
+"""RLVR trainer (§5.2): GRPO with PPO-clip vs GRPO with VACO filtering.
+
+Protocol (Noukhovitch et al., 2025 / paper App. C.2): each phase freezes
+the policy as β, generates N minibatches of grouped completions, labels
+them with the binary verifier, then takes N updates — minibatch k is
+consumed with forward lag k.  Table 2 hyper-parameters are defaults
+(clip 0.2/0.272 DAPO-style; TV threshold δ=0.05; 1 PPO epoch).
+
+Because no pretrained base model is downloadable offline, the runner
+first *creates* a base model with a supervised warm-start on synthetic
+chain traces (repro.data.mathgen), then runs RL exactly as the paper does
+on Qwen2.5-0.5B-base.  The advantage realignment ratio is 1 (fresh data
+each phase — no backward lag), matching App. C.2.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import GRPOConfig, group_advantages, grpo_token_loss
+from repro.data.mathgen import MathTaskDataset
+from repro.models.registry import ModelBundle
+from repro.optim import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+)
+from repro.rollout.async_engine import ForwardLagBatch, ForwardLagGenerator
+from repro.rollout.sampler import score_tokens
+
+
+@dataclass(frozen=True)
+class RLVRHyperparams:
+    algorithm: str = "grpo"       # grpo (ppo-clip) | grpo_vaco
+    clip_low: float = 0.2
+    clip_high: float = 0.272      # DAPO clip-higher
+    delta: float = 0.05           # VACO TV threshold (Table 2)
+    entropy_coef: float = 0.0
+    lr: float = 1e-4              # paper: 1e-6 on a 0.5B; scaled for ~1M
+    weight_decay: float = 0.0
+    max_grad_norm: float = 1.0
+    n_minibatches: int = 4        # N — the forward-lag knob
+    prompts_per_minibatch: int = 16   # paper: 32
+    completions_per_prompt: int = 4   # paper: 8
+    max_new_tokens: int = 8
+    temperature: float = 1.0
+    warmup_steps: int = 300       # supervised base-model creation
+    warmup_lr: float = 3e-3
+    warmup_batch: int = 64
+
+
+class RLVRTrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+    updates: jax.Array
+
+
+def make_update_step(bundle: ModelBundle, hp: RLVRHyperparams,
+                     prompt_len: int):
+    grpo_cfg = GRPOConfig(
+        clip_low=hp.clip_low, clip_high=hp.clip_high,
+        use_vaco=(hp.algorithm == "grpo_vaco"), delta=hp.delta,
+        entropy_coef=hp.entropy_coef,
+    )
+    opt_cfg = AdamWConfig(lr=hp.lr, weight_decay=hp.weight_decay, eps=1e-8)
+
+    def loss_fn(params, tokens, log_beta, mask, advantages):
+        log_pi, entropy, _ = score_tokens(
+            bundle, params, tokens, prompt_len)
+        loss, aux = grpo_token_loss(
+            log_pi=log_pi, log_beta=log_beta, advantages=advantages,
+            token_mask=mask, cfg=grpo_cfg,
+        )
+        aux["token_entropy"] = jnp.sum(entropy * mask) / jnp.maximum(
+            jnp.sum(mask), 1.0)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def update(state: RLVRTrainState, tokens, log_beta, mask, advantages):
+        (loss, aux), grads = grad_fn(
+            state.params, tokens, log_beta, mask, advantages)
+        grads, gnorm = clip_by_global_norm(grads, hp.max_grad_norm)
+        params, opt_state = adamw_update(
+            grads, state.opt_state, state.params, opt_cfg)
+        aux = dict(aux, loss=loss, grad_norm=gnorm)
+        return RLVRTrainState(params, opt_state, state.updates + 1), aux
+
+    return update
+
+
+def make_warmup_step(bundle: ModelBundle, hp: RLVRHyperparams):
+    """Supervised next-token warm-start (creates the 'base model')."""
+    opt_cfg = AdamWConfig(lr=hp.warmup_lr, eps=1e-8)
+
+    def loss_fn(params, tokens, mask):
+        out = bundle.forward(params, tokens)
+        logits = out.logits[:, :-1]
+        targets = tokens[:, 1:]
+        mask = mask[:, 1:]
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    @jax.jit
+    def step(state: RLVRTrainState, tokens, mask):
+        loss, grads = grad_fn(state.params, tokens, mask)
+        grads, _ = clip_by_global_norm(grads, hp.max_grad_norm)
+        params, opt_state = adamw_update(
+            grads, state.opt_state, state.params, opt_cfg)
+        return RLVRTrainState(params, opt_state, state.updates), loss
+
+    return step
+
+
+@dataclass
+class RLVRPhaseLog:
+    mean_reward: float
+    tv: float
+    frac_filtered: float      # VACO filter rate / PPO clip rate
+    filter_active: float
+    staleness: int
+
+
+@dataclass
+class RLVRResult:
+    eval_accuracy: List[float]
+    phase_logs: List[RLVRPhaseLog]
+
+
+class RLVRTrainer:
+    """Drives warmup + the generate-N / train-N forward-lag loop."""
+
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        dataset: MathTaskDataset,
+        hp: RLVRHyperparams,
+        seed: int = 0,
+    ) -> None:
+        self.bundle = bundle
+        self.dataset = dataset
+        self.hp = hp
+        key = jax.random.PRNGKey(seed)
+        params = bundle.init(key)
+        self.state = RLVRTrainState(
+            params=params, opt_state=adamw_init(params),
+            updates=jnp.zeros((), jnp.int32),
+        )
+        self.generator = ForwardLagGenerator(
+            bundle, dataset,
+            n_minibatches=hp.n_minibatches,
+            prompts_per_minibatch=hp.prompts_per_minibatch,
+            completions_per_prompt=hp.completions_per_prompt,
+            max_new_tokens=hp.max_new_tokens,
+            temperature=hp.temperature,
+            seed=seed + 1,
+        )
+        self._update = make_update_step(bundle, hp, dataset.prompt_len)
+        self._warmup = make_warmup_step(bundle, hp)
+
+    def warmup(self, steps: Optional[int] = None) -> float:
+        steps = steps if steps is not None else self.hp.warmup_steps
+        total_len = self.dataset.prompt_len + self.hp.max_new_tokens
+        loss = float("nan")
+        for _ in range(steps):
+            toks, mask = self.dataset.supervised_batch(
+                self.hp.warmup_batch, self.hp.max_new_tokens)
+            # reset the optimizer moments only once RL starts.
+            self.state, loss = self._warmup(
+                self.state, jnp.asarray(toks), jnp.asarray(mask))
+        # fresh optimizer state for RL.
+        self.state = RLVRTrainState(
+            params=self.state.params,
+            opt_state=adamw_init(self.state.params),
+            updates=jnp.zeros((), jnp.int32),
+        )
+        return float(loss)
+
+    def train_phase(self) -> List[RLVRPhaseLog]:
+        """One generate-N / train-N phase."""
+        batches = self.generator.generate_phase(self.state.params)
+        logs: List[RLVRPhaseLog] = []
+        for b in batches:
+            adv = group_advantages(
+                b.rewards, self.hp.completions_per_prompt)
+            self.state, aux = self._update(
+                self.state, b.gen.tokens, b.gen.log_beta, b.gen.mask, adv)
+            frac = aux.get("frac_filtered", aux.get("clip_frac", 0.0))
+            logs.append(RLVRPhaseLog(
+                mean_reward=float(jnp.mean(b.rewards)),
+                tv=float(aux["tv"]),
+                frac_filtered=float(frac),
+                filter_active=float(aux.get("filter_active", 1.0)),
+                staleness=b.staleness,
+            ))
+        return logs
+
+    def evaluate(self, n: Optional[int] = 256) -> float:
+        return self.generator.eval_accuracy(self.state.params, n)
+
+    def train(self, phases: int, eval_every: int = 5) -> RLVRResult:
+        accs: List[float] = []
+        logs: List[RLVRPhaseLog] = []
+        for i in range(phases):
+            logs.extend(self.train_phase())
+            if (i + 1) % eval_every == 0 or i == phases - 1:
+                accs.append(self.evaluate())
+        return RLVRResult(eval_accuracy=accs, phase_logs=logs)

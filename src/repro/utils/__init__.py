@@ -1,0 +1,19 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_scale,
+    tree_zeros_like,
+    tree_global_norm,
+    tree_size,
+    tree_interpolate,
+)
+from repro.utils.prng import PRNGSequence
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_zeros_like",
+    "tree_global_norm",
+    "tree_size",
+    "tree_interpolate",
+    "PRNGSequence",
+]

@@ -1,0 +1,109 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but not collective
+traffic; we parse the partitioned HLO text (``compiled.as_text()``) and
+sum the output-shape bytes of every communication op:
+
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute
+
+Bytes are per-participant (the shapes in partitioned HLO are already the
+per-device shard shapes), i.e. directly comparable to per-chip link
+bandwidth in the collective roofline term.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[2,512,128]{2,1,0} all-gather(...)
+#       ROOT %tuple ... f32[]{} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([0-9,]*)\][^a-z]*\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+# tuple-shaped collectives: = (f32[8,128]{...}, f32[8,128]{...}) all-reduce
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * nbytes
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [
+            f"{k}: n={self.count_by_kind.get(k, 0)} "
+            f"bytes={self.bytes_by_kind.get(k, 0):,}"
+            for k in _COLLECTIVES
+            if self.count_by_kind.get(k, 0)
+        ]
+        return "; ".join(parts) if parts else "no collectives"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum per-device output bytes of every collective in the HLO text."""
+    stats = CollectiveStats()
+
+    def add(kind: str, nbytes: int):
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + nbytes
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-start" in line:  # avoid double counting start/done pairs
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            add(kind, _shape_bytes(dtype, dims))
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            nbytes = sum(
+                _shape_bytes(d, s) for d, s in _SHAPE_RE.findall(shapes)
+            )
+            if nbytes:
+                add(kind, nbytes)
+    return stats

@@ -1,0 +1,29 @@
+"""PRNG key management."""
+from __future__ import annotations
+
+import jax
+
+
+class PRNGSequence:
+    """An iterator of fresh PRNG keys, for host-side setup code.
+
+    Jitted code should thread keys explicitly; this helper is for
+    trainers/launchers that need "one more key" repeatedly.
+    """
+
+    def __init__(self, seed_or_key):
+        if isinstance(seed_or_key, int):
+            self._key = jax.random.PRNGKey(seed_or_key)
+        else:
+            self._key = seed_or_key
+
+    def __next__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def next(self) -> jax.Array:
+        return next(self)
+
+    def take(self, n: int):
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return subs

@@ -1,0 +1,64 @@
+"""Small pytree utilities used across the framework.
+
+We do not depend on optax/flax (not installed), so these helpers provide
+the tree arithmetic the optimizers, policy-buffer mixtures and checkpoint
+code need.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Element-wise a + b over two matching pytrees."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Element-wise a - b over two matching pytrees."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Multiply every leaf of `a` by scalar `s`."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_global_norm(a) -> jax.Array:
+    """Global L2 norm across all leaves (float32 accumulation)."""
+    leaves = jax.tree.leaves(a)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar elements in the pytree (static)."""
+    return int(sum(x.size for x in jax.tree.leaves(a)))
+
+
+def tree_bytes(a) -> int:
+    """Total bytes of the pytree's leaves (static)."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(a)))
+
+
+def tree_interpolate(a, b, t):
+    """(1 - t) * a + t * b, leafwise. Used by policy-mixture diagnostics."""
+    return jax.tree.map(lambda x, y: (1.0 - t) * x + t * y, a, b)
+
+
+def tree_cast(a, dtype):
+    """Cast all floating-point leaves to `dtype` (ints left untouched)."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, a)

@@ -1,0 +1,158 @@
+"""Distribution-layer tests: sharding rules, HLO collective parser, and a
+tiny-mesh pjit of the real train/serve steps on the host's devices.
+
+(These run with 1 CPU device — mesh (1,1) — so they validate the
+*plumbing*: spec construction, divisibility fallbacks, lowering of the
+sharded step functions.  The production 16x16 / 2x16x16 lowering proof is
+launch/dryrun.py, exercised separately because it needs
+xla_force_host_platform_device_count=512 before jax init.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, reduced_config
+from repro.configs.base import InputShape
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    batch_sharding,
+    cache_shardings,
+    param_spec,
+    params_shardings,
+)
+from repro.launch.mesh import make_debug_mesh
+from repro.models.registry import build
+from repro.utils.hlo import collective_bytes
+
+
+# --- param_spec rules --------------------------------------------------------
+
+
+def _mesh16():
+    """Abstract 16x16 mesh over fake devices (no allocation: specs only)."""
+    devs = np.array(jax.devices() * 256)[:256].reshape(16, 16)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_param_spec_shards_largest_divisible_dim():
+    mesh = _mesh16()
+    pol = ShardingPolicy()
+    # [5120, 13824]: both divisible, largest (13824) gets 'model'.
+    spec = param_spec("['mlp']['up']['w']", (5120, 13824), mesh, pol)
+    assert spec == P(None, "model")
+    # hymba-style odd head count folded into 1600: divisible.
+    spec = param_spec("['attn']['wq']['w']", (1600, 1600), mesh, pol)
+    assert spec == P("model", None)
+    # indivisible everything -> replicate.
+    spec = param_spec("['x']['w']", (25, 7), mesh, pol)
+    assert spec == P()
+
+
+def test_param_spec_skips_stacked_layer_axis():
+    mesh = _mesh16()
+    spec = param_spec("['layers']['mlp']['w']", (48, 5120, 13824), mesh,
+                      ShardingPolicy())
+    assert spec[0] is None  # the scan axis is never sharded
+
+
+def test_param_spec_expert_parallel():
+    mesh = _mesh16()
+    spec = param_spec("['layers']['moe']['gate_w']", (61, 384, 7168, 2048),
+                      mesh, ShardingPolicy())
+    assert spec == P(None, "model", None, None)  # expert axis
+
+
+def test_param_spec_tensor_mode():
+    mesh = _mesh16()
+    pol = ShardingPolicy(weight_mode="tensor")
+    up = param_spec("['mlp']['up']['w']", (5120, 13824), mesh, pol)
+    down = param_spec("['mlp']['down']['w']", (13824, 5120), mesh, pol)
+    assert up == P(None, "model")    # column-parallel
+    assert down == P("model", None)  # row-parallel
+
+
+def test_batch_sharding_fallbacks():
+    mesh = _mesh16()
+    assert batch_sharding(mesh, 256, 2).spec == P("data", None)
+    assert batch_sharding(mesh, 1, 2).spec == P(None, None)
+
+
+def test_cache_shardings_seq_vs_batch():
+    mesh = _mesh16()
+    cache = {
+        "pos": jax.ShapeDtypeStruct((128,), jnp.int32),
+        "k": jax.ShapeDtypeStruct((32, 128, 32768, 8, 128), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((32, 128, 32768, 8, 128), jnp.bfloat16),
+    }
+    sh = cache_shardings(cache, mesh, shard_seq=False)
+    assert sh["k"].spec == P(None, "data", None, None, None)
+    long_cache = {
+        "pos": jax.ShapeDtypeStruct((1,), jnp.int32),
+        "k": jax.ShapeDtypeStruct((32, 1, 524288, 8, 128), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((32, 1, 524288, 8, 128), jnp.bfloat16),
+    }
+    sh = cache_shardings(long_cache, mesh, shard_seq=True)
+    assert sh["k"].spec == P(None, None, "data", None, None)
+
+
+# --- HLO collective parser ---------------------------------------------------
+
+
+def test_collective_parser_counts_known_ops():
+    hlo = """
+  %ag = bf16[8,128,512]{2,1,0} all-gather(%x), replica_groups={}
+  %ar = f32[256]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[16,32]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = bf16[4,64]{1,0} all-to-all(%w), dimensions={0}
+  %cp = f32[8]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %ag2 = bf16[2,2]{1,0} all-gather-start(%q)
+"""
+    stats = collective_bytes(hlo)
+    assert stats.count_by_kind["all-gather"] == 1  # -start excluded
+    assert stats.bytes_by_kind["all-gather"] == 8 * 128 * 512 * 2
+    assert stats.bytes_by_kind["all-reduce"] == 256 * 4
+    assert stats.bytes_by_kind["reduce-scatter"] == 16 * 32 * 4
+    assert stats.bytes_by_kind["all-to-all"] == 4 * 64 * 2
+    assert stats.bytes_by_kind["collective-permute"] == 8 * 4
+    assert stats.total_count == 5
+
+
+def test_collective_parser_on_real_lowering():
+    """An actually-sharded matmul must show an all-reduce in its HLO."""
+    mesh = _mesh16()
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 256), jnp.float32)
+    from jax.sharding import NamedSharding
+
+    with mesh:
+        comp = jax.jit(
+            lambda x, y: x @ y,
+            in_shardings=(NamedSharding(mesh, P(None, "model")),
+                          NamedSharding(mesh, P("model", None))),
+        ).lower(a, b).compile()
+    stats = collective_bytes(comp.as_text())
+    assert stats.total_count >= 1
+    assert stats.total_bytes > 0
+
+
+# --- tiny-mesh end-to-end lowering ------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "kimi-k2-1t-a32b",
+                                  "rwkv6-1.6b"])
+def test_reduced_train_step_lowers_on_debug_mesh(arch):
+    from repro.launch import steps as steps_mod
+
+    cfg = reduced_config(arch)
+    bundle = build(cfg)
+    mesh = make_debug_mesh()
+    shape = InputShape("tiny_train", seq_len=32, global_batch=4,
+                       kind="train")
+    params_abs = steps_mod.abstract_params(bundle, dtype=jnp.float32)
+    opt_abs = steps_mod.abstract_opt_state(params_abs)
+    batch = steps_mod.train_batch_specs(bundle, shape, prompt_len=16)
+    step = steps_mod.make_train_step(bundle, prompt_len=16)
+    with mesh:
+        compiled = jax.jit(step).lower(params_abs, opt_abs, batch).compile()
+    assert compiled.cost_analysis() is not None

@@ -1,0 +1,163 @@
+"""Loss-layer semantics: PPO clipping, SPO penalty, GRPO groups, VACO
+gradient behaviour, IMPALA estimator wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import (
+    GRPOConfig,
+    IMPALAConfig,
+    PPOConfig,
+    SPOConfig,
+    VACOConfig,
+    group_advantages,
+    grpo_token_loss,
+    impala_total_loss,
+    ppo_policy_loss,
+    spo_total_loss,
+    vaco_policy_loss,
+    vaco_total_loss,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ppo_clip_zeroes_gradient_outside_range():
+    """Samples with ratio beyond 1+clip and positive advantage contribute
+    no gradient."""
+    log_beta = jnp.zeros((4,))
+    adv = jnp.ones((4,))
+    cfg = PPOConfig(clip_low=0.2, clip_high=0.2)
+
+    def loss(log_pi):
+        l, _ = ppo_policy_loss(log_pi=log_pi, log_beta=log_beta,
+                               advantages=adv, cfg=cfg)
+        return l
+
+    log_pi = jnp.asarray([0.0, 0.1, 0.5, 1.0])  # ratios 1, 1.1, 1.65, 2.7
+    g = jax.grad(loss)(log_pi)
+    assert g[0] != 0.0 and g[1] != 0.0
+    assert g[2] == 0.0 and g[3] == 0.0
+
+
+def test_ppo_asymmetric_clip():
+    """DAPO clip-higher: ratio 1.25 is NOT clipped with clip_high=0.272
+    but IS with clip_high=0.2."""
+    log_pi = jnp.asarray([jnp.log(1.25)])
+    adv = jnp.ones((1,))
+
+    def grad_for(high):
+        cfg = PPOConfig(clip_low=0.2, clip_high=high)
+        return jax.grad(lambda lp: ppo_policy_loss(
+            log_pi=lp, log_beta=jnp.zeros((1,)), advantages=adv,
+            cfg=cfg)[0])(log_pi)
+
+    assert float(grad_for(0.272)[0]) != 0.0
+    assert float(grad_for(0.2)[0]) == 0.0
+
+
+def test_spo_penalty_pulls_ratio_to_one():
+    log_pi = jnp.asarray([0.5, -0.5])
+    cfg = SPOConfig(penalty_coef=100.0)
+    g = jax.grad(lambda lp: spo_total_loss(
+        log_pi=lp, log_beta=jnp.zeros((2,)),
+        advantages=jnp.zeros((2,)), values=jnp.zeros((2,)),
+        value_targets=jnp.zeros((2,)), entropy=jnp.zeros((2,)),
+        cfg=cfg)[0])(log_pi)
+    # gradient descent (-g) moves log-ratios toward 0
+    assert float(g[0]) > 0.0 and float(g[1]) < 0.0
+
+
+def test_group_advantages_zero_mean_per_group():
+    rewards = jnp.asarray([1.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 0.0])
+    adv = group_advantages(rewards, group_size=4)
+    a = np.asarray(adv).reshape(2, 4)
+    np.testing.assert_allclose(a.mean(axis=1), 0.0, atol=1e-6)
+    # all-same-reward group gets ~zero advantage (std -> eps)
+    adv2 = group_advantages(jnp.ones((4,)), group_size=4)
+    np.testing.assert_allclose(np.asarray(adv2), 0.0, atol=1e-4)
+
+
+def test_grpo_token_loss_switches_mechanism():
+    log_pi = 0.4 * jax.random.normal(KEY, (2, 8))
+    log_beta = jnp.zeros((2, 8))
+    adv = jnp.asarray([1.0, -1.0])
+    mask = jnp.ones((2, 8))
+    _, aux_clip = grpo_token_loss(
+        log_pi=log_pi, log_beta=log_beta, advantages=adv, token_mask=mask,
+        cfg=GRPOConfig(use_vaco=False))
+    assert "clip_frac" in aux_clip
+    _, aux_vaco = grpo_token_loss(
+        log_pi=log_pi, log_beta=log_beta, advantages=adv, token_mask=mask,
+        cfg=GRPOConfig(use_vaco=True, delta=0.01))
+    assert "frac_filtered" in aux_vaco
+
+
+def test_vaco_respects_token_mask():
+    """Masked (padding) tokens contribute neither loss nor gradient."""
+    log_beta = jnp.zeros((8,))
+    adv = jnp.ones((8,))
+    mask = jnp.asarray([1.0] * 4 + [0.0] * 4)
+    cfg = VACOConfig(delta=1e9)
+
+    def loss(log_pi):
+        l, _ = vaco_policy_loss(log_pi=log_pi, log_beta=log_beta,
+                                advantages=adv, cfg=cfg, valid_mask=mask)
+        return l
+
+    lp = 0.3 * jax.random.normal(KEY, (8,))
+    g = jax.grad(loss)(lp)
+    assert bool(jnp.all(g[4:] == 0.0))
+    assert bool(jnp.any(g[:4] != 0.0))
+
+
+def test_vaco_total_loss_trains_value_head():
+    values = jnp.asarray([0.0, 1.0])
+    targets = jnp.asarray([1.0, 1.0])
+    loss, aux = vaco_total_loss(
+        log_pi=jnp.zeros((2,)), log_beta=jnp.zeros((2,)),
+        advantages=jnp.zeros((2,)), values=values, value_targets=targets,
+        cfg=VACOConfig())
+    np.testing.assert_allclose(float(aux["value_loss"]), 0.25, rtol=1e-6)
+
+
+def test_impala_loss_is_plain_pg():
+    """IMPALA policy loss gradient == -E[pg_adv * grad log_pi]."""
+    lp = 0.2 * jax.random.normal(KEY, (16,))
+    pg_adv = jax.random.normal(jax.random.PRNGKey(1), (16,))
+
+    g = jax.grad(lambda x: impala_total_loss(
+        log_pi=x, log_beta=jnp.zeros((16,)), pg_advantages=pg_adv,
+        values=jnp.zeros((16,)), value_targets=jnp.zeros((16,)),
+        entropy=jnp.zeros((16,)), cfg=IMPALAConfig(value_coef=0.0))[0])(lp)
+    np.testing.assert_allclose(np.asarray(g), -np.asarray(pg_adv) / 16,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_filter_vs_clip_distinct_behaviour_under_lag():
+    """Fig. 5's mechanism contrast: at small TV, PPO already clips some
+    samples while VACO filters none; at large TV, VACO filters a sizable
+    fraction."""
+    k1, k2 = jax.random.split(KEY)
+    adv = jax.random.normal(k2, (1, 512))
+    mask = jnp.ones((1, 512))
+    zeros = jnp.zeros((1, 512))
+
+    # Mild lag (TV ~ 0.06 < delta/2 = 0.1): a heavy-tailed ratio spread
+    # already trips PPO's clip on outliers, while VACO filters nothing.
+    mild = 0.15 * jax.random.normal(k1, (1, 512))
+    _, aux_v = grpo_token_loss(
+        log_pi=mild, log_beta=zeros, advantages=adv,
+        token_mask=mask, cfg=GRPOConfig(use_vaco=True, delta=0.2))
+    _, aux_p = grpo_token_loss(
+        log_pi=mild, log_beta=zeros, advantages=adv,
+        token_mask=mask, cfg=GRPOConfig(use_vaco=False))
+    assert float(aux_v["frac_filtered"]) == 0.0
+    assert float(aux_p["clip_frac"]) > 0.0
+
+    big = 0.8 * jax.random.normal(k1, (1, 512))    # heavy lag
+    _, aux_v2 = grpo_token_loss(
+        log_pi=big, log_beta=zeros, advantages=adv,
+        token_mask=mask, cfg=GRPOConfig(use_vaco=True, delta=0.2))
+    assert float(aux_v2["frac_filtered"]) > 0.2

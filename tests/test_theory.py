@@ -1,0 +1,164 @@
+"""Exact tabular-MDP validation of the paper's theoretical claims.
+
+The paper argues on paper; here we check numerically on random MDPs:
+
+* Lemma 3.1 (performance difference lemma) — exact equality.
+* Theorem 3.2 — the D^± bounds actually bracket J(pi') - J(pi).
+* Lemma 4.2 structure — at pi = pi_T the realigned surrogate and the
+  epsilon term both vanish (zero backward lag), while the Lemma 4.1
+  (PPO-style) surrogate is strictly penalized under mismatch.
+* Theorem B.2 — the V-trace operator is a contraction whose fixed point is
+  V_{pi_rho_bar}; rho_bar -> inf recovers V_pi.
+"""
+import numpy as np
+import pytest
+
+rng = np.random.default_rng(0)
+
+
+def random_mdp(S=6, A=4, gamma=0.9, seed=0):
+    r = np.random.default_rng(seed)
+    P = r.dirichlet(np.ones(S), size=(S, A))         # [S, A, S]
+    R = r.normal(size=(S, A))
+    mu = r.dirichlet(np.ones(S))
+    return P, R, mu, gamma
+
+
+def random_policy(S, A, seed, temp=1.0):
+    r = np.random.default_rng(seed)
+    logits = r.normal(size=(S, A)) / temp
+    e = np.exp(logits - logits.max(axis=1, keepdims=True))
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def value_of(pi, P, R, gamma):
+    S, A, _ = P.shape
+    P_pi = np.einsum("sa,sab->sb", pi, P)
+    r_pi = np.einsum("sa,sa->s", pi, R)
+    V = np.linalg.solve(np.eye(S) - gamma * P_pi, r_pi)
+    Q = R + gamma * np.einsum("sab,b->sa", P, V)
+    return V, Q
+
+
+def discounted_state_dist(pi, P, mu, gamma):
+    S = P.shape[0]
+    P_pi = np.einsum("sa,sab->sb", pi, P)
+    d = (1.0 - gamma) * np.linalg.solve(np.eye(S) - gamma * P_pi.T, mu)
+    return d
+
+
+def J_of(pi, P, R, mu, gamma):
+    V, _ = value_of(pi, P, R, gamma)
+    return float(mu @ V)
+
+
+def test_lemma_3_1_performance_difference_exact():
+    P, R, mu, gamma = random_mdp(seed=1)
+    pi = random_policy(6, 4, seed=2)
+    pi2 = random_policy(6, 4, seed=3)
+    V, Q = value_of(pi, P, R, gamma)
+    A = Q - V[:, None]
+    d2 = discounted_state_dist(pi2, P, mu, gamma)
+    lhs = J_of(pi2, P, R, mu, gamma) - J_of(pi, P, R, mu, gamma)
+    rhs = (1.0 / (1.0 - gamma)) * np.einsum("s,sa,sa->", d2, pi2, A)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-8, atol=1e-10)
+
+
+def test_theorem_3_2_bounds_bracket():
+    P, R, mu, gamma = random_mdp(seed=4)
+    pi = random_policy(6, 4, seed=5)
+    pi2 = random_policy(6, 4, seed=6, temp=2.0)
+    V, Q = value_of(pi, P, R, gamma)
+    A = Q - V[:, None]
+    d = discounted_state_dist(pi, P, mu, gamma)
+    # L_pi(pi') as in Eq. 5 (note: paper folds 1/(1-gamma) differently in
+    # Thm 3.2; we use the explicit Eq. 30 decomposition).
+    surrogate = np.einsum("s,sa,sa->", d, pi2, A)
+    eps = np.max(np.abs(np.einsum("sa,sa->s", pi2, A)))
+    tv = 0.5 * np.abs(pi2 - pi).sum(axis=1)
+    penalty = (2.0 * gamma * eps / (1.0 - gamma)) * float(d @ tv)
+    lhs = J_of(pi2, P, R, mu, gamma) - J_of(pi, P, R, mu, gamma)
+    lo = (surrogate - penalty) / (1.0 - gamma)
+    hi = (surrogate + penalty) / (1.0 - gamma)
+    assert lo - 1e-9 <= lhs <= hi + 1e-9
+
+
+def test_bounds_tight_at_equal_policies():
+    P, R, mu, gamma = random_mdp(seed=7)
+    pi = random_policy(6, 4, seed=8)
+    V, Q = value_of(pi, P, R, gamma)
+    A = Q - V[:, None]
+    d = discounted_state_dist(pi, P, mu, gamma)
+    surrogate = np.einsum("s,sa,sa->", d, pi, A)
+    eps = np.max(np.abs(np.einsum("sa,sa->s", pi, A)))
+    np.testing.assert_allclose(surrogate, 0.0, atol=1e-10)
+    np.testing.assert_allclose(eps, 0.0, atol=1e-10)
+
+
+def test_lemma_4_2_zero_backward_lag():
+    """Realigned surrogate (A_{pi_T}) vanishes at pi = pi_T even under an
+    off-policy state/action distribution beta_T — while the Lemma 4.1
+    behavioral-advantage surrogate does not."""
+    P, R, mu, gamma = random_mdp(seed=9)
+    pi_T = random_policy(6, 4, seed=10)
+    beta = random_policy(6, 4, seed=11)  # mixture stand-in, beta != pi_T
+    d_b = discounted_state_dist(beta, P, mu, gamma)
+
+    V_T, Q_T = value_of(pi_T, P, R, gamma)
+    A_T = Q_T - V_T[:, None]
+    # Realigned surrogate at pi = pi_T:
+    #   E_{s~d^beta, a~beta}[ (pi_T/beta) A_{pi_T} ] = E_{a~pi_T}[A_{pi_T}] = 0
+    realigned = np.einsum("s,sa,sa->", d_b, pi_T, A_T)
+    np.testing.assert_allclose(realigned, 0.0, atol=1e-10)
+    # epsilon^{pi_T} with realigned advantage is exactly 0 as well:
+    eps = np.max(np.abs(np.einsum("sa,sa->s", pi_T, A_T)))
+    np.testing.assert_allclose(eps, 0.0, atol=1e-10)
+
+    # The behavioral (Lemma 4.1) surrogate generally is NOT zero:
+    V_b, Q_b = value_of(beta, P, R, gamma)
+    A_b = Q_b - V_b[:, None]
+    behavioral = np.einsum("s,sa,sa->", d_b, pi_T, A_b)
+    assert abs(behavioral) > 1e-6
+
+
+def vtrace_operator(V, pi, beta, P, R, gamma, rho_bar, c_bar, iters=1):
+    """Exact expected one-step V-trace backup (Eq. 37 in expectation)."""
+    ratio = pi / beta
+    rho = np.minimum(rho_bar, ratio)
+    for _ in range(iters):
+        TD = R + gamma * np.einsum("sab,b->sa", P, V) - V[:, None]
+        V = V + np.einsum("sa,sa,sa->s", beta, rho, TD)
+    return V
+
+
+def test_theorem_b2_vtrace_fixed_point():
+    P, R, mu, gamma = random_mdp(seed=12)
+    pi = random_policy(6, 4, seed=13)
+    beta = random_policy(6, 4, seed=14)
+
+    for rho_bar in (1.0, 1e6):
+        # pi_rho_bar from Eq. 38.
+        unnorm = np.minimum(rho_bar * beta, pi)
+        pi_rho = unnorm / unnorm.sum(axis=1, keepdims=True)
+        V_target, _ = value_of(pi_rho, P, R, gamma)
+
+        V = np.zeros(P.shape[0])
+        for _ in range(3000):
+            V = vtrace_operator(V, pi, beta, P, R, gamma, rho_bar, rho_bar)
+        np.testing.assert_allclose(V, V_target, rtol=1e-5, atol=1e-6)
+
+
+def test_vtrace_contraction_rate():
+    """||R V1 - R V2||_inf <= eta ||V1 - V2||_inf with eta < 1."""
+    P, R, mu, gamma = random_mdp(seed=15)
+    pi = random_policy(6, 4, seed=16)
+    beta = random_policy(6, 4, seed=17)
+    r = np.random.default_rng(18)
+    V1 = r.normal(size=6)
+    V2 = r.normal(size=6)
+    RV1 = vtrace_operator(V1.copy(), pi, beta, P, R, gamma, 1.0, 1.0)
+    RV2 = vtrace_operator(V2.copy(), pi, beta, P, R, gamma, 1.0, 1.0)
+    alpha = np.min(np.einsum("sa,sa->s", beta, np.minimum(1.0, pi / beta)))
+    eta = 1.0 - (1.0 - gamma) * alpha
+    assert np.max(np.abs(RV1 - RV2)) <= eta * np.max(np.abs(V1 - V2)) + 1e-12
+    assert eta < 1.0

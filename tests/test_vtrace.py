@@ -1,0 +1,98 @@
+"""V-trace advantage realignment: scan vs O(T^2) oracle, GAE identity,
+IMPALA pg-advantage, and fixed-point behaviour on a tabular MDP."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vtrace import (
+    naive_vtrace,
+    vtrace,
+    vtrace_impala_pg_advantage,
+)
+from repro.core.gae import gae
+
+
+def _random_inputs(key, B=4, T=13):
+    ks = jax.random.split(key, 5)
+    log_ratios = 0.5 * jax.random.normal(ks[0], (B, T))
+    values = jax.random.normal(ks[1], (B, T))
+    bootstrap = jax.random.normal(ks[2], (B,))
+    rewards = jax.random.normal(ks[3], (B, T))
+    dones = jax.random.bernoulli(ks[4], 0.1, (B, T))
+    discounts = 0.99 * (1.0 - dones.astype(jnp.float32))
+    return log_ratios, values, bootstrap, rewards, discounts
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("rho_bar,c_bar,lam", [(1.0, 1.0, 1.0),
+                                               (2.0, 1.0, 0.95),
+                                               (1e9, 1e9, 1.0)])
+def test_scan_matches_naive(seed, rho_bar, c_bar, lam):
+    lr, v, bv, r, d = _random_inputs(jax.random.PRNGKey(seed))
+    fast = vtrace(log_ratios=lr, values=v, bootstrap_value=bv, rewards=r,
+                  discounts=d, rho_bar=rho_bar, c_bar=c_bar, lam=lam)
+    slow = naive_vtrace(log_ratios=lr, values=v, bootstrap_value=bv,
+                        rewards=r, discounts=d, rho_bar=rho_bar,
+                        c_bar=c_bar, lam=lam)
+    np.testing.assert_allclose(fast.vs, slow.vs, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(fast.advantages, slow.advantages,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_on_policy_reduces_to_gae():
+    """log_ratios == 0 and unclipped rho/c: V-trace == GAE targets."""
+    _, v, bv, r, d = _random_inputs(jax.random.PRNGKey(3))
+    lam = 0.95
+    out = vtrace(log_ratios=jnp.zeros_like(v), values=v, bootstrap_value=bv,
+                 rewards=r, discounts=d, rho_bar=1e9, c_bar=1e9, lam=lam)
+    ref = gae(values=v, bootstrap_value=bv, rewards=r, discounts=d, lam=lam)
+    np.testing.assert_allclose(out.vs, ref.returns, rtol=1e-5, atol=1e-5)
+
+
+def test_on_policy_advantage_is_one_step_td_of_vs():
+    """Eq. 15: A = r + gamma*v_{t+1} - V(s_t)."""
+    lr, v, bv, r, d = _random_inputs(jax.random.PRNGKey(4))
+    out = vtrace(log_ratios=lr, values=v, bootstrap_value=bv, rewards=r,
+                 discounts=d)
+    vs_tp1 = jnp.concatenate([out.vs[:, 1:], bv[:, None]], axis=1)
+    np.testing.assert_allclose(out.advantages, r + d * vs_tp1 - v,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rho_clipping_monotone():
+    """Lower rho_bar shrinks |correction| towards the raw values."""
+    lr, v, bv, r, d = _random_inputs(jax.random.PRNGKey(5))
+    lr = jnp.abs(lr) + 0.5  # ratios well above 1 so clipping binds
+    small = vtrace(log_ratios=lr, values=v, bootstrap_value=bv, rewards=r,
+                   discounts=d, rho_bar=0.5, c_bar=0.5)
+    large = vtrace(log_ratios=lr, values=v, bootstrap_value=bv, rewards=r,
+                   discounts=d, rho_bar=4.0, c_bar=4.0)
+    assert float(jnp.mean(jnp.abs(small.vs - v))) <= float(
+        jnp.mean(jnp.abs(large.vs - v))) + 1e-6
+
+
+def test_impala_pg_advantage_shape_and_onpolicy_match():
+    lr, v, bv, r, d = _random_inputs(jax.random.PRNGKey(6))
+    out = vtrace(log_ratios=jnp.zeros_like(lr), values=v, bootstrap_value=bv,
+                 rewards=r, discounts=d)
+    pg = vtrace_impala_pg_advantage(
+        out, rewards=r, discounts=d, values=v, bootstrap_value=bv,
+        log_ratios=jnp.zeros_like(lr))
+    assert pg.shape == r.shape
+    # On-policy: rho == 1, so pg advantage == A_vtrace.
+    np.testing.assert_allclose(pg, out.advantages, rtol=1e-6, atol=1e-6)
+
+
+def test_jit_and_grad_safety():
+    lr, v, bv, r, d = _random_inputs(jax.random.PRNGKey(7))
+
+    @jax.jit
+    def f(values):
+        out = vtrace(log_ratios=lr, values=values, bootstrap_value=bv,
+                     rewards=r, discounts=d)
+        return jnp.sum(out.vs)
+
+    g = jax.grad(f)(v)
+    assert g.shape == v.shape
+    assert bool(jnp.all(jnp.isfinite(g)))
