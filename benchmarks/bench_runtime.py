@@ -1,0 +1,98 @@
+"""Runtime throughput: threaded producer vs phase-locked collection.
+
+The point of the async runtime is overlap — the producer generates the
+next trajectory while the learner is still updating on the previous one.
+This benchmark runs the identical workload (same env, actors, steps,
+algorithm, phase count) under the phase-locked ``backward_mixture``
+regime and the concurrent ``threaded`` regime and reports environment
+steps per second for each plus the overlap speedup.
+
+    PYTHONPATH=src python -m benchmarks.bench_runtime [--phases N]
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import tempfile
+import time
+from typing import Dict
+
+import jax
+
+from repro.train.runner_rl import AsyncRLRunConfig, run_async_rl
+
+
+@contextlib.contextmanager
+def _compilation_cache():
+    """Persist XLA executables so the warm run actually warms the timed
+    run: each run_async_rl builds fresh jit wrappers (whose per-wrapper
+    caches are useless across calls), but the persistent cache is keyed
+    on the HLO fingerprint and is shared.  Restores the global config on
+    exit so later benchmarks in the same process measure under the
+    default (non-persisting) conditions."""
+    names = ("jax_compilation_cache_dir",
+             "jax_persistent_cache_min_compile_time_secs")
+    try:
+        saved = {n: getattr(jax.config, n) for n in names}
+        jax.config.update(names[0], tempfile.mkdtemp())
+        jax.config.update(names[1], 0.0)
+    except Exception:
+        yield  # older jax: timings will include trace+compile
+        return
+    try:
+        yield
+    finally:
+        for n, v in saved.items():
+            jax.config.update(n, v)
+
+
+def run(
+    *,
+    phases: int = 8,
+    n_actors: int = 8,
+    rollout_steps: int = 64,
+    algorithm: str = "vaco",
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Returns {regime: env_steps_per_sec} plus the threaded speedup."""
+    out: Dict[str, float] = {}
+    with _compilation_cache():
+        for regime in ("backward_mixture", "threaded"):
+            cfg = AsyncRLRunConfig(
+                env_name="pendulum", algorithm=algorithm,
+                buffer_capacity=4, n_actors=n_actors,
+                rollout_steps=rollout_steps, total_phases=phases,
+                seed=seed, runtime=regime, get_timeout=120.0,
+            )
+            # Warm run populates the persistent executable cache, so the
+            # timed run re-traces but skips XLA compilation.
+            run_async_rl(AsyncRLRunConfig(**{**cfg.__dict__,
+                                             "total_phases": 2}))
+            t0 = time.perf_counter()
+            res = run_async_rl(cfg)
+            dt = time.perf_counter() - t0
+            env_steps = len(res.returns) * n_actors * rollout_steps
+            out[regime] = env_steps / dt
+    out["threaded_speedup"] = (
+        out["threaded"] / out["backward_mixture"]
+        if out["backward_mixture"] else 0.0
+    )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--phases", type=int, default=8)
+    ap.add_argument("--n-actors", type=int, default=8)
+    ap.add_argument("--rollout-steps", type=int, default=64)
+    ap.add_argument("--algorithm", default="vaco")
+    args = ap.parse_args()
+    res = run(phases=args.phases, n_actors=args.n_actors,
+              rollout_steps=args.rollout_steps, algorithm=args.algorithm)
+    for k, v in res.items():
+        unit = "x" if k == "threaded_speedup" else " env steps/s"
+        print(f"{k:18s} {v:10.1f}{unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -94,6 +94,23 @@ def bench_fig11_tv(fast: bool) -> None:
          + ";vaco_target=0.100")
 
 
+def bench_runtime_throughput(fast: bool) -> None:
+    """Threaded vs phase-locked actor-learner throughput."""
+    from benchmarks.bench_runtime import run
+
+    t0 = time.perf_counter()
+    res = run(
+        phases=4 if fast else 8,
+        n_actors=4 if fast else 8,
+        rollout_steps=32 if fast else 64,
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    _row("runtime_throughput", us,
+         f"phase_locked={res['backward_mixture']:.0f}sps;"
+         f"threaded={res['threaded']:.0f}sps;"
+         f"speedup={res['threaded_speedup']:.2f}x")
+
+
 def bench_theory() -> None:
     """Appendix B numerical validation (tabular MDP) as a benchmark."""
     t0 = time.perf_counter()
@@ -146,6 +163,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_kernels()
     bench_theory()
+    bench_runtime_throughput(fast)
     bench_fig11_tv(fast)
     bench_fig4_sample_efficiency(fast)
     bench_fig3_backward_lag(fast)

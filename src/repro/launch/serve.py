@@ -8,6 +8,11 @@ Loads a checkpoint when given (--checkpoint), else serves random init —
 the point on this host is exercising the prefill + KV-cache decode
 engine; on TPU the same ``generate`` runs under the production mesh with
 the serve_step shardings proven by the dry-run.
+
+``--runtime versioned`` routes the weights through the async runtime's
+versioned PolicyStore — the serve loop pulls ``store.latest()`` exactly
+like the threaded regime's producer does, and reports the policy version
+it served so generated data can be staleness-tagged downstream.
 """
 from __future__ import annotations
 
@@ -30,6 +35,10 @@ def main(argv=None) -> int:
     ap.add_argument("--level", type=int, default=0)
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--runtime", default="direct",
+                    choices=["direct", "versioned"],
+                    help="versioned: serve through the PolicyStore "
+                         "(staleness-taggable actor side of the runtime)")
     args = ap.parse_args(argv)
 
     from repro.configs import reduced_config
@@ -42,10 +51,25 @@ def main(argv=None) -> int:
     tok = get_tokenizer()
     cfg = reduced_config(args.arch, vocab=tok.vocab_size)
     bundle = build(cfg)
-    params = bundle.init(jax.random.PRNGKey(args.seed))
+    init_params = bundle.init(jax.random.PRNGKey(args.seed))
+    params = init_params
     if args.checkpoint:
         params, step, meta = load_checkpoint(args.checkpoint, params)
         print(f"loaded checkpoint step={step} meta={meta}")
+
+    behavior_version = None
+    if args.runtime == "versioned":
+        from repro.runtime import PolicyStore
+
+        # v0 is the true random init; the checkpoint (if any) becomes v1.
+        store = PolicyStore(init_params, capacity=2,
+                            meta={"source": "init"})
+        if args.checkpoint:
+            store.publish(params, source="checkpoint",
+                          checkpoint=args.checkpoint)
+        params, behavior_version = store.latest()
+        print(f"serving policy version {behavior_version} "
+              f"(retained: {store.retained_versions()})")
 
     ds = MathTaskDataset(prompt_len=32, level=args.level,
                          seed=args.seed + 1)
@@ -64,8 +88,10 @@ def main(argv=None) -> int:
     jax.block_until_ready(res.tokens)
     dt = time.time() - t0
     n_tok = args.batch * args.max_new_tokens
+    tag = ("" if behavior_version is None
+           else f" [policy v{behavior_version}]")
     print(f"decode: {n_tok} tokens in {dt*1e3:.1f} ms "
-          f"({n_tok/dt:.0f} tok/s on this host)")
+          f"({n_tok/dt:.0f} tok/s on this host){tag}")
 
     comp = np.asarray(res.completion)
     for i in range(min(args.batch, 8)):

@@ -1,15 +1,23 @@
 """Training launcher.
 
-Two modes, matching the paper's two experimental regimes:
+Two modes, matching the paper's two experimental regimes, both running on
+the unified async actor-learner runtime (``--runtime`` selects the lag
+regime, ``--admission`` the queue's data-admission policy):
 
   # classic RL (simulated-async MuJoCo-analog, §5.1)
   PYTHONPATH=src python -m repro.launch.train rl \\
-      --env pendulum --algorithm vaco --buffer-capacity 4 --phases 30
+      --env pendulum --algorithm vaco --buffer-capacity 4 --phases 30 \\
+      --runtime backward_mixture
+
+  # genuinely concurrent producer thread + TV-gated admission
+  PYTHONPATH=src python -m repro.launch.train rl \\
+      --env pendulum --algorithm vaco --runtime threaded \\
+      --admission tv_gate --phases 30
 
   # RLVR (forward-lag GRPO/VACO, §5.2) on a reduced assigned arch
   PYTHONPATH=src python -m repro.launch.train rlvr \\
       --arch qwen2.5-0.5b --algorithm grpo_vaco --n-minibatches 8 \\
-      --phases 20
+      --phases 20 --runtime forward_n
 
 On a real TPU cluster the same entry point runs under
 ``jax.distributed.initialize()`` with the production mesh from
@@ -22,6 +30,21 @@ import json
 import sys
 
 import jax
+
+
+def _add_runtime_args(p, *, regimes, default_regime) -> None:
+    p.add_argument("--runtime", default=default_regime, choices=regimes,
+                   help="lag regime driving the actor-learner runtime")
+    p.add_argument("--admission", default="pass_through",
+                   choices=["pass_through", "max_lag", "tv_gate"],
+                   help="trajectory-queue admission policy")
+    p.add_argument("--max-lag", type=int, default=4,
+                   help="max_lag admission: drop items older than this")
+    p.add_argument("--admission-mode", default="drop",
+                   choices=["drop", "downweight"],
+                   help="tv_gate: drop over-threshold items or downweight")
+    p.add_argument("--queue-maxsize", type=int, default=4,
+                   help="bounded queue size (threaded backpressure)")
 
 
 def main(argv=None) -> int:
@@ -38,7 +61,12 @@ def main(argv=None) -> int:
     rl.add_argument("--phases", type=int, default=30)
     rl.add_argument("--seed", type=int, default=0)
     rl.add_argument("--delta", type=float, default=0.2)
+    rl.add_argument("--forward-n", type=int, default=4,
+                    help="items per frozen policy (forward_n regime)")
     rl.add_argument("--checkpoint-dir", default=None)
+    _add_runtime_args(
+        rl, regimes=["backward_mixture", "forward_n", "threaded"],
+        default_regime="backward_mixture")
 
     rv = sub.add_parser("rlvr", help="forward-lag RLVR (§5.2)")
     rv.add_argument("--arch", default="qwen2.5-0.5b")
@@ -52,6 +80,9 @@ def main(argv=None) -> int:
     rv.add_argument("--seed", type=int, default=0)
     rv.add_argument("--delta", type=float, default=0.05)
     rv.add_argument("--checkpoint-dir", default=None)
+    _add_runtime_args(
+        rv, regimes=["forward_n", "threaded"],
+        default_regime="forward_n")
 
     args = ap.parse_args(argv)
 
@@ -65,10 +96,16 @@ def main(argv=None) -> int:
             n_actors=args.n_actors, rollout_steps=args.rollout_steps,
             total_phases=args.phases, seed=args.seed,
             hp=RLHyperparams(delta=args.delta),
+            runtime=args.runtime, forward_n=args.forward_n,
+            queue_maxsize=args.queue_maxsize,
+            admission=args.admission, max_lag=args.max_lag,
+            admission_mode=args.admission_mode,
         ))
         print(json.dumps({
+            "runtime": args.runtime,
             "returns": res.returns,
             "final_tv": res.final_tv,
+            "runtime_stats": res.runtime_stats,
         }, indent=1))
         return 0
 
@@ -87,6 +124,9 @@ def main(argv=None) -> int:
     hp = RLVRHyperparams(
         algorithm=args.algorithm, n_minibatches=args.n_minibatches,
         warmup_steps=args.warmup_steps, delta=args.delta,
+        runtime=args.runtime, queue_maxsize=args.queue_maxsize,
+        admission=args.admission, max_lag=args.max_lag,
+        admission_mode=args.admission_mode,
     )
     trainer = RLVRTrainer(bundle, ds, hp, seed=args.seed)
     wl = trainer.warmup()
@@ -95,9 +135,11 @@ def main(argv=None) -> int:
     print(json.dumps({
         "arch": cfg.name,
         "algorithm": args.algorithm,
+        "runtime": args.runtime,
         "n_minibatches": args.n_minibatches,
         "eval_accuracy": res.eval_accuracy,
         "final_tv": res.phase_logs[-1].tv if res.phase_logs else None,
+        "runtime_stats": res.runtime_stats,
     }, indent=1))
     if args.checkpoint_dir:
         path = save_checkpoint(

@@ -7,6 +7,11 @@ from repro.metrics.aggregate import (
     stratified_bootstrap_ci,
     minmax_normalize,
 )
+from repro.metrics.runtime_metrics import (
+    LagHistogram,
+    RuntimeQueueStats,
+    collect_runtime_stats,
+)
 
 __all__ = [
     "iqm",
@@ -16,4 +21,7 @@ __all__ = [
     "aggregate_metrics",
     "stratified_bootstrap_ci",
     "minmax_normalize",
+    "LagHistogram",
+    "RuntimeQueueStats",
+    "collect_runtime_stats",
 ]

@@ -1,0 +1,70 @@
+"""Observability for the async actor-learner runtime.
+
+Per-version lag histograms, queue depth, and admission-drop rates — the
+paper's Fig. 1 "degree of asynchronicity" made measurable on a live run
+instead of being a configuration constant.  Everything is host-side
+Python (no jax), cheap enough to update on every queue operation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict
+
+
+class LagHistogram:
+    """Counter over integer policy lags (learner_version - behavior_version)."""
+
+    def __init__(self) -> None:
+        self._counts: Dict[int, int] = {}
+
+    def record(self, lag: int, n: int = 1) -> None:
+        lag = int(lag)
+        self._counts[lag] = self._counts.get(lag, 0) + n
+
+    def snapshot(self) -> Dict[int, int]:
+        return dict(sorted(self._counts.items()))
+
+
+@dataclass(frozen=True)
+class RuntimeQueueStats:
+    """One consistent snapshot of a TrajectoryQueue's counters."""
+
+    depth: int
+    puts: int
+    admitted: int
+    dropped: int
+    downweighted: int
+    admission_drop_rate: float
+    drops_by_reason: Dict[str, int] = field(default_factory=dict)
+    lag_histogram: Dict[int, int] = field(default_factory=dict)
+
+    def as_dict(self) -> Dict[str, Any]:
+        return {
+            "depth": self.depth,
+            "puts": self.puts,
+            "admitted": self.admitted,
+            "dropped": self.dropped,
+            "downweighted": self.downweighted,
+            "admission_drop_rate": self.admission_drop_rate,
+            "drops_by_reason": dict(self.drops_by_reason),
+            "lag_histogram": {
+                str(k): v for k, v in self.lag_histogram.items()
+            },
+        }
+
+
+def collect_runtime_stats(store: Any, queue: Any) -> Dict[str, Any]:
+    """Joined store+queue view, JSON-ready, for launchers and examples."""
+    stats = queue.stats()
+    hist = stats.lag_histogram
+    total = sum(hist.values())
+    mean_lag = (
+        sum(k * v for k, v in hist.items()) / total if total else 0.0
+    )
+    return {
+        "policy_version": store.version,
+        "retained_versions": store.retained_versions(),
+        "queue": stats.as_dict(),
+        "mean_lag": mean_lag,
+        "max_lag": max(hist) if hist else 0,
+    }

@@ -9,6 +9,7 @@ from repro.rollout.async_engine import (
     SimulatedAsyncActors,
     ForwardLagGenerator,
     ForwardLagBatch,
+    RLVRMinibatch,
 )
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "SimulatedAsyncActors",
     "ForwardLagGenerator",
     "ForwardLagBatch",
+    "RLVRMinibatch",
 ]

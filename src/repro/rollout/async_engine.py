@@ -1,45 +1,38 @@
-"""Asynchronous actor-learner simulators for both experimental regimes.
+"""Back-compat adapters over the asynchronous actor-learner runtime.
 
-*Backward lag* (§5.1, Fig. 1 left): ``SimulatedAsyncActors`` owns the
-policy buffer; each collection phase samples one stale policy per actor
-and rolls the vectorized environments — yielding the episodic-mixture
-behavior policy β_T of Eq. 1 with a controllable degree of asynchronicity
-(the buffer capacity K).
+The two phase-locked simulators that used to live here are now thin
+veneers over ``repro.runtime`` (versioned :class:`PolicyStore`,
+staleness-tagged :class:`TrajectoryQueue`, pluggable lag regimes):
 
-*Forward lag* (§5.2): ``ForwardLagGenerator`` freezes the current policy,
-generates N minibatches of completions with the serve engine, and hands
-them to the learner one per update — by minibatch k the learner is k
-updates ahead of the data's behavior policy, reproducing the paper's
-N-minibatch protocol (Noukhovitch et al., 2025 style).
+* ``SimulatedAsyncActors`` — the §5.1 backward-lag mixture.  Owns a
+  PolicyStore whose ring is the old ``PolicyBuffer`` and a
+  :class:`MixtureRolloutProducer` with the identical jitted collect
+  graph, so existing runs are bit-for-bit unchanged.
+* ``ForwardLagGenerator`` — the §5.2 generate-N/train-N protocol.  Its
+  ``generate_minibatch`` is the producer callable the forward_n and
+  threaded regimes drive; ``generate_phase`` remains as the legacy
+  phase-locked surface.
 
-Both are thin, jit-friendly coordinators over repro.core.policy_lag,
-repro.rollout.env_rollout and repro.rollout.sampler.
+New code should use ``repro.runtime`` directly (see
+``examples/async_runtime.py``).
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.policy_lag import (
-    PolicyBuffer,
-    buffer_init,
-    buffer_push,
-    buffer_sample,
-)
 from repro.envs.base import Env
-from repro.rollout.env_rollout import (
-    RolloutBatch,
-    collect_rollout,
-    init_env_states,
-)
+from repro.rollout.env_rollout import RolloutBatch
 from repro.rollout.sampler import GenerationResult, generate
+from repro.runtime.policy_store import PolicyStore
 
 
 class SimulatedAsyncActors:
-    """Policy-buffer actors over vectorized pure-JAX environments."""
+    """Policy-ring actors over vectorized pure-JAX environments (adapter)."""
 
     def __init__(
         self,
@@ -52,42 +45,33 @@ class SimulatedAsyncActors:
         rollout_steps: int,
         seed: int = 0,
     ) -> None:
+        # Imported here: regimes imports rollout.env_rollout, whose package
+        # __init__ re-exports this module (a cycle at import time only).
+        from repro.runtime.regimes import MixtureRolloutProducer
+
         self.env = env
         self.n_actors = n_actors
         self.rollout_steps = rollout_steps
-        self._key = jax.random.PRNGKey(seed)
-        self.buffer: PolicyBuffer = buffer_init(init_params, buffer_capacity)
-        self._env_states = init_env_states(
-            env, self._next_key(), n_actors
+        self.store = PolicyStore(init_params, buffer_capacity)
+        self._producer = MixtureRolloutProducer(
+            env, policy_apply,
+            n_actors=n_actors, rollout_steps=rollout_steps, seed=seed,
         )
 
-        def _collect(buffer, env_states, key):
-            k_sample, k_roll = jax.random.split(key)
-            actor_params, slots = buffer_sample(buffer, k_sample, n_actors)
-            env_states, batch = collect_rollout(
-                env, policy_apply, actor_params, env_states, k_roll,
-                rollout_steps,
-            )
-            return env_states, batch, slots
+    @property
+    def buffer(self):
+        """The underlying jit-friendly policy ring (legacy attribute)."""
+        return self.store.buffer
 
-        self._collect = jax.jit(_collect)
-
-    def _next_key(self) -> jax.Array:
-        self._key, k = jax.random.split(self._key)
-        return k
-
-    def push_policy(self, params: Any) -> None:
+    def push_policy(self, params: Any) -> int:
         """Learner publishes a new policy snapshot (end of train phase)."""
-        self.buffer = buffer_push(self.buffer, params)
+        return self.store.publish(params)
 
     def collect(self) -> Tuple[RolloutBatch, jax.Array]:
         """One collection phase: every actor re-samples a stale policy and
         rolls `rollout_steps` steps.  Returns (batch, sampled buffer slots).
         """
-        self._env_states, batch, slots = self._collect(
-            self.buffer, self._env_states, self._next_key()
-        )
-        return batch, slots
+        return self._producer(self.store.buffer)
 
 
 class ForwardLagBatch(NamedTuple):
@@ -97,8 +81,16 @@ class ForwardLagBatch(NamedTuple):
     staleness: int             # updates the learner is ahead when consumed
 
 
+class RLVRMinibatch(NamedTuple):
+    """One generated+verified minibatch — the TrajectoryQueue payload."""
+
+    gen: GenerationResult
+    rewards: jax.Array
+    answers: List[str]
+
+
 class ForwardLagGenerator:
-    """Generate-N-then-train-N protocol for RLVR (§5.2)."""
+    """Serve-side producer for RLVR (§5.2): generation + verification."""
 
     def __init__(
         self,
@@ -119,6 +111,10 @@ class ForwardLagGenerator:
         self.group_size = completions_per_prompt
         self.max_new_tokens = max_new_tokens
         self._key = jax.random.PRNGKey(seed)
+        # Under the threaded regime, generation (producer thread) and
+        # eval (learner thread) share this key chain; split-then-store
+        # is not atomic, so serialize it.
+        self._key_lock = threading.Lock()
 
         def _gen(params, prompt_tokens, key):
             return generate(
@@ -127,39 +123,61 @@ class ForwardLagGenerator:
             )
 
         self._gen = jax.jit(_gen)
+        # Greedy eval decode, jitted once at construction (repeated evals
+        # must not re-trace).
+        self._eval_gen = jax.jit(
+            lambda p, t, k: generate(
+                bundle, p, t, k,
+                max_new_tokens=max_new_tokens, temperature=1e-4,
+            )
+        )
 
     def _next_key(self) -> jax.Array:
-        self._key, k = jax.random.split(self._key)
+        with self._key_lock:
+            self._key, k = jax.random.split(self._key)
         return k
+
+    def generate_minibatch(self, params: Any) -> RLVRMinibatch:
+        """Sample prompts, generate grouped completions, verify rewards.
+
+        This is the producer callable the runtime regimes drive; the key
+        chain advances once per call, so N sequential calls reproduce the
+        legacy ``generate_phase`` exactly.
+        """
+        from repro.data.mathgen import verify
+
+        tok = self.dataset.tok
+        toks_np, _, answers = self.dataset.sample_batch(
+            self.prompts_per_minibatch
+        )
+        # Group: repeat each prompt G times (GRPO groups contiguous).
+        toks_np = np.repeat(toks_np, self.group_size, axis=0)
+        answers = [a for a in answers for _ in range(self.group_size)]
+        gen = self._gen(params, jnp.asarray(toks_np), self._next_key())
+        comp_np = np.asarray(gen.completion)
+        rewards = jnp.asarray(
+            [
+                verify(tok.decode(row), ans)
+                for row, ans in zip(comp_np, answers)
+            ],
+            jnp.float32,
+        )
+        return RLVRMinibatch(gen=gen, rewards=rewards, answers=answers)
 
     def generate_phase(self, params: Any) -> List[ForwardLagBatch]:
         """Freeze `params` as β and produce N minibatches of labeled data.
 
         Minibatch k will be trained on after k prior updates — its
         ``staleness`` field records the forward lag at consumption time.
+        (Legacy phase-locked surface; the runtime's forward_n regime
+        drives ``generate_minibatch`` directly.)
         """
-        from repro.data.mathgen import verify
-
         out: List[ForwardLagBatch] = []
-        tok = self.dataset.tok
         for k in range(self.n_minibatches):
-            toks_np, _, answers = self.dataset.sample_batch(
-                self.prompts_per_minibatch
-            )
-            # Group: repeat each prompt G times (GRPO groups contiguous).
-            toks_np = np.repeat(toks_np, self.group_size, axis=0)
-            answers = [a for a in answers for _ in range(self.group_size)]
-            gen = self._gen(params, jnp.asarray(toks_np), self._next_key())
-            comp_np = np.asarray(gen.completion)
-            rewards = jnp.asarray(
-                [
-                    verify(tok.decode(row), ans)
-                    for row, ans in zip(comp_np, answers)
-                ],
-                jnp.float32,
-            )
+            mb = self.generate_minibatch(params)
             out.append(ForwardLagBatch(
-                gen=gen, rewards=rewards, answers=answers, staleness=k,
+                gen=mb.gen, rewards=mb.rewards, answers=mb.answers,
+                staleness=k,
             ))
         return out
 
@@ -168,12 +186,9 @@ class ForwardLagGenerator:
         from repro.data.mathgen import verify
 
         toks_np, _, answers = self.dataset.eval_batch(n)
-        gen = jax.jit(
-            lambda p, t, k: generate(
-                self.bundle, p, t, k,
-                max_new_tokens=self.max_new_tokens, temperature=1e-4,
-            )
-        )(params, jnp.asarray(toks_np), self._next_key())
+        gen = self._eval_gen(
+            params, jnp.asarray(toks_np), self._next_key()
+        )
         comp = np.asarray(gen.completion)
         hits = [
             verify(self.dataset.tok.decode(row), ans)

@@ -1,0 +1,55 @@
+"""Asynchronous actor-learner runtime.
+
+One subsystem behind both of the paper's experimental regimes (and a
+genuinely concurrent third): a versioned :class:`PolicyStore` that
+learners publish to and actors sample from, a staleness-tagged
+:class:`TrajectoryQueue` with pluggable admission control at the queue
+boundary, and three interchangeable lag regimes driving the same API.
+"""
+from repro.runtime.admission import (
+    AdmissionDecision,
+    AdmissionPolicy,
+    MaxLagEviction,
+    PassThrough,
+    TVGatedAdmission,
+    make_admission,
+)
+from repro.runtime.policy_store import (
+    PolicyStore,
+    SnapshotMeta,
+    StaleVersionError,
+)
+from repro.runtime.queue import QueueClosed, TrajectoryItem, TrajectoryQueue
+from repro.runtime.regimes import (
+    REGIMES,
+    BackwardMixtureRegime,
+    ForwardNRegime,
+    FrozenRolloutProducer,
+    LagRegime,
+    MixtureRolloutProducer,
+    ThreadedRegime,
+    make_regime,
+)
+
+__all__ = [
+    "AdmissionDecision",
+    "AdmissionPolicy",
+    "MaxLagEviction",
+    "PassThrough",
+    "TVGatedAdmission",
+    "make_admission",
+    "PolicyStore",
+    "SnapshotMeta",
+    "StaleVersionError",
+    "QueueClosed",
+    "TrajectoryItem",
+    "TrajectoryQueue",
+    "REGIMES",
+    "BackwardMixtureRegime",
+    "ForwardNRegime",
+    "FrozenRolloutProducer",
+    "LagRegime",
+    "MixtureRolloutProducer",
+    "ThreadedRegime",
+    "make_regime",
+]

@@ -1,0 +1,125 @@
+"""Admission policies for the trajectory queue (§4.2 at the queue boundary).
+
+The paper applies its TV gate per minibatch inside the loss (Alg. 1 /
+``core.tv_filter``).  Here the same estimator guards the *queue boundary*:
+whole trajectories whose measured TV against the current policy already
+exceeds delta/2 are dropped (or downweighted) before they ever reach the
+learner — staleness as a queue/controller property rather than a per-loss
+afterthought (GAC; Stable Asynchrony).
+
+Policies are evaluated at *consume* time, when the learner's version — and
+hence the item's true lag — is known.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.runtime.queue import TrajectoryItem
+
+
+class AdmissionDecision(NamedTuple):
+    admit: bool
+    weight: float = 1.0          # importance downweight applied if admitted
+    tv: Optional[float] = None   # measured TV when the policy computed one
+    reason: str = ""             # drop/downweight reason for metrics
+
+
+class AdmissionPolicy:
+    """Decide whether a consumed trajectory reaches the learner."""
+
+    name = "base"
+
+    def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
+        raise NotImplementedError
+
+
+class PassThrough(AdmissionPolicy):
+    """Admit everything at full weight (the phase-locked baseline)."""
+
+    name = "pass_through"
+
+    def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
+        return AdmissionDecision(admit=True)
+
+
+class MaxLagEviction(AdmissionPolicy):
+    """Drop items older (in learner updates) than `max_lag` versions.
+
+    Note on mixture items (backward_mixture regime): the item's
+    representative ``behavior_version`` is the *oldest* snapshot any
+    actor sampled, so with a snapshot ring deeper than `max_lag` most
+    mixtures contain at least one over-age policy and get dropped —
+    choose max_lag >= buffer capacity (or use tv_gate) for that regime,
+    or expect heavy drop rates in ``drops_by_reason``.
+    """
+
+    name = "max_lag"
+
+    def __init__(self, max_lag: int) -> None:
+        if max_lag < 0:
+            raise ValueError(f"max_lag must be >= 0, got {max_lag}")
+        self.max_lag = max_lag
+
+    def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
+        if item.lag > self.max_lag:
+            return AdmissionDecision(admit=False, reason="max_lag")
+        return AdmissionDecision(admit=True)
+
+
+class TVGatedAdmission(AdmissionPolicy):
+    """Gate on the sampled TV estimate (Eq. 8) against the current policy.
+
+    ``tv_fn(payload) -> float`` measures the expected total variation
+    between the *current* learner policy and the trajectory's behavior
+    policy on the trajectory's own states/actions (the caller closes over
+    the policy store and the model apply).  Items with tv <= delta/2 pass
+    untouched; over-threshold items are dropped (``mode='drop'``) or
+    admitted at weight (delta/2)/tv (``mode='downweight'``).
+    """
+
+    name = "tv_gate"
+
+    def __init__(
+        self,
+        delta: float,
+        tv_fn: Callable[[Any], float],
+        mode: str = "drop",
+    ) -> None:
+        if mode not in ("drop", "downweight"):
+            raise ValueError(f"mode must be drop|downweight, got {mode!r}")
+        self.delta = float(delta)
+        self.tv_fn = tv_fn
+        self.mode = mode
+
+    def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
+        tv = float(self.tv_fn(item.payload))
+        threshold = self.delta / 2.0
+        if tv <= threshold:
+            return AdmissionDecision(admit=True, tv=tv)
+        if self.mode == "downweight":
+            return AdmissionDecision(
+                admit=True, weight=threshold / tv, tv=tv,
+                reason="tv_downweight",
+            )
+        return AdmissionDecision(admit=False, tv=tv, reason="tv_gate")
+
+
+def make_admission(
+    name: str,
+    *,
+    max_lag: int = 4,
+    delta: float = 0.2,
+    tv_fn: Optional[Callable[[Any], float]] = None,
+    mode: str = "drop",
+) -> AdmissionPolicy:
+    """Factory used by launchers/runners (`--admission` flag)."""
+    if name == "pass_through":
+        return PassThrough()
+    if name == "max_lag":
+        return MaxLagEviction(max_lag)
+    if name == "tv_gate":
+        if tv_fn is None:
+            raise ValueError("tv_gate admission requires a tv_fn")
+        return TVGatedAdmission(delta, tv_fn, mode=mode)
+    raise ValueError(f"unknown admission policy {name!r}")

@@ -1,0 +1,158 @@
+"""Versioned policy store — the publication side of the async runtime.
+
+Generalizes ``core.policy_lag.PolicyBuffer`` (the paper's Fig. 1 policy
+ring) into a store with an explicit, monotonically increasing *version*
+counter and per-snapshot metadata.  Both experimental regimes publish and
+read through it:
+
+* the classic-RL learner publishes after every train phase and the
+  mixture actors sample stale snapshots straight from the underlying
+  jit-friendly ring (``store.buffer`` + ``buffer_sample``);
+* the RLVR serve loop freezes ``store.latest()`` per generation phase;
+* the ``threaded`` regime's producer thread pulls ``latest()``
+  concurrently with learner publishes.
+
+The ring keeps the last ``capacity`` snapshots' *parameters*; metadata is
+kept for every version ever published (it is tiny).  Snapshot reads hand
+back references to immutable jax arrays, so readers never observe a
+half-written snapshot: the buffer pytree is swapped atomically under the
+lock.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.policy_lag import (
+    PolicyBuffer,
+    buffer_init,
+    buffer_latest,
+    buffer_push,
+    buffer_sample,
+)
+
+
+@dataclass(frozen=True)
+class SnapshotMeta:
+    """Per-version bookkeeping (kept even after the params are evicted)."""
+
+    version: int
+    wall_time: float
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+
+class StaleVersionError(KeyError):
+    """Requested a version whose parameters were evicted from the ring."""
+
+
+class PolicyStore:
+    """Bounded ring of policy snapshots with monotonic versioning."""
+
+    def __init__(
+        self,
+        init_params: Any,
+        capacity: int,
+        meta: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self._lock = threading.Lock()
+        self._buffer: PolicyBuffer = buffer_init(init_params, capacity)
+        self._version = 0
+        # buffer_init marks the initial policy valid at slot capacity-1
+        # (head=0, count=1 => age-order slot (head-count)%cap).
+        self._slot_versions = np.zeros(capacity, dtype=np.int64)
+        self._history: Dict[int, SnapshotMeta] = {
+            0: SnapshotMeta(0, time.time(), dict(meta or {}))
+        }
+
+    # -- publication ---------------------------------------------------------
+
+    def publish(self, params: Any, **meta: Any) -> int:
+        """Insert a new snapshot; returns its (monotonic) version."""
+        with self._lock:
+            slot = int(self._buffer.head)
+            self._buffer = buffer_push(self._buffer, params)
+            self._version += 1
+            self._slot_versions[slot] = self._version
+            self._history[self._version] = SnapshotMeta(
+                self._version, time.time(), dict(meta)
+            )
+            return self._version
+
+    # -- reads ---------------------------------------------------------------
+
+    @property
+    def version(self) -> int:
+        """Latest published version (0 is the init policy)."""
+        return self._version
+
+    @property
+    def capacity(self) -> int:
+        return self._buffer.capacity
+
+    @property
+    def buffer(self) -> PolicyBuffer:
+        """Jit-friendly ring view for in-graph mixture sampling."""
+        return self._buffer
+
+    def snapshot_state(self) -> Tuple[PolicyBuffer, np.ndarray, int]:
+        """Consistent (buffer, slot_versions, latest_version) triple."""
+        with self._lock:
+            return self._buffer, self._slot_versions.copy(), self._version
+
+    def latest(self) -> Tuple[Any, int]:
+        with self._lock:
+            return buffer_latest(self._buffer), self._version
+
+    def retained_versions(self) -> List[int]:
+        """Versions whose parameters are still resident, oldest first."""
+        with self._lock:
+            cap = self._buffer.capacity
+            head = int(self._buffer.head)
+            count = int(self._buffer.count)
+            slots = [(head - count + j) % cap for j in range(count)]
+            return [int(self._slot_versions[s]) for s in slots]
+
+    def get(self, version: int) -> Any:
+        """Parameters of `version`; StaleVersionError once evicted."""
+        with self._lock:
+            cap = self._buffer.capacity
+            head = int(self._buffer.head)
+            count = int(self._buffer.count)
+            for j in range(count):
+                slot = (head - count + j) % cap
+                if int(self._slot_versions[slot]) == version:
+                    return jax.tree.map(
+                        lambda s: s[slot], self._buffer.stacked
+                    )
+        if version in self._history:
+            raise StaleVersionError(
+                f"version {version} was evicted from the ring "
+                f"(capacity {self.capacity}, latest {self._version})"
+            )
+        raise KeyError(f"version {version} was never published")
+
+    def meta(self, version: int) -> SnapshotMeta:
+        return self._history[version]
+
+    def sample(self, key: jax.Array, n: int) -> Tuple[Any, np.ndarray]:
+        """Uniformly sample `n` resident snapshots (host-side convenience).
+
+        Returns (params_batched, versions).  In-graph consumers should
+        instead call ``buffer_sample`` on ``store.buffer`` and map the
+        returned slots through ``versions_of_slots``.
+        """
+        buffer, slot_versions, _ = self.snapshot_state()
+        params_b, slots = buffer_sample(buffer, key, n)
+        return params_b, slot_versions[np.asarray(slots)]
+
+    def versions_of_slots(self, slots: Any) -> np.ndarray:
+        """Map ring slots (as sampled in-graph) to policy versions."""
+        with self._lock:
+            return self._slot_versions[np.asarray(slots)]

@@ -1,0 +1,183 @@
+"""Staleness-tagged trajectory queue between actors and the learner.
+
+Every item carries its behavior policy version (stamped by the producer)
+and the learner version at both enqueue and consume time, so the item's
+*lag* — the quantity every loss in the paper conditions on — is an
+observable of the queue rather than something trainers reconstruct.
+
+The queue is thread-safe (the ``threaded`` regime runs a real producer
+thread against a consuming learner) and applies its admission policy at
+the consume boundary: ``get`` keeps popping until a policy-admitted item
+surfaces, counting drops/downweights and recording the lag histogram for
+``metrics.runtime_metrics``.  A bounded ``maxsize`` gives natural
+backpressure on the producer.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.metrics.runtime_metrics import LagHistogram, RuntimeQueueStats
+from repro.runtime.admission import AdmissionPolicy, PassThrough
+
+
+@dataclass
+class TrajectoryItem:
+    payload: Any
+    behavior_version: int
+    enqueue_learner_version: int
+    learner_version_at_consume: Optional[int] = None
+    weight: float = 1.0
+    tv: Optional[float] = None
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def lag(self) -> int:
+        """Learner updates between behavior policy and (consume) use."""
+        ref = (
+            self.learner_version_at_consume
+            if self.learner_version_at_consume is not None
+            else self.enqueue_learner_version
+        )
+        return ref - self.behavior_version
+
+
+class QueueClosed(RuntimeError):
+    """put() after close() — the learner has shut the run down."""
+
+
+class TrajectoryQueue:
+    """FIFO of :class:`TrajectoryItem` with consume-time admission."""
+
+    def __init__(
+        self,
+        maxsize: int = 0,
+        admission: Optional[AdmissionPolicy] = None,
+    ) -> None:
+        self.maxsize = maxsize
+        self.admission = admission or PassThrough()
+        self._dq: collections.deque = collections.deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        # counters (guarded by _cond's lock)
+        self._puts = 0
+        self._admitted = 0
+        self._dropped = 0
+        self._downweighted = 0
+        self._drops_by_reason: Dict[str, int] = {}
+        self._lag_histogram = LagHistogram()
+
+    # -- producer side -------------------------------------------------------
+
+    def put(
+        self,
+        payload: Any,
+        *,
+        behavior_version: int,
+        learner_version: int,
+        **meta: Any,
+    ) -> TrajectoryItem:
+        """Enqueue; blocks when bounded and full (producer backpressure)."""
+        item = TrajectoryItem(
+            payload=payload,
+            behavior_version=int(behavior_version),
+            enqueue_learner_version=int(learner_version),
+            meta=dict(meta),
+        )
+        with self._cond:
+            while (
+                self.maxsize > 0
+                and len(self._dq) >= self.maxsize
+                and not self._closed
+            ):
+                self._cond.wait()
+            if self._closed:
+                raise QueueClosed("put() on a closed TrajectoryQueue")
+            self._dq.append(item)
+            self._puts += 1
+            self._cond.notify_all()
+        return item
+
+    def close(self) -> None:
+        """Wake all waiters; further puts raise, gets drain then None."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    # -- consumer side -------------------------------------------------------
+
+    def get(
+        self,
+        *,
+        learner_version: int,
+        timeout: Optional[float] = None,
+    ) -> Optional[TrajectoryItem]:
+        """Next admitted item, stamped with the learner's version.
+
+        Pops until the admission policy accepts an item; rejected items are
+        counted as drops.  Returns None when the queue is closed and
+        drained, or when `timeout` elapses with nothing available.
+        """
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._cond:
+                while not self._dq and not self._closed:
+                    if deadline is None:
+                        self._cond.wait()
+                    else:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0 or not self._cond.wait(remaining):
+                            if not self._dq:
+                                return None
+                if not self._dq:
+                    return None  # closed and drained
+                item = self._dq.popleft()
+                self._cond.notify_all()
+            # Admission runs outside the lock: tv_fn may dispatch a jitted
+            # forward pass and must not stall the producer.
+            item.learner_version_at_consume = int(learner_version)
+            decision = self.admission.admit(item)
+            with self._cond:
+                if not decision.admit:
+                    self._dropped += 1
+                    reason = decision.reason or self.admission.name
+                    self._drops_by_reason[reason] = (
+                        self._drops_by_reason.get(reason, 0) + 1
+                    )
+                    continue
+                item.weight = float(decision.weight)
+                item.tv = decision.tv
+                if decision.weight != 1.0:
+                    self._downweighted += 1
+                self._admitted += 1
+                self._lag_histogram.record(item.lag)
+            return item
+
+    # -- introspection -------------------------------------------------------
+
+    def qsize(self) -> int:
+        with self._cond:
+            return len(self._dq)
+
+    def stats(self) -> RuntimeQueueStats:
+        with self._cond:
+            consumed = self._admitted + self._dropped
+            return RuntimeQueueStats(
+                depth=len(self._dq),
+                puts=self._puts,
+                admitted=self._admitted,
+                dropped=self._dropped,
+                downweighted=self._downweighted,
+                admission_drop_rate=(
+                    self._dropped / consumed if consumed else 0.0
+                ),
+                drops_by_reason=dict(self._drops_by_reason),
+                lag_histogram=self._lag_histogram.snapshot(),
+            )

@@ -1,0 +1,332 @@
+"""Lag regimes: three drivers of the same PolicyStore/TrajectoryQueue API.
+
+The paper's two phase-locked simulators and a genuinely concurrent mode
+become interchangeable *drivers* of one runtime:
+
+* ``backward_mixture`` — §5.1 / Fig. 1 left.  Each ``fill()`` samples one
+  stale snapshot per actor from the store's ring and produces a single
+  mixture rollout (the episodic mixture behavior policy of Eq. 1).
+* ``forward_n`` — §5.2.  Each ``fill()`` freezes ``store.latest()`` and
+  produces N items from it; the learner then takes N updates, so item k
+  is consumed with forward lag k (generate-N/train-N, Noukhovitch-style).
+* ``threaded`` — a real producer thread continuously generates from the
+  newest available snapshot while the learner consumes concurrently; lag
+  now arises from actual timing rather than a scripted schedule.  The
+  bounded queue provides backpressure.
+
+Producers are plain callables so the same regimes drive both classic-RL
+env rollouts and RLVR completion generation.  ``MixtureRolloutProducer``
+reproduces ``SimulatedAsyncActors``'s jit structure and PRNG discipline
+bit-for-bit; ``FrozenRolloutProducer`` is its single-policy counterpart
+for the forward/threaded regimes.
+"""
+from __future__ import annotations
+
+import threading
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy_lag import PolicyBuffer, buffer_sample
+from repro.envs.base import Env
+from repro.rollout.env_rollout import collect_rollout, init_env_states
+from repro.runtime.policy_store import PolicyStore
+from repro.runtime.queue import QueueClosed, TrajectoryQueue
+
+
+# ---------------------------------------------------------------------------
+# Producers (classic RL).  RLVR producers live on ForwardLagGenerator.
+# ---------------------------------------------------------------------------
+
+
+class _RolloutProducer:
+    """Shared scaffolding for env-rollout producers: one PRNG chain
+    (whose first split seeds the env states — bit-exactness-critical
+    ordering) and a jitted collect threading persistent env states.
+
+    Subclasses define ``_make_collect`` mapping
+    (policy_source, env_states, key) -> (env_states, *outputs).
+    """
+
+    def __init__(
+        self,
+        env: Env,
+        policy_apply: Callable,
+        *,
+        n_actors: int,
+        rollout_steps: int,
+        seed: int = 0,
+    ) -> None:
+        self.env = env
+        self.n_actors = n_actors
+        self.rollout_steps = rollout_steps
+        self._key = jax.random.PRNGKey(seed)
+        self._env_states = init_env_states(env, self._next_key(), n_actors)
+        self._collect = jax.jit(self._make_collect(env, policy_apply))
+
+    def _make_collect(self, env: Env, policy_apply: Callable) -> Callable:
+        raise NotImplementedError
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def __call__(self, policy_source: Any):
+        self._env_states, *outputs = self._collect(
+            policy_source, self._env_states, self._next_key()
+        )
+        return outputs[0] if len(outputs) == 1 else tuple(outputs)
+
+
+class MixtureRolloutProducer(_RolloutProducer):
+    """Vectorized env rollout with per-actor policies from a snapshot ring.
+
+    ``producer(buffer) -> (RolloutBatch, slots)`` — sampling happens
+    *inside* the jitted collect (identical graph to the legacy
+    ``SimulatedAsyncActors``), so refactored runs are bit-identical.
+    """
+
+    def _make_collect(self, env: Env, policy_apply: Callable) -> Callable:
+        n_actors, rollout_steps = self.n_actors, self.rollout_steps
+
+        def _collect(buffer: PolicyBuffer, env_states, key):
+            k_sample, k_roll = jax.random.split(key)
+            actor_params, slots = buffer_sample(buffer, k_sample, n_actors)
+            env_states, batch = collect_rollout(
+                env, policy_apply, actor_params, env_states, k_roll,
+                rollout_steps,
+            )
+            return env_states, batch, slots
+
+        return _collect
+
+
+class FrozenRolloutProducer(_RolloutProducer):
+    """Env rollout where every actor runs one frozen policy.
+
+    ``producer(params) -> RolloutBatch`` — used by the forward_n and
+    threaded regimes, where lag comes from the schedule/timing rather
+    than a snapshot mixture.
+    """
+
+    def _make_collect(self, env: Env, policy_apply: Callable) -> Callable:
+        n_actors, rollout_steps = self.n_actors, self.rollout_steps
+
+        def _collect(params, env_states, key):
+            stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x[None], (n_actors,) + x.shape
+                ),
+                params,
+            )
+            return collect_rollout(
+                env, policy_apply, stacked, env_states, key, rollout_steps
+            )
+
+        return _collect
+
+
+# ---------------------------------------------------------------------------
+# Regimes
+# ---------------------------------------------------------------------------
+
+
+class LagRegime:
+    """Driver protocol: start() once, next_item() per consume, stop()."""
+
+    name = "base"
+    phase_locked = True   # production driven by the consumer, not a thread
+
+    def __init__(self, store: PolicyStore, queue: TrajectoryQueue) -> None:
+        self.store = store
+        self.queue = queue
+
+    def start(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    def fill(self) -> None:
+        pass
+
+    def stop(self) -> None:  # pragma: no cover - trivial
+        pass
+
+    def next_item(
+        self,
+        learner_version: int,
+        *,
+        timeout: Optional[float] = None,
+        max_refills: int = 50,
+    ):
+        """Next admitted item for the learner.
+
+        Phase-locked regimes produce lazily: when the queue runs dry
+        (including after admission drops), ``fill()`` runs again, bounded
+        by `max_refills` consecutive all-drop rounds so a pathological
+        admission policy terminates the run instead of spinning.
+        Threaded regimes just block on the concurrent producer up to
+        `timeout`.  Returns None when starved/closed.
+        """
+        if not self.phase_locked:
+            return self.queue.get(
+                learner_version=learner_version, timeout=timeout)
+        for _ in range(max_refills):
+            if self.queue.qsize() == 0:
+                self.fill()
+            item = self.queue.get(
+                learner_version=learner_version, timeout=0.001)
+            if item is not None:
+                return item
+        warnings.warn(
+            f"{self.name}: admission policy rejected every item across "
+            f"{max_refills} production rounds; the learner is starved and "
+            "the run will truncate (check the queue's drops_by_reason "
+            "stats, e.g. max_lag tighter than the snapshot mixture).",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return None
+
+
+class BackwardMixtureRegime(LagRegime):
+    name = "backward_mixture"
+
+    def __init__(
+        self,
+        store: PolicyStore,
+        queue: TrajectoryQueue,
+        producer: Callable[[PolicyBuffer], Any],
+    ) -> None:
+        super().__init__(store, queue)
+        self.producer = producer
+
+    def fill(self) -> None:
+        buffer, slot_versions, learner_version = self.store.snapshot_state()
+        payload, slots = self.producer(buffer)
+        versions = slot_versions[np.asarray(slots)]
+        # A mixture item's representative version is its *oldest* policy
+        # (conservative for max-lag admission); the full per-actor version
+        # vector rides along for lag diagnostics.
+        self.queue.put(
+            payload,
+            behavior_version=int(versions.min()),
+            learner_version=learner_version,
+            behavior_versions=versions.tolist(),
+        )
+
+
+class ForwardNRegime(LagRegime):
+    name = "forward_n"
+
+    def __init__(
+        self,
+        store: PolicyStore,
+        queue: TrajectoryQueue,
+        producer: Callable[[Any], Any],
+        *,
+        n_items: int,
+    ) -> None:
+        super().__init__(store, queue)
+        self.producer = producer
+        self.n_items = n_items
+
+    def fill(self) -> None:
+        params, version = self.store.latest()
+        for _ in range(self.n_items):
+            self.queue.put(
+                self.producer(params),
+                behavior_version=version,
+                learner_version=version,
+            )
+
+
+class ThreadedRegime(LagRegime):
+    """Real producer thread: generate from the newest snapshot while the
+    learner consumes.  ``fill()`` is a no-op — production is continuous."""
+
+    name = "threaded"
+    phase_locked = False
+
+    def __init__(
+        self,
+        store: PolicyStore,
+        queue: TrajectoryQueue,
+        producer: Callable[[Any], Any],
+        *,
+        max_items: Optional[int] = None,
+    ) -> None:
+        super().__init__(store, queue)
+        self.producer = producer
+        self.max_items = max_items
+        self._stop_event = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.produced = 0
+        self.error: Optional[BaseException] = None
+
+    def start(self) -> None:
+        self._thread = threading.Thread(
+            target=self._loop, name="runtime-producer", daemon=True
+        )
+        self._thread.start()
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop_event.is_set() and (
+                self.max_items is None or self.produced < self.max_items
+            ):
+                params, version = self.store.latest()
+                payload = self.producer(params)
+                try:
+                    self.queue.put(
+                        payload,
+                        behavior_version=version,
+                        learner_version=self.store.version,
+                    )
+                except QueueClosed:
+                    break
+                self.produced += 1
+        except BaseException as e:  # surface producer crashes, don't hang
+            self.error = e
+        finally:
+            # End of production (finite run, stop, or crash): let the
+            # learner drain what's left, then see None from get() as the
+            # end-of-stream signal instead of blocking on its timeout.
+            self.queue.close()
+
+    def next_item(self, learner_version, *, timeout=None, max_refills=50):
+        item = super().next_item(
+            learner_version, timeout=timeout, max_refills=max_refills)
+        if item is None and self.error is not None:
+            raise RuntimeError(
+                "threaded producer crashed") from self.error
+        return item
+
+    def stop(self, join_timeout: float = 30.0) -> None:
+        self._stop_event.set()
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join(timeout=join_timeout)
+
+
+def make_regime(
+    name: str,
+    store: PolicyStore,
+    queue: TrajectoryQueue,
+    producer: Callable,
+    *,
+    forward_n: int = 4,
+    max_items: Optional[int] = None,
+) -> LagRegime:
+    """Factory used by runners and launchers (`--runtime` flag)."""
+    if name == "backward_mixture":
+        return BackwardMixtureRegime(store, queue, producer)
+    if name == "forward_n":
+        return ForwardNRegime(store, queue, producer, n_items=forward_n)
+    if name == "threaded":
+        return ThreadedRegime(store, queue, producer, max_items=max_items)
+    raise ValueError(f"unknown lag regime {name!r}")
+
+
+REGIMES = ("backward_mixture", "forward_n", "threaded")

@@ -1,27 +1,47 @@
-"""End-to-end simulated-async RL runner (one seed x env x algorithm x K).
+"""End-to-end async RL runner (one seed x env x algorithm x regime).
 
-Composes:  SimulatedAsyncActors (policy-buffer mixture, Fig. 1 left)
-        -> make_train_phase (algorithm update)
-        -> evaluate_policy (post-phase deterministic return, §5.1 protocol)
+Composes the unified actor-learner runtime:
+
+    PolicyStore (versioned snapshot ring)
+      -> lag regime producer (backward_mixture | forward_n | threaded)
+      -> TrajectoryQueue (staleness tags + admission control)
+      -> make_train_phase (algorithm update)
+      -> store.publish (new version)
+      -> evaluate_policy (post-phase deterministic return, §5.1 protocol)
+
+``backward_mixture`` reproduces the paper's Fig. 1-left protocol (and the
+legacy ``SimulatedAsyncActors`` numerics bit-for-bit); ``forward_n`` runs
+the generate-N/train-N schedule on env rollouts; ``threaded`` runs a real
+producer thread against the consuming learner — the repo's first
+genuinely asynchronous execution mode.
 
 The paper runs 500 envs x 1000 steps x 100M total steps x 10 seeds on
-MuJoCo; the CPU-scaled defaults (configurable) keep the identical protocol
-at ~1-2 orders of magnitude smaller so the full Fig. 3/4 grid finishes in
-minutes inside `benchmarks/`.
+MuJoCo; the CPU-scaled defaults (configurable) keep the identical
+protocol at ~1-2 orders of magnitude smaller so the full Fig. 3/4 grid
+finishes in minutes inside `benchmarks/`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.tv_filter import tv_estimate
 from repro.envs import make_env, wrap_autoreset
+from repro.metrics.runtime_metrics import collect_runtime_stats
 from repro.models.mlp_policy import act, mlp_policy_init, policy_dist
-from repro.rollout.async_engine import SimulatedAsyncActors
 from repro.rollout.env_rollout import evaluate_policy
+from repro.runtime import (
+    FrozenRolloutProducer,
+    MixtureRolloutProducer,
+    PolicyStore,
+    TrajectoryQueue,
+    make_admission,
+    make_regime,
+)
 from repro.train.trainer_rl import (
     RLHyperparams,
     init_train_state,
@@ -40,6 +60,15 @@ class AsyncRLRunConfig:
     eval_episodes: int = 16
     seed: int = 0
     hp: RLHyperparams = field(default_factory=RLHyperparams)
+    # --- runtime ---
+    runtime: str = "backward_mixture"  # backward_mixture|forward_n|threaded
+    forward_n: int = 4                 # items per frozen policy (forward_n)
+    queue_maxsize: int = 4             # producer backpressure (threaded)
+    admission: str = "pass_through"    # pass_through|max_lag|tv_gate
+    max_lag: int = 4                   # max_lag admission threshold
+    admission_delta: Optional[float] = None  # tv_gate delta (default hp.delta)
+    admission_mode: str = "drop"       # tv_gate: drop|downweight
+    get_timeout: float = 120.0         # learner wait per item (threaded)
 
 
 @dataclass
@@ -47,6 +76,22 @@ class AsyncRLResult:
     returns: List[float]              # eval return after each phase
     metrics: List[Dict[str, float]]
     final_tv: float
+    runtime_stats: Dict[str, Any] = field(default_factory=dict)
+
+
+def _make_tv_fn(store: PolicyStore):
+    """Trajectory-level TV estimate vs the *current* policy (Eq. 8)."""
+
+    @jax.jit
+    def _tv(params, obs, actions, log_beta):
+        log_pi = policy_dist(params, obs).log_prob(actions)
+        return tv_estimate(log_pi - log_beta)
+
+    def tv_fn(batch) -> float:
+        params, _ = store.latest()
+        return float(_tv(params, batch.obs, batch.actions, batch.log_beta))
+
+    return tv_fn
 
 
 def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
@@ -61,14 +106,39 @@ def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
 
     params = mlp_policy_init(k_init, env.obs_dim, env.act_dim)
     state = init_train_state(params)
-    actors = SimulatedAsyncActors(
-        env, act, params,
-        n_actors=cfg.n_actors,
-        buffer_capacity=cfg.buffer_capacity,
-        rollout_steps=cfg.rollout_steps,
-        seed=cfg.seed + 1,
-    )
     train_phase = make_train_phase(hp)
+
+    # --- runtime assembly ---------------------------------------------------
+    store = PolicyStore(params, capacity=cfg.buffer_capacity)
+    admission = make_admission(
+        cfg.admission,
+        max_lag=cfg.max_lag,
+        delta=(cfg.admission_delta
+               if cfg.admission_delta is not None else hp.delta),
+        tv_fn=_make_tv_fn(store) if cfg.admission == "tv_gate" else None,
+        mode=cfg.admission_mode,
+    )
+    queue = TrajectoryQueue(
+        maxsize=cfg.queue_maxsize if cfg.runtime == "threaded" else 0,
+        admission=admission,
+    )
+    if cfg.runtime == "backward_mixture":
+        producer = MixtureRolloutProducer(
+            env, act, n_actors=cfg.n_actors,
+            rollout_steps=cfg.rollout_steps, seed=cfg.seed + 1,
+        )
+    else:
+        producer = FrozenRolloutProducer(
+            env, act, n_actors=cfg.n_actors,
+            rollout_steps=cfg.rollout_steps, seed=cfg.seed + 1,
+        )
+    # Threaded production is finite: leave headroom over total_phases so
+    # admission drops don't starve the learner, which stops on its own.
+    regime = make_regime(
+        cfg.runtime, store, queue, producer,
+        forward_n=cfg.forward_n,
+        max_items=4 * cfg.total_phases,
+    )
 
     def det_policy(p, obs):
         return policy_dist(p, obs).mean
@@ -81,18 +151,36 @@ def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
     returns: List[float] = []
     metric_log: List[Dict[str, float]] = []
     final_tv = 0.0
-    for phase in range(cfg.total_phases):
-        batch, _slots = actors.collect()
-        key, k_train, k_eval = jax.random.split(key, 3)
-        state, metrics = train_phase(state, batch, k_train)
-        actors.push_policy(state.params)
-        ret = float(eval_fn(state.params, k_eval))
-        returns.append(ret)
-        m = {k: float(v) for k, v in metrics.items()}
-        metric_log.append(m)
-        final_tv = m.get("final_tv", 0.0)
-    return AsyncRLResult(returns=returns, metrics=metric_log,
-                         final_tv=final_tv)
+    regime.start()
+    try:
+        phase = 0
+        while phase < cfg.total_phases:
+            item = regime.next_item(
+                store.version, timeout=cfg.get_timeout)
+            if item is None:
+                break  # producer exhausted / everything dropped
+            key, k_train, k_eval = jax.random.split(key, 3)
+            state, metrics = train_phase(
+                state, item.payload, k_train,
+                weight=jnp.float32(item.weight),
+            )
+            store.publish(state.params)
+            ret = float(eval_fn(state.params, k_eval))
+            returns.append(ret)
+            m = {k: float(v) for k, v in metrics.items()}
+            m["policy_lag"] = float(item.lag)
+            m["item_weight"] = float(item.weight)
+            if item.tv is not None:
+                m["admission_tv"] = float(item.tv)
+            metric_log.append(m)
+            final_tv = m.get("final_tv", 0.0)
+            phase += 1
+    finally:
+        regime.stop()
+    return AsyncRLResult(
+        returns=returns, metrics=metric_log, final_tv=final_tv,
+        runtime_stats=collect_runtime_stats(store, queue),
+    )
 
 
 def run_grid(

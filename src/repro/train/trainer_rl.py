@@ -150,7 +150,7 @@ def make_train_phase(
         if hp.algorithm == "vaco":
             return vaco_total_loss(
                 log_pi=log_pi, log_beta=mb["log_beta"],
-                advantages=mb["advantages"], values=values,
+                advantages=mb["advantages"] * mb["weight"], values=values,
                 value_targets=mb["value_targets"], cfg=vaco_cfg,
             )
         if hp.algorithm in ("ppo", "ppo_kl"):
@@ -158,7 +158,8 @@ def make_train_phase(
             if hp.normalize_adv:
                 adv = normalize_advantages(adv)
             return ppo_total_loss(
-                log_pi=log_pi, log_beta=mb["log_beta"], advantages=adv,
+                log_pi=log_pi, log_beta=mb["log_beta"],
+                advantages=adv * mb["weight"],
                 values=values, value_targets=mb["value_targets"],
                 entropy=entropy, cfg=ppo_cfg,
             )
@@ -166,6 +167,7 @@ def make_train_phase(
             adv = mb["advantages"]
             if hp.normalize_adv:
                 adv = normalize_advantages(adv)
+            adv = adv * mb["weight"]
             return spo_total_loss(
                 log_pi=log_pi, log_beta=mb["log_beta"], advantages=adv,
                 values=values, value_targets=mb["value_targets"],
@@ -197,7 +199,8 @@ def make_train_phase(
             idx = mb["flat_idx"]
             return impala_total_loss(
                 log_pi=log_pi, log_beta=mb["log_beta"],
-                pg_advantages=flat(pg_adv)[idx], values=values,
+                pg_advantages=flat(pg_adv)[idx] * mb["weight"],
+                values=values,
                 value_targets=jax.lax.stop_gradient(flat(out.vs))[idx],
                 entropy=entropy, cfg=impala_cfg,
             )
@@ -205,7 +208,11 @@ def make_train_phase(
 
     grad_fn = jax.value_and_grad(minibatch_loss, has_aux=True)
 
-    def train_phase(state: RLTrainState, batch: RolloutBatch, key):
+    def train_phase(state: RLTrainState, batch: RolloutBatch, key,
+                    weight: float = 1.0):
+        """One phase update.  `weight` scales the policy-gradient
+        advantages — 1.0 normally; <1 when the runtime's admission policy
+        downweighted the trajectory item instead of dropping it."""
         advantages, value_targets = _phase_advantages(
             hp, state.params, batch)
         advantages = jax.lax.stop_gradient(advantages)
@@ -220,6 +227,7 @@ def make_train_phase(
             "advantages": flat(advantages),
             "value_targets": flat(value_targets),
             "flat_idx": jnp.arange(n * t),
+            "weight": jnp.full((n * t,), weight, jnp.float32),
         }
         mb_size = (n * t) // hp.num_minibatches
         lr_scale = lr_schedule(state.phase)

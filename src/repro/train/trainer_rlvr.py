@@ -6,6 +6,15 @@ them with the binary verifier, then takes N updates — minibatch k is
 consumed with forward lag k.  Table 2 hyper-parameters are defaults
 (clip 0.2/0.272 DAPO-style; TV threshold δ=0.05; 1 PPO epoch).
 
+The trainer runs on the unified async runtime: the serve side
+(``ForwardLagGenerator.generate_minibatch``) produces into a
+staleness-tagged :class:`TrajectoryQueue` under a lag regime —
+``forward_n`` reproduces the paper's phase-locked schedule (bit-for-bit
+vs. the legacy in-process loop at fixed seed), ``threaded`` runs a real
+producer thread against the consuming learner.  Every update publishes a
+new version to the :class:`PolicyStore`; item staleness is read off the
+queue tags instead of being scripted.
+
 Because no pretrained base model is downloadable offline, the runner
 first *creates* a base model with a supervised warm-start on synthetic
 chain traces (repro.data.mathgen), then runs RL exactly as the paper does
@@ -22,7 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.losses import GRPOConfig, group_advantages, grpo_token_loss
+from repro.core.tv_filter import tv_estimate
 from repro.data.mathgen import MathTaskDataset
+from repro.metrics.runtime_metrics import collect_runtime_stats
 from repro.models.registry import ModelBundle
 from repro.optim import (
     AdamWConfig,
@@ -31,8 +42,14 @@ from repro.optim import (
     adamw_update,
     clip_by_global_norm,
 )
-from repro.rollout.async_engine import ForwardLagBatch, ForwardLagGenerator
+from repro.rollout.async_engine import ForwardLagGenerator, RLVRMinibatch
 from repro.rollout.sampler import score_tokens
+from repro.runtime import (
+    PolicyStore,
+    TrajectoryQueue,
+    make_admission,
+    make_regime,
+)
 
 
 @dataclass(frozen=True)
@@ -53,6 +70,14 @@ class RLVRHyperparams:
     warmup_steps: int = 300       # supervised base-model creation
     warmup_lr: float = 3e-3
     warmup_batch: int = 64
+    # --- runtime ---
+    runtime: str = "forward_n"    # forward_n | threaded
+    store_capacity: int = 4       # policy snapshot ring size
+    queue_maxsize: int = 4        # producer backpressure (threaded)
+    admission: str = "pass_through"  # pass_through|max_lag|tv_gate
+    max_lag: int = 8
+    admission_mode: str = "drop"  # tv_gate: drop|downweight
+    get_timeout: float = 300.0    # learner wait per item (threaded)
 
 
 class RLVRTrainState(NamedTuple):
@@ -128,17 +153,19 @@ class RLVRPhaseLog:
     tv: float
     frac_filtered: float      # VACO filter rate / PPO clip rate
     filter_active: float
-    staleness: int
+    staleness: int            # queue-observed lag at consume time
+    weight: float = 1.0       # admission downweight (1.0 = full)
 
 
 @dataclass
 class RLVRResult:
     eval_accuracy: List[float]
     phase_logs: List[RLVRPhaseLog]
+    runtime_stats: Dict[str, Any] = field(default_factory=dict)
 
 
 class RLVRTrainer:
-    """Drives warmup + the generate-N / train-N forward-lag loop."""
+    """Drives warmup + the queue-fed forward-lag RL loop."""
 
     def __init__(
         self,
@@ -168,9 +195,45 @@ class RLVRTrainer:
         self._update = make_update_step(bundle, hp, dataset.prompt_len)
         self._warmup = make_warmup_step(bundle, hp)
 
+        # --- runtime assembly ------------------------------------------------
+        self.store = PolicyStore(params, capacity=hp.store_capacity)
+        self.queue = TrajectoryQueue(
+            maxsize=hp.queue_maxsize if hp.runtime == "threaded" else 0,
+            admission=make_admission(
+                hp.admission,
+                max_lag=hp.max_lag,
+                delta=hp.delta,
+                tv_fn=(self._make_tv_fn()
+                       if hp.admission == "tv_gate" else None),
+                mode=hp.admission_mode,
+            ),
+        )
+        self.regime = make_regime(
+            hp.runtime, self.store, self.queue,
+            self.generator.generate_minibatch,
+            forward_n=hp.n_minibatches,
+            max_items=None,
+        )
+        self._regime_started = False
+
+    def _make_tv_fn(self):
+        """Sequence-level TV of a generated minibatch vs the current policy."""
+        bundle, prompt_len = self.bundle, self.dataset.prompt_len
+
+        @jax.jit
+        def _tv(params, tokens, log_beta, mask):
+            log_pi, _, _ = score_tokens(bundle, params, tokens, prompt_len)
+            return tv_estimate(log_pi - log_beta, mask)
+
+        def tv_fn(payload: RLVRMinibatch) -> float:
+            params, _ = self.store.latest()
+            return float(_tv(params, payload.gen.tokens,
+                             payload.gen.log_beta, payload.gen.mask))
+
+        return tv_fn
+
     def warmup(self, steps: Optional[int] = None) -> float:
         steps = steps if steps is not None else self.hp.warmup_steps
-        total_len = self.dataset.prompt_len + self.hp.max_new_tokens
         loss = float("nan")
         for _ in range(steps):
             toks, mask = self.dataset.supervised_batch(
@@ -184,24 +247,48 @@ class RLVRTrainer:
             opt_state=adamw_init(self.state.params),
             updates=jnp.zeros((), jnp.int32),
         )
+        # the warm-started model is the RL base policy.
+        self.store.publish(self.state.params, event="warmup_done")
         return float(loss)
 
+    def close(self) -> None:
+        """Stop the producer (threaded regime) and close the queue."""
+        self.regime.stop()
+
     def train_phase(self) -> List[RLVRPhaseLog]:
-        """One generate-N / train-N phase."""
-        batches = self.generator.generate_phase(self.state.params)
+        """One train phase: consume N queue items, publish after each.
+
+        Production is lazy: the forward_n regime refills the queue (N
+        fresh minibatches from the newest policy) whenever it runs dry,
+        which reproduces the legacy generate-N-then-train-N schedule
+        exactly when nothing is dropped.
+        """
+        hp = self.hp
+        if not self._regime_started:
+            self.regime.start()
+            self._regime_started = True
         logs: List[RLVRPhaseLog] = []
-        for b in batches:
+        for _ in range(hp.n_minibatches):
+            item = self.regime.next_item(
+                self.store.version, timeout=hp.get_timeout)
+            if item is None:
+                break  # producer stopped / everything dropped
+            mb: RLVRMinibatch = item.payload
             adv = group_advantages(
-                b.rewards, self.hp.completions_per_prompt)
+                mb.rewards, hp.completions_per_prompt)
+            adv = adv * jnp.float32(item.weight)
             self.state, aux = self._update(
-                self.state, b.gen.tokens, b.gen.log_beta, b.gen.mask, adv)
+                self.state, mb.gen.tokens, mb.gen.log_beta, mb.gen.mask,
+                adv)
+            self.store.publish(self.state.params)
             frac = aux.get("frac_filtered", aux.get("clip_frac", 0.0))
             logs.append(RLVRPhaseLog(
-                mean_reward=float(jnp.mean(b.rewards)),
+                mean_reward=float(jnp.mean(mb.rewards)),
                 tv=float(aux["tv"]),
                 frac_filtered=float(frac),
                 filter_active=float(aux.get("filter_active", 1.0)),
-                staleness=b.staleness,
+                staleness=item.lag,
+                weight=float(item.weight),
             ))
         return logs
 
@@ -211,8 +298,20 @@ class RLVRTrainer:
     def train(self, phases: int, eval_every: int = 5) -> RLVRResult:
         accs: List[float] = []
         logs: List[RLVRPhaseLog] = []
-        for i in range(phases):
-            logs.extend(self.train_phase())
-            if (i + 1) % eval_every == 0 or i == phases - 1:
-                accs.append(self.evaluate())
-        return RLVRResult(eval_accuracy=accs, phase_logs=logs)
+        try:
+            for i in range(phases):
+                phase_logs = self.train_phase()
+                logs.extend(phase_logs)
+                if not phase_logs:
+                    break  # end of stream: no point re-evaluating
+                if (i + 1) % eval_every == 0 or i == phases - 1:
+                    accs.append(self.evaluate())
+                if len(phase_logs) < self.hp.n_minibatches:
+                    break  # starved mid-phase (producer done / all-drop)
+        finally:
+            if self.hp.runtime == "threaded":
+                self.close()
+        return RLVRResult(
+            eval_accuracy=accs, phase_logs=logs,
+            runtime_stats=collect_runtime_stats(self.store, self.queue),
+        )

@@ -1,0 +1,40 @@
+"""Optional-import shim for ``hypothesis``.
+
+The property tests use only ``given``/``settings``/``st.integers``/
+``st.floats``.  When hypothesis is installed this module re-exports the
+real API; when it is absent the decorated tests skip cleanly at run time
+instead of breaking collection of the whole file (the non-property tests
+in the same modules still run).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the dep
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

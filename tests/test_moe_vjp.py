@@ -51,7 +51,7 @@ def test_router_still_receives_gradient():
 
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=20, deadline=None)

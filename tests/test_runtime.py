@@ -1,0 +1,299 @@
+"""Async runtime: policy store versioning, queue staleness tagging under
+all three lag regimes, admission control exactness, and bit-for-bit
+trainer equivalence of the refactored forward_n RLVR path."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy_lag import buffer_sample
+from repro.runtime import (
+    MaxLagEviction,
+    PassThrough,
+    PolicyStore,
+    QueueClosed,
+    StaleVersionError,
+    TrajectoryQueue,
+    TVGatedAdmission,
+    make_admission,
+    make_regime,
+)
+
+
+def _params(v: float):
+    return {"w": jnp.full((2,), float(v))}
+
+
+# --- policy store -----------------------------------------------------------
+
+
+def test_policy_store_version_monotonic_and_latest():
+    store = PolicyStore(_params(0.0), capacity=3)
+    assert store.version == 0
+    versions = [store.publish(_params(i)) for i in (1.0, 2.0, 3.0)]
+    assert versions == [1, 2, 3]
+    params, v = store.latest()
+    assert v == 3
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0)
+
+
+def test_policy_store_ring_eviction():
+    store = PolicyStore(_params(0.0), capacity=2)
+    store.publish(_params(1.0))
+    store.publish(_params(2.0))          # evicts v0
+    assert store.retained_versions() == [1, 2]
+    np.testing.assert_allclose(np.asarray(store.get(1)["w"]), 1.0)
+    np.testing.assert_allclose(np.asarray(store.get(2)["w"]), 2.0)
+    with pytest.raises(StaleVersionError):
+        store.get(0)
+    with pytest.raises(KeyError):
+        store.get(99)                    # never published
+
+
+def test_policy_store_sample_maps_slots_to_versions():
+    store = PolicyStore(_params(0.0), capacity=4)
+    for i in (1.0, 2.0, 3.0):
+        store.publish(_params(i), note=f"p{i}")
+    params_b, versions = store.sample(jax.random.PRNGKey(0), 64)
+    w = np.asarray(params_b["w"][:, 0])
+    np.testing.assert_allclose(w, versions.astype(np.float64))
+    assert set(versions.tolist()) <= {0, 1, 2, 3}
+    assert store.meta(3).meta == {"note": "p3.0"}
+
+
+def test_policy_store_snapshot_consistent_under_publishes():
+    store = PolicyStore(_params(0.0), capacity=2)
+    stop = threading.Event()
+
+    def publisher():
+        i = 1
+        while not stop.is_set():
+            store.publish(_params(i))
+            i += 1
+
+    t = threading.Thread(target=publisher, daemon=True)
+    t.start()
+    try:
+        for _ in range(50):
+            buffer, slot_versions, version = store.snapshot_state()
+            # the latest slot of the snapshot maps to the snapshot version
+            cap = buffer.capacity
+            slot = (int(buffer.head) - 1) % cap
+            assert int(slot_versions[slot]) == version
+    finally:
+        stop.set()
+        t.join(timeout=10)
+
+
+# --- queue + admission ------------------------------------------------------
+
+
+def test_queue_stamps_versions_and_lag():
+    q = TrajectoryQueue()
+    q.put("a", behavior_version=3, learner_version=5)
+    item = q.get(learner_version=7)
+    assert (item.behavior_version, item.enqueue_learner_version,
+            item.learner_version_at_consume) == (3, 5, 7)
+    assert item.lag == 4
+    assert q.stats().lag_histogram == {4: 1}
+
+
+def test_queue_close_semantics():
+    q = TrajectoryQueue()
+    q.put("a", behavior_version=0, learner_version=0)
+    q.close()
+    assert q.get(learner_version=0).payload == "a"   # drains
+    assert q.get(learner_version=0) is None          # then end-of-stream
+    with pytest.raises(QueueClosed):
+        q.put("b", behavior_version=0, learner_version=0)
+
+
+def test_max_lag_eviction_drops_only_stale():
+    q = TrajectoryQueue(admission=MaxLagEviction(max_lag=2))
+    for v in range(5):
+        q.put(f"p{v}", behavior_version=v, learner_version=5)
+    # consumed at learner version 5: lags 5,4,3,2,1 -> first admitted has
+    # lag 2 (items with lag > 2 dropped in FIFO order).
+    item = q.get(learner_version=5)
+    assert item.payload == "p3" and item.lag == 2
+    stats = q.stats()
+    assert stats.dropped == 3
+    assert stats.drops_by_reason == {"max_lag": 3}
+
+
+def test_tv_gate_drops_exactly_over_threshold():
+    # payload IS the tv value; delta/2 = 0.1 is the admission boundary.
+    gate = TVGatedAdmission(delta=0.2, tv_fn=lambda payload: payload)
+    q = TrajectoryQueue(admission=gate)
+    tvs = [0.05, 0.0999, 0.1, 0.100001, 0.3]
+    for tv in tvs:
+        q.put(tv, behavior_version=0, learner_version=0)
+    q.close()  # drain-then-None
+    admitted = []
+    while (item := q.get(learner_version=1)) is not None:
+        admitted.append(item)
+    # exactly the tv <= delta/2 items pass, at full weight, tagged with tv
+    assert [i.payload for i in admitted] == [0.05, 0.0999, 0.1]
+    assert all(i.weight == 1.0 and i.tv == i.payload for i in admitted)
+    stats = q.stats()
+    assert stats.dropped == 2
+    assert stats.drops_by_reason == {"tv_gate": 2}
+    assert stats.admission_drop_rate == pytest.approx(2 / 5)
+
+
+def test_tv_gate_downweight_mode():
+    gate = TVGatedAdmission(delta=0.2, tv_fn=lambda p: p,
+                            mode="downweight")
+    q = TrajectoryQueue(admission=gate)
+    q.put(0.4, behavior_version=0, learner_version=0)
+    item = q.get(learner_version=0)
+    assert item.weight == pytest.approx(0.1 / 0.4)
+    assert q.stats().downweighted == 1
+
+
+def test_make_admission_factory():
+    assert isinstance(make_admission("pass_through"), PassThrough)
+    assert isinstance(make_admission("max_lag", max_lag=1), MaxLagEviction)
+    assert isinstance(
+        make_admission("tv_gate", delta=0.1, tv_fn=lambda p: 0.0),
+        TVGatedAdmission)
+    with pytest.raises(ValueError):
+        make_admission("tv_gate")  # tv_fn required
+    with pytest.raises(ValueError):
+        make_admission("nope")
+
+
+# --- staleness tagging under the three lag regimes --------------------------
+
+
+def test_backward_mixture_regime_tags_oldest_sampled_version():
+    store = PolicyStore(_params(0.0), capacity=4)
+    for i in (1.0, 2.0, 3.0):
+        store.publish(_params(i))
+    queue = TrajectoryQueue()
+    key = jax.random.PRNGKey(0)
+
+    def producer(buffer):
+        params_b, slots = buffer_sample(buffer, key, 32)
+        return np.asarray(params_b["w"][:, 0]), slots
+
+    regime = make_regime("backward_mixture", store, queue, producer)
+    regime.fill()
+    item = queue.get(learner_version=store.version)
+    versions = np.asarray(item.meta["behavior_versions"])
+    # payload weights w == version floats: the tag matches the content
+    np.testing.assert_allclose(item.payload, versions.astype(np.float64))
+    assert item.behavior_version == versions.min()
+    assert item.lag == store.version - versions.min()
+
+
+def test_forward_n_regime_linear_forward_lag():
+    store = PolicyStore(_params(0.0), capacity=2)
+    queue = TrajectoryQueue()
+    regime = make_regime("forward_n", store, queue,
+                         lambda params: float(params["w"][0]),
+                         forward_n=3)
+    regime.fill()
+    lags = []
+    for _ in range(3):
+        item = queue.get(learner_version=store.version)
+        assert item.behavior_version == 0          # frozen at fill time
+        assert item.payload == 0.0                 # generated from v0
+        lags.append(item.lag)
+        store.publish(_params(store.version + 1.0))  # one learner update
+    assert lags == [0, 1, 2]                       # the §5.2 protocol
+
+
+def test_threaded_regime_concurrent_production_and_tags():
+    store = PolicyStore(_params(0.0), capacity=2)
+    queue = TrajectoryQueue(maxsize=2)
+
+    def producer(params):
+        time.sleep(0.005)
+        return float(params["w"][0])
+
+    regime = make_regime("threaded", store, queue, producer, max_items=6)
+    regime.start()
+    try:
+        consumed = []
+        while (item := queue.get(learner_version=store.version,
+                                 timeout=30.0)) is not None:
+            consumed.append(item)
+            store.publish(_params(store.version + 1.0))
+        assert len(consumed) == 6
+        behavior = [i.behavior_version for i in consumed]
+        assert behavior == sorted(behavior)        # producer tracks latest
+        assert behavior[-1] > 0                    # saw learner progress
+        assert all(i.lag >= 0 for i in consumed)
+        assert queue.stats().puts == 6
+    finally:
+        regime.stop()
+
+
+# --- trainer equivalence (refactored forward_n == legacy phase-locked) -----
+
+
+@pytest.mark.slow
+def test_rlvr_forward_n_matches_legacy_bit_for_bit():
+    """The queue-driven forward_n RLVR phase reproduces the pre-refactor
+    generate-N/train-N loop exactly (metrics and final params) at fixed
+    seed."""
+    from repro.configs.base import ModelConfig
+    from repro.core.losses import group_advantages
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+    from repro.models.registry import build
+    from repro.optim import adamw_init
+    from repro.rollout.async_engine import ForwardLagGenerator
+    from repro.train.trainer_rlvr import (
+        RLVRHyperparams,
+        RLVRTrainer,
+        RLVRTrainState,
+        make_update_step,
+    )
+
+    tok = get_tokenizer()
+    cfg = ModelConfig(
+        name="rt-eq", arch_type="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=tok.vocab_size)
+    bundle = build(cfg)
+    hp = RLVRHyperparams(
+        algorithm="grpo_vaco", n_minibatches=3, prompts_per_minibatch=4,
+        completions_per_prompt=2, max_new_tokens=4, warmup_steps=0)
+
+    # legacy phase-locked loop (pre-refactor protocol, reconstructed from
+    # the same primitives):
+    ds = MathTaskDataset(prompt_len=12, level=0, pool_size=256)
+    params = bundle.init(jax.random.PRNGKey(0))
+    state = RLVRTrainState(params=params, opt_state=adamw_init(params),
+                           updates=jnp.zeros((), jnp.int32))
+    gen = ForwardLagGenerator(
+        bundle, ds, n_minibatches=3, prompts_per_minibatch=4,
+        completions_per_prompt=2, max_new_tokens=4, seed=1)
+    upd = make_update_step(bundle, hp, ds.prompt_len)
+    legacy = []
+    for _ in range(2):
+        for b in gen.generate_phase(state.params):
+            adv = group_advantages(b.rewards, 2)
+            state, aux = upd(state, b.gen.tokens, b.gen.log_beta,
+                             b.gen.mask, adv)
+            legacy.append((float(jnp.mean(b.rewards)), float(aux["tv"]),
+                           float(aux.get("frac_filtered", 0.0)),
+                           b.staleness))
+
+    # refactored runtime path (fresh dataset: same sampling RNG state)
+    ds2 = MathTaskDataset(prompt_len=12, level=0, pool_size=256)
+    tr = RLVRTrainer(bundle, ds2, hp, seed=0)
+    new = []
+    for _ in range(2):
+        for log in tr.train_phase():
+            new.append((log.mean_reward, log.tv, log.frac_filtered,
+                        log.staleness))
+
+    assert new == legacy
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(tr.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
