@@ -6,7 +6,12 @@ figure-level benchmark runs a CPU-scaled version of the paper's protocol
 ``us_per_call`` is the wall time of the benchmark body, ``derived`` the
 figure's headline metric.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+The serve/runtime throughput benchmarks additionally write
+machine-readable ``BENCH_serve.json`` / ``BENCH_runtime.json`` into
+``--out-dir`` (default ``results/bench``); CI uploads the directory as
+an artifact so regressions are diffable across runs.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--out-dir DIR]
 """
 from __future__ import annotations
 
@@ -94,7 +99,15 @@ def bench_fig11_tv(fast: bool) -> None:
          + ";vaco_target=0.100")
 
 
-def bench_runtime_throughput(fast: bool) -> None:
+def _write_artifact(out_dir: str, name: str, payload) -> None:
+    """Machine-readable benchmark artifact (CI uploads the directory)."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def bench_runtime_throughput(fast: bool, out_dir: str) -> None:
     """Threaded vs phase-locked actor-learner throughput."""
     from benchmarks.bench_runtime import run
 
@@ -109,6 +122,32 @@ def bench_runtime_throughput(fast: bool) -> None:
          f"phase_locked={res['backward_mixture']:.0f}sps;"
          f"threaded={res['threaded']:.0f}sps;"
          f"speedup={res['threaded_speedup']:.2f}x")
+    _write_artifact(out_dir, "BENCH_runtime.json", {
+        "benchmark": "runtime_throughput",
+        "us_per_call": us,
+        "env_steps_per_s": res,
+    })
+
+
+def bench_serve_throughput(fast: bool, out_dir: str) -> None:
+    """Continuous batching vs phase-locked serve at mixed lengths."""
+    from benchmarks.bench_serve import run
+
+    t0 = time.perf_counter()
+    res = run(
+        n_requests=12 if fast else 24,
+        max_batch=4,
+        lengths=(2, 4, 8, 48),
+    )
+    us = (time.perf_counter() - t0) * 1e6
+    _row("serve_throughput", us,
+         f"phase_locked={res['phase_locked']['tokens_per_s']:.0f}tps;"
+         f"continuous={res['continuous']['tokens_per_s']:.0f}tps;"
+         f"speedup={res['speedup_tokens_per_s']:.2f}x;"
+         f"p99_ms={res['continuous']['latency_p99_ms']:.1f}")
+    _write_artifact(out_dir, "BENCH_serve.json",
+                    dict(res, benchmark="serve_throughput",
+                         us_per_call=us))
 
 
 def bench_theory() -> None:
@@ -157,13 +196,16 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--fast", action="store_true",
                     help="smaller grids (CI-sized)")
+    ap.add_argument("--out-dir", default="results/bench",
+                    help="where BENCH_*.json artifacts are written")
     args, _ = ap.parse_known_args()
     fast = args.fast or os.environ.get("REPRO_BENCH_FAST", "1") == "1"
 
     print("name,us_per_call,derived")
     bench_kernels()
     bench_theory()
-    bench_runtime_throughput(fast)
+    bench_serve_throughput(fast, args.out_dir)
+    bench_runtime_throughput(fast, args.out_dir)
     bench_fig11_tv(fast)
     bench_fig4_sample_efficiency(fast)
     bench_fig3_backward_lag(fast)

@@ -15,11 +15,15 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.runtime import REGIMES  # noqa: E402
 from repro.train.runner_rl import (  # noqa: E402
     AsyncRLRunConfig,
     run_async_rl,
 )
+
+# The classic-RL regimes; the fourth ("threaded_engine") drives the
+# continuous-batching LLM serve engine instead of an env producer — see
+# tests/test_serve_engine.py and repro.launch.serve --engine continuous.
+ENV_REGIMES = ("backward_mixture", "forward_n", "threaded")
 
 PHASES = 8
 BASE = dict(env_name="pendulum", algorithm="vaco", buffer_capacity=4,
@@ -39,7 +43,7 @@ def _summary(name: str, res, dt: float) -> None:
 
 def main() -> None:
     print("=== three lag regimes, one PolicyStore/TrajectoryQueue API ===\n")
-    for regime in REGIMES:
+    for regime in ENV_REGIMES:
         t0 = time.time()
         res = run_async_rl(AsyncRLRunConfig(
             **BASE, runtime=regime, forward_n=4, get_timeout=60.0))

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from repro.kernels import ref as ref_mod
 from repro.kernels.flash_attention_pallas import flash_attention
 from repro.kernels.fused_logprob_pallas import logprobs_pallas
+from repro.kernels.paged_attention_pallas import paged_attention as \
+    paged_attention_pallas
 from repro.kernels.ssm_scan_pallas import ssm_scan_pallas
 from repro.kernels.vtrace_pallas import vtrace_pallas
 from repro.kernels.wkv6_pallas import wkv6_pallas
@@ -66,6 +68,20 @@ def attention(
     if kw is None or not causal:
         return ref_mod.ref_attention(q, k, v, causal=causal, window=window)
     return flash_attention(q, k, v, window=window, **kw)
+
+
+def paged_attention(
+    q, k_pages, v_pages, block_tables, context_lens,
+    *, window: Optional[int] = None, mode: Optional[str] = None,
+):
+    """Decode attention over a block-table paged KV pool ([B, H, D])."""
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_paged_attention(
+            q, k_pages, v_pages, block_tables, context_lens, window=window)
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables, context_lens,
+        window=window, **kw)
 
 
 def wkv6(

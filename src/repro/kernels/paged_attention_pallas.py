@@ -1,0 +1,157 @@
+"""Pallas TPU paged decode attention: block-table K/V gather in-kernel.
+
+The serve engine's KV cache is a pool of fixed-size blocks; each request
+owns an ordered *block table* mapping logical positions to pages.  Dense
+decode attention would need the pool compacted per step — this kernel
+instead gathers pages through the table inside the kernel, so a decode
+step touches exactly the pages its requests own:
+
+* grid = (batch, q_heads, max_blocks); the block axis is innermost
+  (sequential) so the online-softmax accumulator lives in VMEM scratch
+  across page iterations, as in the flash kernel.
+* the block tables and context lengths ride in as *scalar prefetch*
+  (``pltpu.PrefetchScalarGridSpec``): the k/v BlockSpec index maps read
+  ``tables[b, j]`` to pick the HBM page to stream, which is the whole
+  trick — the gather happens in the DMA engine, not in compute.
+* pages are laid out ``[KV, NB, BS, D]`` (kv-head major) so one grid
+  step streams a single ``[BS, D]`` tile; GQA folds the query head onto
+  its kv group exactly like the flash kernel.
+* ragged sequences: positions >= context_lens[b] are masked, and pages
+  entirely past the context (or entirely outside a sliding window) are
+  skipped with ``pl.when`` — a request with 3 live pages in a 64-page
+  table does 3 page-iterations of work.
+
+Pad slots of a table must hold an *in-range* page id (the allocator pads
+with 0): the index map runs for skipped iterations too.
+
+Forward-only (decode); the pure-jnp oracle is
+``repro.kernels.ref.ref_paged_attention``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    tables_ref,   # scalar prefetch [B, M] int32
+    lens_ref,     # scalar prefetch [B] int32
+    q_ref,        # [1, 1, D]
+    k_ref,        # [1, 1, BS, D]
+    v_ref,        # [1, 1, BS, D]
+    o_ref,        # [1, 1, D]
+    m_ref,        # scratch [1, 1]
+    l_ref,        # scratch [1, 1]
+    acc_ref,      # scratch [1, D]
+    *,
+    block_size: int,
+    num_blocks_max: int,
+    window: Optional[int],
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    ctx = lens_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = j * block_size
+    live = k_start < ctx                       # page overlaps the context
+    if window is not None:
+        # Newest token is at ctx-1; skip pages fully left of the window.
+        live = jnp.logical_and(
+            live, (ctx - 1) - (k_start + block_size - 1) < window
+        )
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        scores = jnp.dot(k, q, preferred_element_type=jnp.float32)  # [BS]
+
+        kpos = k_start + jax.lax.iota(jnp.int32, block_size)
+        mask = kpos < ctx
+        if window is not None:
+            mask = jnp.logical_and(mask, (ctx - 1) - kpos < window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_ref[0, 0]
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(scores))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)                          # [BS]
+        l_ref[0, 0] = alpha * l_prev + jnp.sum(p)
+        acc_ref[...] = acc_ref[...] * alpha + (p @ v)[None, :]
+        m_ref[0, 0] = m_new
+
+    @pl.when(j == num_blocks_max - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[0, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[0] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"),
+)
+def paged_attention(
+    q: jax.Array,             # [B, H, D]
+    k_pages: jax.Array,       # [KV, NB, BS, D]
+    v_pages: jax.Array,       # [KV, NB, BS, D]
+    block_tables: jax.Array,  # [B, M] int32 page ids (pads must be in-range)
+    context_lens: jax.Array,  # [B] int32
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token decode attention over a paged KV pool."""
+    b, h, d = q.shape
+    kv, _, block_size, _ = k_pages.shape
+    m = block_tables.shape[1]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b_, h_, j, tbl, cl: (b_, h_, 0)),
+            pl.BlockSpec(
+                (1, 1, block_size, d),
+                lambda b_, h_, j, tbl, cl: (h_ // group, tbl[b_, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_size, d),
+                lambda b_, h_, j, tbl, cl: (h_ // group, tbl[b_, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, d), lambda b_, h_, j, tbl, cl: (b_, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_kernel, block_size=block_size, num_blocks_max=m,
+            window=window, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
+      q, k_pages, v_pages)

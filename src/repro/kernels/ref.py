@@ -74,6 +74,54 @@ def ref_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (serve engine's block-table KV cache)
+# ---------------------------------------------------------------------------
+
+
+def ref_paged_attention(
+    q: jax.Array,             # [B, H, D] one query token per request
+    k_pages: jax.Array,       # [KV, NB, BS, D] pooled key blocks
+    v_pages: jax.Array,       # [KV, NB, BS, D] pooled value blocks
+    block_tables: jax.Array,  # [B, M] int32 page ids (pad slots may be any
+                              # in-range id; they are masked by context_lens)
+    context_lens: jax.Array,  # [B] int32 valid tokens per request (0 = slot
+                              # inactive -> zero output)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Gather K/V through per-request block tables and attend.
+
+    The logical sequence of request b is the concatenation of its table's
+    blocks; token t lives in block t // BS at offset t % BS.  Only the
+    first ``context_lens[b]`` positions are real (ragged sequences), and
+    the newest token (the query's own K/V row) is expected to already be
+    written at position ``context_lens[b] - 1``.
+    """
+    kv, _, bs, d = k_pages.shape
+    b, h, _ = q.shape
+    g = h // kv
+    scale = d ** -0.5
+    # [KV, B, M, BS, D] -> [KV, B, S, D] with S = M * BS
+    keys = k_pages[:, block_tables].reshape(kv, b, -1, d)
+    vals = v_pages[:, block_tables].reshape(kv, b, -1, d)
+    qg = q.reshape(b, kv, g, d)
+    scores = jnp.einsum("bkgd,kbsd->bkgs", qg * scale, keys,
+                        preferred_element_type=jnp.float32)
+    pos = jnp.arange(keys.shape[2], dtype=jnp.int32)[None, :]     # [1, S]
+    valid = pos < context_lens[:, None]
+    if window is not None:
+        q_pos = context_lens[:, None] - 1
+        valid = jnp.logical_and(valid, (q_pos - pos) < window)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,kbsd->bkgd", probs, vals)
+    # Inactive slots (context_len 0) have no valid keys; zero them rather
+    # than returning the softmax-of-NEG_INF uniform average.
+    out = jnp.where(context_lens[:, None, None, None] > 0, out, 0.0)
+    return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
 # WKV6 linear-attention recurrence (rwkv6 time-mix)
 # ---------------------------------------------------------------------------
 

@@ -154,6 +154,10 @@ def _compile_combo(cfg, shape, mesh, policy, *, unroll_layers=False,
 
 def _costs(compiled):
     cost = compiled.cost_analysis() or {}
+    # Newer jaxlibs return one properties dict per device instead of a
+    # bare dict; the mesh is homogeneous so any device's entry works.
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     stats = collective_bytes(compiled.as_text())
     return (
         float(cost.get("flops", 0.0)),

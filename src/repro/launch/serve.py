@@ -1,18 +1,28 @@
-"""Serving launcher: batched completion generation against a reduced
-assigned architecture (the actor side of the async RLVR loop).
+"""Serving launcher: completion generation against a reduced assigned
+architecture (the actor side of the async RLVR loop).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-0.5b \\
-      --batch 8 --max-new-tokens 16
+      --engine continuous --requests 12 --mixed-lengths 4,8,16,32
+
+Two engines:
+
+* ``--engine static`` — the phase-locked fixed-batch ``generate()``
+  loop (prefill + lax.scan decode): every request waits for the
+  slowest row.  Kept as the baseline/fallback.
+* ``--engine continuous`` — the ``repro.serve`` continuous-batching
+  engine: paged KV cache, per-request admission/retire between decode
+  steps, and (with ``--runtime versioned``) in-flight weight swap from
+  the PolicyStore.
 
 Loads a checkpoint when given (--checkpoint), else serves random init —
-the point on this host is exercising the prefill + KV-cache decode
-engine; on TPU the same ``generate`` runs under the production mesh with
-the serve_step shardings proven by the dry-run.
+the point on this host is exercising the serve engines; on TPU the same
+paths run under the production mesh with the serve_step shardings
+proven by the dry-run.
 
 ``--runtime versioned`` routes the weights through the async runtime's
-versioned PolicyStore — the serve loop pulls ``store.latest()`` exactly
-like the threaded regime's producer does, and reports the policy version
-it served so generated data can be staleness-tagged downstream.
+versioned PolicyStore and reports the served policy version **per
+request** (a continuous-batching request may straddle versions; its
+summary shows the span, e.g. ``v0->v1``).
 """
 from __future__ import annotations
 
@@ -25,11 +35,121 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _version_tag(versions) -> str:
+    """Human summary of the per-token version vector of one request."""
+    uniq = sorted(set(int(v) for v in versions))
+    if len(uniq) == 1:
+        return f"v{uniq[0]}"
+    return f"v{uniq[0]}->v{uniq[-1]}"
+
+
+def _serve_static(args, bundle, params, store, tok, prompts_np, answers):
+    from repro.data.mathgen import verify
+    from repro.rollout.sampler import generate
+
+    behavior_version = None
+    if store is not None:
+        params, behavior_version = store.latest()
+        print(f"serving policy version {behavior_version} "
+              f"(retained: {store.retained_versions()})")
+    gen_fn = jax.jit(lambda p, t, k: generate(
+        bundle, p, t, k, max_new_tokens=args.max_new_tokens,
+        temperature=args.temperature, top_p=args.top_p,
+    ))
+    key = jax.random.PRNGKey(args.seed + 2)
+    res = gen_fn(params, jnp.asarray(prompts_np), key)   # warm
+    jax.block_until_ready(res.tokens)
+    t0 = time.time()
+    res = gen_fn(params, jnp.asarray(prompts_np), key)
+    jax.block_until_ready(res.tokens)
+    dt = time.time() - t0
+    n_tok = prompts_np.shape[0] * args.max_new_tokens
+    tag = ("" if behavior_version is None
+           else f" [policy v{behavior_version}]")
+    print(f"decode: {n_tok} tokens in {dt*1e3:.1f} ms "
+          f"({n_tok/dt:.0f} tok/s on this host){tag}")
+    comp = np.asarray(res.completion)
+    for i in range(min(len(answers), 8)):
+        text = tok.decode(comp[i])
+        r = verify(text, answers[i])
+        vtag = ("" if behavior_version is None
+                else f" [policy v{behavior_version}]")
+        print(f"  [{i}] -> {text!r} (gold {answers[i]}, reward {r}){vtag}")
+
+
+def _serve_continuous(args, bundle, params, store, tok, ds):
+    from repro.data.mathgen import verify
+    from repro.serve import ServeEngine
+
+    lengths = [int(x) for x in args.mixed_lengths.split(",")] \
+        if args.mixed_lengths else [args.max_new_tokens]
+    engine = ServeEngine(
+        bundle, params if store is None else None, store=store,
+        num_blocks=args.num_blocks, block_size=args.block_size,
+        max_batch=args.max_batch, max_seq_len=args.max_seq_len,
+        decode_chunk=args.decode_chunk,
+        swap_interval=args.swap_interval, temperature=args.temperature,
+        top_p=args.top_p, seed=args.seed + 2,
+    )
+    toks_np, prompts, answers = ds.sample_batch(args.requests)
+    meta = {}
+    for i in range(args.requests):
+        row = toks_np[i]
+        row = row[row != tok.pad_id]            # ragged: true prompt only
+        req = engine.submit(row, lengths[i % len(lengths)])
+        meta[req.request_id] = (prompts[i], answers[i])
+    t0 = time.time()
+    trajs = engine.run(max_steps=args.max_steps)
+    dt = time.time() - t0
+    from repro.metrics.runtime_metrics import collect_serve_stats
+
+    stats = collect_serve_stats(engine)
+    n_tok = stats["tokens_out"]
+    print(f"continuous decode: {n_tok} tokens / {len(trajs)} requests in "
+          f"{dt*1e3:.1f} ms ({n_tok/dt:.0f} tok/s on this host)")
+    lat_tag = "latency n/a (nothing retired; raise --max-steps)"
+    if trajs:
+        lat = np.asarray([t.latency_s for t in trajs]) * 1e3
+        lat_tag = (f"latency p50 {np.percentile(lat, 50):.1f} ms "
+                   f"p99 {np.percentile(lat, 99):.1f} ms")
+    print(f"  occupancy {stats['mean_occupancy']:.2f}/{args.max_batch}, "
+          f"prefills {stats['prefills']}, "
+          f"preemptions {stats['preemptions']}, swaps {stats['swaps']}, "
+          f"{lat_tag}")
+    for t in sorted(trajs, key=lambda t: t.request_id)[:8]:
+        prompt_text, ans = meta[t.request_id]
+        text = tok.decode(t.tokens)
+        r = verify(text, ans)
+        vtag = ("" if store is None
+                else f" [policy {_version_tag(t.versions)}]")
+        print(f"  [{t.request_id}] -> {text!r} ({t.num_tokens} tok, "
+              f"{t.finish_reason}, gold {ans}, reward {r}){vtag}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen2.5-0.5b")
+    ap.add_argument("--engine", default="static",
+                    choices=["static", "continuous"],
+                    help="static: phase-locked batch generate(); "
+                         "continuous: paged-KV continuous batching")
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="continuous: total requests (default --batch)")
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--mixed-lengths", default=None,
+                    help="continuous: comma list of per-request "
+                         "max-new-tokens, cycled (e.g. 4,8,16,32)")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="continuous: decode slots")
+    ap.add_argument("--block-size", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=128)
+    ap.add_argument("--max-seq-len", type=int, default=256)
+    ap.add_argument("--max-steps", type=int, default=10_000)
+    ap.add_argument("--decode-chunk", type=int, default=4,
+                    help="continuous: decode steps per dispatch "
+                         "(scheduling happens between chunks)")
+    ap.add_argument("--swap-interval", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--level", type=int, default=0)
@@ -38,14 +158,16 @@ def main(argv=None) -> int:
     ap.add_argument("--runtime", default="direct",
                     choices=["direct", "versioned"],
                     help="versioned: serve through the PolicyStore "
-                         "(staleness-taggable actor side of the runtime)")
+                         "(staleness-taggable actor side of the runtime; "
+                         "continuous engine swaps in-flight)")
     args = ap.parse_args(argv)
+    if args.requests is None:
+        args.requests = args.batch
 
     from repro.configs import reduced_config
-    from repro.data.mathgen import MathTaskDataset, verify
+    from repro.data.mathgen import MathTaskDataset
     from repro.data.tokenizer import get_tokenizer
     from repro.models.registry import build
-    from repro.rollout.sampler import generate
     from repro.checkpoint import load_checkpoint
 
     tok = get_tokenizer()
@@ -57,7 +179,7 @@ def main(argv=None) -> int:
         params, step, meta = load_checkpoint(args.checkpoint, params)
         print(f"loaded checkpoint step={step} meta={meta}")
 
-    behavior_version = None
+    store = None
     if args.runtime == "versioned":
         from repro.runtime import PolicyStore
 
@@ -67,38 +189,14 @@ def main(argv=None) -> int:
         if args.checkpoint:
             store.publish(params, source="checkpoint",
                           checkpoint=args.checkpoint)
-        params, behavior_version = store.latest()
-        print(f"serving policy version {behavior_version} "
-              f"(retained: {store.retained_versions()})")
 
     ds = MathTaskDataset(prompt_len=32, level=args.level,
                          seed=args.seed + 1)
-    toks_np, prompts, answers = ds.sample_batch(args.batch)
-
-    gen_fn = jax.jit(lambda p, t, k: generate(
-        bundle, p, t, k, max_new_tokens=args.max_new_tokens,
-        temperature=args.temperature, top_p=args.top_p,
-    ))
-    # warm + timed call (measures the jitted serve loop on this host).
-    key = jax.random.PRNGKey(args.seed + 2)
-    res = gen_fn(params, jnp.asarray(toks_np), key)
-    jax.block_until_ready(res.tokens)
-    t0 = time.time()
-    res = gen_fn(params, jnp.asarray(toks_np), key)
-    jax.block_until_ready(res.tokens)
-    dt = time.time() - t0
-    n_tok = args.batch * args.max_new_tokens
-    tag = ("" if behavior_version is None
-           else f" [policy v{behavior_version}]")
-    print(f"decode: {n_tok} tokens in {dt*1e3:.1f} ms "
-          f"({n_tok/dt:.0f} tok/s on this host){tag}")
-
-    comp = np.asarray(res.completion)
-    for i in range(min(args.batch, 8)):
-        text = tok.decode(comp[i])
-        r = verify(text, answers[i])
-        print(f"  [{i}] {prompts[i]!r} -> {text!r} "
-              f"(gold {answers[i]}, reward {r})")
+    if args.engine == "continuous":
+        _serve_continuous(args, bundle, params, store, tok, ds)
+    else:
+        toks_np, prompts, answers = ds.sample_batch(args.batch)
+        _serve_static(args, bundle, params, store, tok, toks_np, answers)
     return 0
 
 

@@ -53,6 +53,28 @@ class RuntimeQueueStats:
         }
 
 
+def collect_serve_stats(engine: Any) -> Dict[str, Any]:
+    """JSON-ready view of a ServeEngine: decode/occupancy counters plus
+    the paged-pool and scheduler state (the serve-side analogue of
+    :func:`collect_runtime_stats`)."""
+    alloc = engine.allocator
+    sched = engine.scheduler
+    out = dict(engine.stats.as_dict())
+    out.update({
+        "policy_version": engine.version,
+        "pool_blocks": alloc.num_blocks,
+        "pool_blocks_free": alloc.num_free,
+        "pool_utilization": (
+            1.0 - alloc.num_free / alloc.num_blocks
+            if alloc.num_blocks else 0.0
+        ),
+        "block_size": alloc.block_size,
+        "waiting": len(sched.waiting),
+        "running": len(sched.running),
+    })
+    return out
+
+
 def collect_runtime_stats(store: Any, queue: Any) -> Dict[str, Any]:
     """Joined store+queue view, JSON-ready, for launchers and examples."""
     stats = queue.stats()

@@ -32,6 +32,10 @@ class ModelBundle:
     decode_step: Callable
     init_cache: Callable
     aux_input_shapes: Dict[str, tuple]  # name -> shape suffix (per-batch)
+    # Paged serve path (None when the arch can't page its decode state;
+    # see transformer.paged_arch_unsupported for the reasons).
+    decode_step_paged: Optional[Callable] = None
+    init_paged_cache: Optional[Callable] = None
 
 
 def build(cfg: ModelConfig, unroll_layers: bool = False,
@@ -65,8 +69,22 @@ def _build_decoder_only(cfg: ModelConfig,
     def init_cache(params, batch, max_len, dtype=jnp.float32, **aux):
         return tf_mod.init_cache(cfg, batch, max_len, dtype)
 
+    decode_step_paged = None
+    init_paged_cache = None
+    if tf_mod.paged_arch_unsupported(cfg) is None:
+        def decode_step_paged(params, token, pages, block_tables, pos,
+                              active, kernel_mode=None):
+            return tf_mod.decode_step_paged(
+                params, cfg, token, pages, block_tables, pos, active,
+                kernel_mode=kernel_mode)
+
+        def init_paged_cache(num_blocks, block_size, dtype=jnp.float32):
+            return tf_mod.init_paged_cache(cfg, num_blocks, block_size,
+                                           dtype)
+
     return ModelBundle(cfg, init, forward, decode_step, init_cache,
-                       aux_shapes)
+                       aux_shapes, decode_step_paged=decode_step_paged,
+                       init_paged_cache=init_paged_cache)
 
 
 def _build_encdec(cfg: ModelConfig,

@@ -35,6 +35,7 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
+    apply_rope,
     dense_apply,
     dense_init,
     embedding_apply,
@@ -178,6 +179,157 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
         c["conv"] = jnp.zeros((L, batch, cfg.ssm.conv_width - 1, inner),
                               dtype)
     return c
+
+
+def paged_arch_unsupported(cfg: ModelConfig) -> Optional[str]:
+    """Why this config cannot run the paged decode path (None = it can).
+
+    The paged KV pool covers the standard attention archs; recurrent
+    state (rwkv/ssm) has no per-position rows to page, prefix-LM/vision
+    prefixes and per-layer sliding windows are serve/ follow-ons.
+    """
+    if cfg.attn_free:
+        return "attn-free (rwkv) archs keep recurrent state, not KV rows"
+    if cfg.hybrid_attn_ssm:
+        return "hybrid attn+ssm archs carry unpaged ssm/conv state"
+    if cfg.encoder_layers > 0:
+        return "encoder-decoder cross-attention cache is not paged"
+    if cfg.sliding_window is not None:
+        return "per-layer sliding windows not yet wired into paged decode"
+    if cfg.vision_prefix_len > 0:
+        return "vision prefix rows are not paged"
+    return None
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.float32) -> Dict:
+    """Allocate the pooled block KV cache shared by all requests.
+
+    Layout ``[L, KV, NB, BS, Dh]`` (kv-head major within a layer) so the
+    paged-attention kernel streams one ``[BS, Dh]`` tile per page visit.
+    Ownership of pages lives host-side in ``repro.serve.paged_cache``.
+    """
+    reason = paged_arch_unsupported(cfg)
+    if reason is not None:
+        raise ValueError(f"{cfg.name}: paged decode unsupported: {reason}")
+    shape = (cfg.n_layers, cfg.n_kv_heads, num_blocks, block_size,
+             cfg.head_dim)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+def decode_step_paged(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,         # [B] current token ids (one per slot)
+    pages: Dict,              # {"k_pages","v_pages"} [L, KV, NB, BS, Dh]
+    block_tables: jax.Array,  # [B, M] int32 page ids (pads in-range)
+    pos: jax.Array,           # [B] int32 tokens already cached per slot
+    active: jax.Array,        # [B] bool; inactive slots write/read nothing
+    *,
+    kernel_mode: Optional[str] = None,
+) -> Tuple[ModelOutput, Dict]:
+    """One decode step for a batch of *independent ragged* requests.
+
+    Unlike :func:`decode_step`, slots need not be in lockstep: each slot
+    writes its new K/V row at its own ``pos`` through its own block
+    table, and attends over exactly its ``pos + 1`` live positions.  The
+    incoming token's row is written first (so it attends to itself),
+    matching the dense path's validity rule ``kv_pos <= position``.
+    """
+    from repro.kernels import ops as kops
+
+    b = token.shape[0]
+    num_blocks = pages["k_pages"].shape[2]
+    block_size = pages["k_pages"].shape[3]
+    x = embedding_apply(params["embed"], token[:, None])
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    safe_pos = jnp.maximum(pos, 0)
+    # Out-of-pool page index + scatter mode="drop" turns inactive slots'
+    # writes into no-ops without branching.
+    page_idx = jnp.take_along_axis(
+        block_tables, (safe_pos // block_size)[:, None], axis=1)[:, 0]
+    page_idx = jnp.where(active, page_idx, num_blocks)
+    offset = safe_pos % block_size
+    context_lens = jnp.where(active, safe_pos + 1, 0).astype(jnp.int32)
+
+    def layer_step(x, xs):
+        lp, k_pages, v_pages = xs
+        h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+        q = attn._split_heads(dense_apply(lp["attn"]["wq"], h), cfg.n_heads)
+        k_new = attn._split_heads(
+            dense_apply(lp["attn"]["wk"], h), cfg.n_kv_heads)
+        v_new = attn._split_heads(
+            dense_apply(lp["attn"]["wv"], h), cfg.n_kv_heads)
+        q = apply_rope(q, safe_pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, safe_pos[:, None], cfg.rope_theta)
+        # [B, 1, KV, Dh] -> [KV, B, Dh] rows, scattered per slot.
+        k_rows = k_new[:, 0].transpose(1, 0, 2)
+        v_rows = v_new[:, 0].transpose(1, 0, 2)
+        k_pages = k_pages.at[:, page_idx, offset, :].set(
+            k_rows.astype(k_pages.dtype), mode="drop")
+        v_pages = v_pages.at[:, page_idx, offset, :].set(
+            v_rows.astype(v_pages.dtype), mode="drop")
+        attn_out = kops.paged_attention(
+            q[:, 0], k_pages, v_pages, block_tables, context_lens,
+            mode=kernel_mode,
+        )
+        attn_out = attn_out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        x = x + dense_apply(lp["attn"]["wo"], attn_out)
+        h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            mlp_out, _ = moe_mod.moe_apply(
+                lp["moe"], h, cfg.moe, cfg.activation, group_size=h.shape[0],
+            )
+        else:
+            mlp_out = mlp_apply(lp["mlp"], h, cfg.activation)
+        x = x + mlp_out
+        return x, {"k_pages": k_pages, "v_pages": v_pages}
+
+    x, new_pages = scan_layers(
+        layer_step, x,
+        (params["layers"], pages["k_pages"], pages["v_pages"]),
+    )
+
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], x)
+    else:
+        logits = dense_apply(params["lm_head"], x)
+    logits = softcap(logits, cfg.logit_softcap)
+    value = None
+    if cfg.value_head:
+        value = dense_apply(params["value_head"], x)[..., 0]
+    out = ModelOutput(
+        logits=logits[:, 0], value=None if value is None else value[:, 0],
+        cache=None, aux_loss=jnp.zeros((), jnp.float32),
+    )
+    return out, new_pages
+
+
+def write_prefill_to_pages(
+    cache_k: jax.Array,       # [L, 1, P, KV, Dh] dense prefill rows
+    cache_v: jax.Array,
+    pages: Dict,
+    blocks: jax.Array,        # [M] int32 page ids owned by this request
+    prompt_len: jax.Array,    # scalar int32: rows >= prompt_len are dropped
+) -> Dict:
+    """Scatter one request's prefill K/V rows into its allocated pages."""
+    num_blocks = pages["k_pages"].shape[2]
+    block_size = pages["k_pages"].shape[3]
+    p = cache_k.shape[2]
+    rows = jnp.arange(p, dtype=jnp.int32)
+    page_idx = jnp.where(
+        rows < prompt_len, blocks[rows // block_size], num_blocks)
+    offset = rows % block_size
+    # [L, 1, P, KV, Dh] -> [L, KV, P, Dh]
+    k_rows = cache_k[:, 0].transpose(0, 2, 1, 3)
+    v_rows = cache_v[:, 0].transpose(0, 2, 1, 3)
+    k_pages = pages["k_pages"].at[:, :, page_idx, offset, :].set(
+        k_rows.astype(pages["k_pages"].dtype), mode="drop")
+    v_pages = pages["v_pages"].at[:, :, page_idx, offset, :].set(
+        v_rows.astype(pages["v_pages"].dtype), mode="drop")
+    return {"k_pages": k_pages, "v_pages": v_pages}
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,11 @@ flags (Yao et al., 2025) does not arise here; the realignment ratio at
 generation time is exactly 1 for fresh data.
 
 Sampling: temperature + top-p nucleus, both jit-static.  EOS handling:
-rows that emitted EOS produce PAD and a zero completion mask afterwards.
+the EOS token itself is scored (mask 1); afterwards rows produce PAD
+with *exact zeros* for mask, log_beta and value — every row of the
+result is well-formed stand-alone (even an EOS on the very first decode
+step yields the single-token mask [1, 0, ...]), so per-request
+consumers need not re-apply the batch mask.
 """
 from __future__ import annotations
 
@@ -81,10 +85,18 @@ def generate(
         cache, logits, alive = carry
         tok, lp = sample_token(logits, k_t)
         tok = jnp.where(alive, tok, PAD)
+        # Dead rows re-sample from whatever logits the PAD feed produced;
+        # zero their (log_beta, value) so each row is well-formed on its
+        # own — per-request consumers (the serve engine's tokenwise TV
+        # provenance) read these vectors without the batch mask.  A row
+        # whose *first* step emits EOS is the extreme case: mask
+        # [1, 0, ...] with exact zeros beyond the single scored token.
+        lp = jnp.where(alive, lp, 0.0)
         mask = alive.astype(jnp.float32)
         alive = jnp.logical_and(alive, tok != EOS)
         out, cache = bundle.decode_step(params, tok, cache)
         value = out.value if out.value is not None else jnp.zeros((b,))
+        value = value * mask
         return (cache, out.logits, alive), (tok, lp, mask, value)
 
     keys = jax.random.split(key, max_new_tokens)

@@ -11,6 +11,7 @@ from repro.runtime.admission import (
     AdmissionPolicy,
     MaxLagEviction,
     PassThrough,
+    TokenwiseTVGate,
     TVGatedAdmission,
     make_admission,
 )
@@ -23,6 +24,7 @@ from repro.runtime.queue import QueueClosed, TrajectoryItem, TrajectoryQueue
 from repro.runtime.regimes import (
     REGIMES,
     BackwardMixtureRegime,
+    EngineThreadedRegime,
     ForwardNRegime,
     FrozenRolloutProducer,
     LagRegime,
@@ -36,6 +38,7 @@ __all__ = [
     "AdmissionPolicy",
     "MaxLagEviction",
     "PassThrough",
+    "TokenwiseTVGate",
     "TVGatedAdmission",
     "make_admission",
     "PolicyStore",
@@ -46,6 +49,7 @@ __all__ = [
     "TrajectoryQueue",
     "REGIMES",
     "BackwardMixtureRegime",
+    "EngineThreadedRegime",
     "ForwardNRegime",
     "FrozenRolloutProducer",
     "LagRegime",

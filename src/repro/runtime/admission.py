@@ -80,6 +80,12 @@ class TVGatedAdmission(AdmissionPolicy):
 
     name = "tv_gate"
 
+    # Downweighted items below this weight are dropped instead: a
+    # near-zero-weight trajectory still costs a full learner step but
+    # contributes nothing (tv -> inf gives weight 0 exactly, which
+    # would silently train on dead data).
+    min_weight = 1e-3
+
     def __init__(
         self,
         delta: float,
@@ -98,11 +104,94 @@ class TVGatedAdmission(AdmissionPolicy):
         if tv <= threshold:
             return AdmissionDecision(admit=True, tv=tv)
         if self.mode == "downweight":
+            weight = threshold / tv if tv > 0 else 0.0
+            if not weight >= self.min_weight:   # catches 0.0 and nan
+                return AdmissionDecision(
+                    admit=False, tv=tv, reason="tv_zero_weight")
             return AdmissionDecision(
-                admit=True, weight=threshold / tv, tv=tv,
+                admit=True, weight=weight, tv=tv,
                 reason="tv_downweight",
             )
         return AdmissionDecision(admit=False, tv=tv, reason="tv_gate")
+
+
+class TokenwiseTVGate(AdmissionPolicy):
+    """Eq. 8 applied per *version segment* of a served trajectory.
+
+    The continuous-batching serve engine swaps weights in-flight, so a
+    single trajectory can straddle several behavior policies; its
+    payload carries per-token policy versions.  Whole-trajectory gating
+    averages the TV estimate over all tokens — a long fresh prefix can
+    mask a badly stale tail (and vice versa).  This policy segments the
+    trajectory at version boundaries, applies the paper's gate to each
+    segment's own TV estimate, and admits at the token-weighted mean of
+    the per-segment weights (1 for in-trust segments, (delta/2)/tv_s
+    downweighted or 0 dropped for the rest).
+
+    ``token_tv_fn(payload) -> (tv_tokens, versions)``: per-token sampled
+    TV terms 0.5*|ratio_t - 1| against the current policy, and the
+    per-token behavior versions (both [N]); the caller closes over the
+    policy store and model apply exactly as for ``tv_gate``.  Per-segment
+    decisions land in ``item.meta["tv_segments"]`` for metrics.
+    """
+
+    name = "tv_gate_tokenwise"
+    min_weight = TVGatedAdmission.min_weight
+
+    def __init__(
+        self,
+        delta: float,
+        token_tv_fn: Callable[[Any], Any],
+        mode: str = "downweight",
+    ) -> None:
+        if mode not in ("drop", "downweight"):
+            raise ValueError(f"mode must be drop|downweight, got {mode!r}")
+        self.delta = float(delta)
+        self.token_tv_fn = token_tv_fn
+        self.mode = mode
+
+    def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
+        import numpy as np
+
+        tv_tokens, versions = self.token_tv_fn(item.payload)
+        tv_tokens = np.asarray(tv_tokens, np.float64).reshape(-1)
+        versions = np.asarray(versions).reshape(-1)
+        n = tv_tokens.shape[0]
+        if versions.shape[0] != n:
+            raise ValueError(
+                f"tv/versions length mismatch: {n} vs {versions.shape[0]}")
+        if n == 0:
+            return AdmissionDecision(admit=True, tv=0.0)
+        threshold = self.delta / 2.0
+        # Segment boundaries where the producing policy version changes.
+        cuts = [0] + (
+            1 + np.flatnonzero(versions[1:] != versions[:-1])
+        ).tolist() + [n]
+        segments = []
+        weighted_tv = 0.0
+        weighted_w = 0.0
+        for lo, hi in zip(cuts[:-1], cuts[1:]):
+            tv_s = float(tv_tokens[lo:hi].mean())     # Eq. 8 per segment
+            if tv_s <= threshold:
+                w_s = 1.0
+            elif self.mode == "downweight" and tv_s > 0:
+                w_s = threshold / tv_s
+            else:
+                w_s = 0.0
+            segments.append(
+                {"version": int(versions[lo]), "tokens": hi - lo,
+                 "tv": tv_s, "weight": w_s})
+            weighted_tv += (hi - lo) * tv_s
+            weighted_w += (hi - lo) * w_s
+        tv = weighted_tv / n
+        weight = weighted_w / n
+        item.meta["tv_segments"] = segments
+        if not weight >= self.min_weight:
+            return AdmissionDecision(
+                admit=False, tv=tv, reason="tv_gate_tokenwise")
+        reason = "tv_tokenwise_downweight" if weight < 1.0 else ""
+        return AdmissionDecision(
+            admit=True, weight=weight, tv=tv, reason=reason)
 
 
 def make_admission(
@@ -122,4 +211,10 @@ def make_admission(
         if tv_fn is None:
             raise ValueError("tv_gate admission requires a tv_fn")
         return TVGatedAdmission(delta, tv_fn, mode=mode)
+    if name == "tv_gate_tokenwise":
+        if tv_fn is None:
+            raise ValueError(
+                "tv_gate_tokenwise admission requires a tv_fn returning "
+                "(tv_tokens, versions)")
+        return TokenwiseTVGate(delta, tv_fn, mode=mode)
     raise ValueError(f"unknown admission policy {name!r}")

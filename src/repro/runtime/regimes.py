@@ -310,6 +310,89 @@ class ThreadedRegime(LagRegime):
             self._thread.join(timeout=join_timeout)
 
 
+class EngineThreadedRegime(ThreadedRegime):
+    """Producer thread driving a continuous-batching ServeEngine.
+
+    The plain :class:`ThreadedRegime` freezes ``store.latest()`` once
+    per produced item, so a trajectory is homogeneous in its behavior
+    policy.  Here the *engine* owns the store and may swap weights
+    between decode steps (``serve.ServeEngine``), so a single
+    trajectory can straddle learner publishes — the intra-trajectory
+    policy lag the paper's tokenwise TV gate is built for.  Each queue
+    item is one :class:`~repro.serve.engine.ServedTrajectory`; its
+    representative ``behavior_version`` is the trajectory's *oldest*
+    token version (the mixture regime's conservative convention) and
+    the full per-token version vector rides in ``meta``.
+
+    ``request_fn() -> (prompt, max_new_tokens) | None`` feeds the
+    engine; None means the request stream is exhausted.  The thread
+    keeps ~2 batches of requests in flight so admission always has a
+    candidate when a slot frees up.
+    """
+
+    name = "threaded_engine"
+    phase_locked = False
+
+    def __init__(
+        self,
+        store: PolicyStore,
+        queue: TrajectoryQueue,
+        engine: Any,              # serve.ServeEngine bound to `store`
+        *,
+        request_fn: Callable[[], Optional[tuple]],
+        max_items: Optional[int] = None,
+    ) -> None:
+        if engine.store is not store:
+            raise ValueError(
+                "engine must share the regime's PolicyStore (its "
+                "in-flight swaps are how learner publishes reach the "
+                "actor)")
+        super().__init__(store, queue, producer=None, max_items=max_items)
+        self.engine = engine
+        self.request_fn = request_fn
+        self._source_dry = False
+
+    def _backlog(self) -> int:
+        sched = self.engine.scheduler
+        return len(sched.waiting) + len(sched.running)
+
+    def _feed(self) -> None:
+        target = 2 * self.engine.max_batch
+        while not self._source_dry and self._backlog() < target:
+            item = self.request_fn()
+            if item is None:
+                self._source_dry = True
+                return
+            prompt, max_new_tokens = item
+            self.engine.submit(prompt, max_new_tokens)
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop_event.is_set() and (
+                self.max_items is None or self.produced < self.max_items
+            ):
+                self._feed()
+                if not self.engine.has_work:
+                    break    # stream dry and everything drained
+                for traj in self.engine.step():
+                    try:
+                        self.queue.put(
+                            traj,
+                            behavior_version=traj.behavior_version,
+                            learner_version=self.store.version,
+                            versions=traj.versions.tolist(),
+                            request_id=traj.request_id,
+                            finish_reason=traj.finish_reason,
+                        )
+                    except QueueClosed:
+                        return
+                    self.produced += 1
+        except BaseException as e:  # surface producer crashes, don't hang
+            self.error = e
+        finally:
+            self.queue.close()
+
+
 def make_regime(
     name: str,
     store: PolicyStore,
@@ -318,15 +401,25 @@ def make_regime(
     *,
     forward_n: int = 4,
     max_items: Optional[int] = None,
+    engine: Any = None,
 ) -> LagRegime:
-    """Factory used by runners and launchers (`--runtime` flag)."""
+    """Factory used by runners and launchers (`--runtime` flag).
+
+    For ``threaded_engine``, `producer` is the request source
+    (``request_fn``) and `engine` the ServeEngine bound to `store`.
+    """
     if name == "backward_mixture":
         return BackwardMixtureRegime(store, queue, producer)
     if name == "forward_n":
         return ForwardNRegime(store, queue, producer, n_items=forward_n)
     if name == "threaded":
         return ThreadedRegime(store, queue, producer, max_items=max_items)
+    if name == "threaded_engine":
+        if engine is None:
+            raise ValueError("threaded_engine regime requires engine=")
+        return EngineThreadedRegime(
+            store, queue, engine, request_fn=producer, max_items=max_items)
     raise ValueError(f"unknown lag regime {name!r}")
 
 
-REGIMES = ("backward_mixture", "forward_n", "threaded")
+REGIMES = ("backward_mixture", "forward_n", "threaded", "threaded_engine")

@@ -1,0 +1,39 @@
+"""Continuous-batching serve engine with a paged KV cache.
+
+The actor side of the §5.2 asynchronous RLVR setup as a *serving
+system* rather than a fixed-batch ``generate()`` loop:
+
+* ``paged_cache``  — free-list block allocator over a pooled KV cache
+                     (fixed-size pages, per-request block tables,
+                     copy-free release on EOS).
+* ``scheduler``    — continuous-batching scheduler: admit / preempt /
+                     retire requests *between* decode steps so the
+                     decode batch stays full instead of draining with
+                     the slowest row.
+* ``engine``       — the decode loop over
+                     ``models.transformer.decode_step_paged`` (paged-
+                     attention kernel), with in-flight versioned weight
+                     swap from a ``runtime.PolicyStore``: every emitted
+                     token records the policy version that produced it,
+                     so finished trajectories carry per-token version
+                     vectors + per-token ``log_beta`` for the runtime's
+                     ``tv_gate_tokenwise`` admission policy.
+"""
+from repro.serve.engine import ServeEngine, ServedTrajectory, ServeStats
+from repro.serve.paged_cache import BlockAllocator, OutOfBlocks
+from repro.serve.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    RequestState,
+)
+
+__all__ = [
+    "BlockAllocator",
+    "ContinuousBatchingScheduler",
+    "OutOfBlocks",
+    "Request",
+    "RequestState",
+    "ServeEngine",
+    "ServeStats",
+    "ServedTrajectory",
+]

@@ -1,0 +1,380 @@
+"""Continuous-batching decode engine with in-flight versioned weight swap.
+
+One :meth:`ServeEngine.step` is one decode iteration for *all* running
+slots: the scheduler first admits/preempts/extends (so the batch stays
+full), admitted requests are prefilled into their pages, then a single
+jitted ``decode_step_paged`` advances every active slot one token
+through the paged-attention kernel.  Requests retire the moment they
+emit EOS or hit their own ``max_new_tokens`` — nobody waits for the
+slowest row, which is the entire throughput argument continuous
+batching makes over the phase-locked ``rollout.sampler.generate`` loop
+(kept as the static-batch fallback).
+
+**In-flight weight swap**: when constructed over a
+``runtime.PolicyStore``, the engine re-reads ``store.latest()`` every
+``swap_interval`` steps — *between* decode steps, never inside one — so
+a learner publish lands mid-generation.  Every emitted token records
+the policy version that produced its logits; a finished trajectory
+therefore carries a per-token version vector and per-token ``log_beta``
+(the β_T term), exactly the provenance the paper's TV machinery needs
+when the behavior policy changes *within* a trajectory
+(``runtime.admission.TokenwiseTVGate`` consumes it per version
+segment).
+
+Preemption recomputes KV (re-prefill over prompt + already-emitted
+tokens) rather than retracting tokens: emitted tokens may already be
+streamed to a client and their recorded (log_beta, version) provenance
+stays valid — the re-prefill only rebuilds cache rows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS, PAD
+from repro.models.registry import ModelBundle
+from repro.models.transformer import write_prefill_to_pages
+from repro.rollout.sampler import _top_p_filter
+from repro.serve.paged_cache import BlockAllocator
+from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+
+
+@dataclass(frozen=True)
+class ServedTrajectory:
+    """A finished request with per-token provenance.
+
+    ``versions[t]`` is the policy version whose logits produced
+    ``tokens[t]`` — constant when no swap happened mid-request, a step
+    function across swap boundaries otherwise.  ``behavior_version`` is
+    the *oldest* of them (the conservative representative the runtime's
+    max-lag admission keys on, matching the mixture regime's
+    convention).
+    """
+
+    request_id: int
+    prompt: np.ndarray          # [P] int32
+    tokens: np.ndarray          # [N] int32 (includes EOS when emitted)
+    log_beta: np.ndarray        # [N] float32 behavior log-probs
+    versions: np.ndarray        # [N] int64 producing policy versions
+    mask: np.ndarray            # [N] float32 (all ones; EOS is scored)
+    finish_reason: str          # "eos" | "length"
+    latency_s: float            # submit -> finish wall time
+    num_preemptions: int
+
+    @property
+    def behavior_version(self) -> int:
+        return int(self.versions.min()) if self.versions.size else 0
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclass
+class ServeStats:
+    steps: int = 0               # scheduling rounds (one chunk each)
+    decode_steps: int = 0        # individual decode iterations
+    prefills: int = 0
+    finished: int = 0
+    tokens_out: int = 0
+    preemptions: int = 0
+    swaps: int = 0
+    occupancy_sum: float = 0.0   # emitting slots summed over decode steps
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dict(self.__dict__)
+        d["mean_occupancy"] = (
+            self.occupancy_sum / self.decode_steps
+            if self.decode_steps else 0.0
+        )
+        return d
+
+
+class ServeEngine:
+    """Paged-KV continuous-batching generation over a ModelBundle."""
+
+    def __init__(
+        self,
+        bundle: ModelBundle,
+        params: Any = None,
+        *,
+        num_blocks: int = 64,
+        block_size: int = 8,
+        max_batch: int = 4,
+        max_seq_len: int = 256,
+        decode_chunk: int = 1,
+        store: Any = None,            # Optional[runtime.PolicyStore]
+        swap_interval: int = 1,
+        temperature: float = 1.0,
+        top_p: float = 1.0,
+        seed: int = 0,
+        kernel_mode: Optional[str] = None,
+    ) -> None:
+        if bundle.decode_step_paged is None:
+            from repro.models.transformer import paged_arch_unsupported
+
+            raise ValueError(
+                f"{bundle.cfg.name}: {paged_arch_unsupported(bundle.cfg)}")
+        if params is None and store is None:
+            raise ValueError("need params or a PolicyStore")
+        self.bundle = bundle
+        self.store = store
+        self.swap_interval = max(int(swap_interval), 1)
+        if store is not None:
+            self.params, self.version = store.latest()
+        else:
+            self.params, self.version = params, 0
+        self.block_size = block_size
+        max_blocks_per_request = -(-max_seq_len // block_size)
+        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.scheduler = ContinuousBatchingScheduler(
+            self.allocator, max_batch=max_batch,
+            max_blocks_per_request=max_blocks_per_request)
+        self.pages = bundle.init_paged_cache(num_blocks, block_size)
+        self.max_batch = max_batch
+        self._tables = np.zeros(
+            (max_batch, max_blocks_per_request), np.int32)
+        self._pos = np.zeros((max_batch,), np.int32)
+        self._active = np.zeros((max_batch,), bool)
+        self._last_tok = np.zeros((max_batch,), np.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self.stats = ServeStats()
+        self._kernel_mode = kernel_mode
+        temp = max(float(temperature), 1e-6)
+
+        def _sample(logits, key):
+            logits = logits.astype(jnp.float32) / temp
+            logits = _top_p_filter(logits, top_p)
+            tok = jax.random.categorical(key, logits, axis=-1)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+            return tok.astype(jnp.int32), lp
+
+        chunk = max(int(decode_chunk), 1)
+        self.decode_chunk = chunk
+
+        def _decode(params, token, pages, tables, pos, active, remaining,
+                    key):
+            """`chunk` decode steps in one dispatch (lax.scan).
+
+            Multi-step decode amortizes the per-step host round-trip —
+            the cost that otherwise hands the phase-locked loop (whose
+            whole decode is one fused scan) most of the continuous
+            engine's structural win back.  Rows terminate *in-graph*
+            (EOS or per-request budget via `remaining`); a retiring row
+            idles masked until the chunk ends, bounding wasted work at
+            chunk-1 steps per retirement.
+            """
+            def body(carry, k_t):
+                token, pos, active, emitted, pages = carry
+                out, pages = bundle.decode_step_paged(
+                    params, token, pages, tables, pos, active,
+                    kernel_mode=kernel_mode)
+                tok, lp = _sample(out.logits, k_t)
+                mask = active
+                tok = jnp.where(active, tok, jnp.int32(PAD))
+                lp = jnp.where(active, lp, 0.0)
+                pos = pos + active.astype(jnp.int32)
+                emitted = emitted + active.astype(jnp.int32)
+                active = jnp.logical_and(active, tok != EOS)
+                active = jnp.logical_and(active, emitted < remaining)
+                return (tok, pos, active, emitted, pages), (tok, lp, mask)
+
+            keys = jax.random.split(key, chunk)
+            carry = (token, pos, active, jnp.zeros_like(pos), pages)
+            (_, _, _, _, pages), (toks, lps, masks) = jax.lax.scan(
+                body, carry, keys)
+            return toks, lps, masks, pages
+
+        # Pages are donated: the pool is the engine's single large
+        # buffer and every step rewrites a few rows of it in place.
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+        self._prefill_fns: Dict[int, Any] = {}   # keyed by padded length
+
+        def _make_prefill(padded_len: int):
+            def _prefill(params, prompt, kv_valid, blocks, plen, pages,
+                         key):
+                out = bundle.forward(
+                    params, prompt, return_cache=True,
+                    cache_len=padded_len, kv_valid=kv_valid)
+                pages = write_prefill_to_pages(
+                    out.cache["k"], out.cache["v"], pages, blocks, plen)
+                last = jnp.take(out.logits[0], plen - 1, axis=0)
+                tok, lp = _sample(last[None], key)
+                return tok[0], lp[0], pages
+
+            return jax.jit(_prefill, donate_argnums=(5,))
+
+        self._make_prefill = _make_prefill
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(
+        self,
+        prompt: Sequence[int] | np.ndarray,
+        max_new_tokens: int,
+        request_id: Optional[int] = None,
+    ) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        kw = {} if request_id is None else {"request_id": request_id}
+        req = Request(prompt=prompt, max_new_tokens=max_new_tokens, **kw)
+        self.scheduler.submit(req)
+        return req
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    # -- internals -----------------------------------------------------------
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _maybe_swap(self) -> None:
+        if self.store is None:
+            return
+        if self.stats.steps % self.swap_interval != 0:
+            return
+        params, version = self.store.latest()
+        if version != self.version:
+            self.params, self.version = params, version
+            self.stats.swaps += 1
+
+    def _prefill(self, req: Request, finished: List[ServedTrajectory]
+                 ) -> None:
+        """(Re)compute KV rows for prompt + emitted tokens; fresh
+        requests also sample their first token from the prefill logits."""
+        slot = req.slot
+        resume = bool(req.tokens)
+        ids = req.prompt if not resume else np.concatenate(
+            [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+        plen = int(ids.shape[0])
+        padded = -(-plen // self.block_size) * self.block_size
+        fn = self._prefill_fns.get(padded)
+        if fn is None:
+            fn = self._prefill_fns[padded] = self._make_prefill(padded)
+        row = np.zeros((1, padded), np.int32)
+        row[0, :plen] = ids
+        kv_valid = np.zeros((1, padded), bool)
+        kv_valid[0, :plen] = True
+        table = self.allocator.padded_table(
+            req.blocks, self._tables.shape[1])
+        tok, lp, self.pages = fn(
+            self.params, jnp.asarray(row), jnp.asarray(kv_valid),
+            jnp.asarray(table), jnp.int32(plen), self.pages,
+            self._next_key())
+        self.stats.prefills += 1
+        self._tables[slot] = table
+        self._pos[slot] = plen
+        if resume:
+            self._last_tok[slot] = req.tokens[-1]
+        else:
+            self._record(req, int(tok), float(lp), finished)
+
+    def _record(self, req: Request, tok: int, lp: float,
+                finished: List[ServedTrajectory]) -> None:
+        """Book one emitted token; retire the request when done."""
+        req.tokens.append(tok)
+        req.log_beta.append(lp)
+        req.versions.append(self.version)
+        self.stats.tokens_out += 1
+        if tok == EOS:
+            self._finish(req, "eos", finished)
+        elif len(req.tokens) >= req.max_new_tokens:
+            self._finish(req, "length", finished)
+        else:
+            self._last_tok[req.slot] = tok
+
+    def _finish(self, req: Request, reason: str,
+                finished: List[ServedTrajectory]) -> None:
+        slot = req.slot
+        self.scheduler.retire(req, reason)
+        self._clear_slot(slot)
+        self.stats.finished += 1
+        n = len(req.tokens)
+        finished.append(ServedTrajectory(
+            request_id=req.request_id,
+            prompt=req.prompt,
+            tokens=np.asarray(req.tokens, np.int32),
+            log_beta=np.asarray(req.log_beta, np.float32),
+            versions=np.asarray(req.versions, np.int64),
+            mask=np.ones((n,), np.float32),
+            finish_reason=reason,
+            latency_s=req.finish_time - req.submit_time,
+            num_preemptions=req.num_preemptions,
+        ))
+
+    def _clear_slot(self, slot: Optional[int]) -> None:
+        if slot is None:
+            return
+        self._active[slot] = False
+        self._tables[slot] = 0
+        self._pos[slot] = 0
+        self._last_tok[slot] = 0
+
+    # -- the decode loop -----------------------------------------------------
+
+    def step(self) -> List[ServedTrajectory]:
+        """One scheduling round + decode chunk; returns newly finished
+        trajectories."""
+        finished: List[ServedTrajectory] = []
+        self._maybe_swap()
+        self.stats.steps += 1
+        admitted, _ = self.scheduler.schedule(lookahead=self.decode_chunk)
+        self.stats.preemptions = self.scheduler.preemptions
+        for req in admitted:
+            self._prefill(req, finished)
+        # Rebuild slot state from the scheduler: preempted/retired slots
+        # (their Request no longer knows its old index) go quiet, and
+        # running rows pick up pages the extension pass just granted.
+        by_slot = {r.slot: r for r in self.scheduler.running}
+        remaining = np.zeros((self.max_batch,), np.int32)
+        for slot in range(self.max_batch):
+            req = by_slot.get(slot)
+            if req is None:
+                self._clear_slot(slot)
+            else:
+                self._active[slot] = True
+                self._tables[slot] = self.allocator.padded_table(
+                    req.blocks, self._tables.shape[1])
+                remaining[slot] = req.max_new_tokens - len(req.tokens)
+        if not self._active.any():
+            return finished
+        toks, lps, masks, self.pages = self._decode(
+            self.params, jnp.asarray(self._last_tok), self.pages,
+            jnp.asarray(self._tables), jnp.asarray(self._pos),
+            jnp.asarray(self._active), jnp.asarray(remaining),
+            self._next_key())
+        toks_np = np.asarray(toks)       # [chunk, B]
+        lps_np = np.asarray(lps)
+        masks_np = np.asarray(masks)
+        self.stats.occupancy_sum += float(masks_np.sum())
+        self.stats.decode_steps += self.decode_chunk
+        for req in list(self.scheduler.running):
+            slot = req.slot
+            self._pos[slot] += int(masks_np[:, slot].sum())
+            for t in range(self.decode_chunk):
+                if not masks_np[t, slot]:
+                    break
+                self._record(req, int(toks_np[t, slot]),
+                             float(lps_np[t, slot]), finished)
+        return finished
+
+    def run(self, max_steps: Optional[int] = None
+            ) -> List[ServedTrajectory]:
+        """Step until every submitted request finished (or max_steps)."""
+        out: List[ServedTrajectory] = []
+        steps = 0
+        while self.has_work:
+            out.extend(self.step())
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return out

@@ -1,0 +1,73 @@
+"""Free-list block allocator for the pooled (paged) KV cache.
+
+The device-side pool (``models.transformer.init_paged_cache``) is a
+fixed set of ``num_blocks`` pages of ``block_size`` token rows each;
+this module owns *which request holds which pages*.  Allocation pops
+page ids off a free list and release pushes them back — freeing a
+finished request is O(pages) pointer work with **zero cache copies**
+(the rows are simply never referenced again; the next owner overwrites
+them).
+
+Page ids are plain ints; per-request block tables (ordered page lists)
+live on the :class:`repro.serve.scheduler.Request`.  The table rows the
+kernel sees must pad unused slots with an *in-range* id (0): the paged
+attention index map fetches skipped pages too.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, Iterable, List
+
+import numpy as np
+
+
+class OutOfBlocks(RuntimeError):
+    """Allocation request exceeds the free pool (caller should preempt)."""
+
+
+class BlockAllocator:
+    """FIFO free list over ``num_blocks`` fixed-size KV pages."""
+
+    def __init__(self, num_blocks: int, block_size: int) -> None:
+        if num_blocks < 1 or block_size < 1:
+            raise ValueError(
+                f"need positive pool, got {num_blocks}x{block_size}")
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # FIFO reuse spreads writes across the pool, which keeps stale
+        # rows cold and makes use-after-free bugs loud in tests.
+        self._free: Deque[int] = deque(range(num_blocks))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to hold `n_tokens` rows."""
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def allocate(self, n: int) -> List[int]:
+        """Pop `n` page ids; raises :class:`OutOfBlocks` when short."""
+        if n > len(self._free):
+            raise OutOfBlocks(
+                f"asked for {n} pages, {len(self._free)} free "
+                f"(pool {self.num_blocks})")
+        return [self._free.popleft() for _ in range(n)]
+
+    def release(self, blocks: Iterable[int]) -> None:
+        """Return pages to the pool (copy-free: no cache data moves)."""
+        for b in blocks:
+            self._free.append(int(b))
+
+    def padded_table(self, blocks: List[int], width: int) -> np.ndarray:
+        """[width] int32 table row; unused slots pad with page 0 (the
+        kernel's index map requires in-range ids everywhere)."""
+        if len(blocks) > width:
+            raise ValueError(
+                f"request owns {len(blocks)} pages > table width {width}")
+        row = np.zeros((width,), np.int32)
+        row[: len(blocks)] = blocks
+        return row

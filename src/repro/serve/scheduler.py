@@ -1,0 +1,208 @@
+"""Continuous-batching scheduler: admit / preempt / retire between steps.
+
+The decode batch is a fixed set of ``max_batch`` *slots*.  Instead of
+running a batch until its slowest member finishes (the phase-locked
+``generate()`` loop), the scheduler refills slots the moment their
+request retires, so the decode step stays full under mixed completion
+lengths — the vLLM iteration-level scheduling model.
+
+Decisions happen *between* decode steps, in :meth:`schedule`:
+
+1. **extend** — every running request about to write into a fresh page
+   gets one allocated; if the pool is dry, the most recently admitted
+   running request is preempted (LIFO victim choice, vLLM-style) until
+   the extension fits.
+2. **admit** — FIFO over the waiting queue while free slots *and*
+   enough pages for the whole prompt (plus the first decode write)
+   exist.  Head-of-line blocking is deliberate: skipping ahead starves
+   long prompts.
+
+Preemption frees the victim's pages copy-free and re-queues it at the
+*front* of the waiting queue.  Already-emitted tokens are never
+retracted (they may have been streamed to a client): on re-admission
+the engine recomputes KV for prompt + emitted tokens and resumes.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.paged_cache import BlockAllocator
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+
+
+_rid_counter = itertools.count()
+
+
+@dataclass(eq=False)    # identity equality: lists of Requests use `is`
+class Request:
+    """One generation request plus its recorded per-token provenance."""
+
+    prompt: np.ndarray               # [P] int32 token ids (no padding)
+    max_new_tokens: int
+    request_id: int = field(default_factory=lambda: next(_rid_counter))
+    state: RequestState = RequestState.WAITING
+    slot: Optional[int] = None
+    blocks: List[int] = field(default_factory=list)
+    # Per emitted token: id, behavior log-prob, producing policy version.
+    tokens: List[int] = field(default_factory=list)
+    log_beta: List[float] = field(default_factory=list)
+    versions: List[int] = field(default_factory=list)
+    submit_time: float = field(default_factory=time.monotonic)
+    finish_time: Optional[float] = None
+    finish_reason: Optional[str] = None
+    num_preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def num_cached(self) -> int:
+        """KV rows resident once (re)prefilled: prompt + all emitted
+        tokens except the pending one (written by the next decode)."""
+        return self.prompt_len + max(len(self.tokens) - 1, 0)
+
+
+class ContinuousBatchingScheduler:
+    """Slot/page bookkeeping for the serve engine's decode loop."""
+
+    def __init__(
+        self,
+        allocator: BlockAllocator,
+        *,
+        max_batch: int,
+        max_blocks_per_request: int,
+    ) -> None:
+        self.allocator = allocator
+        self.max_batch = max_batch
+        self.max_blocks_per_request = max_blocks_per_request
+        self.waiting: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._admission_order: List[Request] = []   # oldest first
+        self.preemptions = 0
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def running(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting) or any(
+            r is not None for r in self.slots)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        total = req.prompt_len + req.max_new_tokens
+        cap = self.max_blocks_per_request * self.allocator.block_size
+        if total > cap:
+            raise ValueError(
+                f"request {req.request_id} needs {total} token rows > "
+                f"table capacity {cap}")
+        if self.allocator.blocks_for(total) > self.allocator.num_blocks:
+            raise ValueError(
+                f"request {req.request_id} can never fit the pool "
+                f"({total} rows > {self.allocator.num_blocks} pages x "
+                f"{self.allocator.block_size})")
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+
+    def retire(self, req: Request, reason: str) -> None:
+        """Finish a request: release its pages copy-free, free the slot."""
+        req.state = RequestState.FINISHED
+        req.finish_reason = reason
+        req.finish_time = time.monotonic()
+        self.allocator.release(req.blocks)
+        req.blocks = []
+        if req.slot is not None:
+            self.slots[req.slot] = None
+            req.slot = None
+        if req in self._admission_order:
+            self._admission_order.remove(req)
+
+    def _preempt(self, victim: Request) -> None:
+        self.preemptions += 1
+        victim.num_preemptions += 1
+        self.allocator.release(victim.blocks)
+        victim.blocks = []
+        if victim.slot is not None:
+            self.slots[victim.slot] = None
+            victim.slot = None
+        self._admission_order.remove(victim)
+        victim.state = RequestState.WAITING
+        self.waiting.appendleft(victim)
+
+    # -- the per-step decision -----------------------------------------------
+
+    def _rows_needed(self, req: Request, lookahead: int) -> int:
+        """KV rows `req` must own to run `lookahead` decode writes.
+
+        Capped at the request's lifetime row count (prompt + budget):
+        a request never writes its final emitted token's row.
+        """
+        writes = min(lookahead, req.max_new_tokens - len(req.tokens) + 1)
+        return min(req.num_cached + max(writes, 1),
+                   req.prompt_len + req.max_new_tokens)
+
+    def schedule(self, lookahead: int = 1
+                 ) -> Tuple[List[Request], List[Request]]:
+        """Returns (admitted, preempted) for the next decode round.
+
+        Admitted requests need a (re)prefill before the round;
+        preempted ones have left their slots.  Every request still
+        running after this call owns pages for its next `lookahead` KV
+        writes (the engine's multi-step decode chunk runs that many
+        steps without a scheduling point).
+        """
+        preempted: List[Request] = []
+
+        # 1. Extend running requests that cross a page boundary.
+        for req in list(self._admission_order):
+            if req.slot is None:
+                continue
+            need = (
+                self.allocator.blocks_for(self._rows_needed(req, lookahead))
+                - len(req.blocks)
+            )
+            while need > 0 and not self.allocator.can_allocate(need):
+                victim = self._admission_order[-1]
+                self._preempt(victim)
+                preempted.append(victim)
+                if victim is req:
+                    need = 0    # preempted itself; nothing to extend
+            if need > 0:
+                req.blocks.extend(self.allocator.allocate(need))
+
+        # 2. Admit from the waiting queue into free slots (FIFO).
+        admitted: List[Request] = []
+        while self.waiting:
+            free_slots = [i for i, r in enumerate(self.slots) if r is None]
+            if not free_slots:
+                break
+            req = self.waiting[0]
+            need = self.allocator.blocks_for(
+                self._rows_needed(req, lookahead))
+            if not self.allocator.can_allocate(need):
+                break
+            self.waiting.popleft()
+            req.blocks = self.allocator.allocate(need)
+            req.slot = free_slots[0]
+            req.state = RequestState.RUNNING
+            self.slots[req.slot] = req
+            self._admission_order.append(req)
+            admitted.append(req)
+        return admitted, preempted

@@ -7,6 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention_pallas import flash_attention
 from repro.kernels.fused_logprob_pallas import logprobs_pallas
+from repro.kernels.paged_attention_pallas import paged_attention
 from repro.kernels.vtrace_pallas import vtrace_pallas
 from repro.kernels.wkv6_pallas import wkv6_pallas
 from repro.kernels import ops
@@ -72,6 +73,92 @@ def test_flash_attention_bf16(dtype):
                              v.astype(jnp.float32), causal=True)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (serve engine)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_tables(rng, b, num_blocks, max_blocks, block_size,
+                   full_lens=False):
+    """Shuffled distinct page assignments + ragged context lengths."""
+    perm = rng.permutation(num_blocks)
+    tables = np.zeros((b, max_blocks), np.int32)
+    lens = np.zeros((b,), np.int32)
+    nxt = 0
+    for i in range(b):
+        n_pages = int(rng.integers(1, max_blocks + 1))
+        if nxt + n_pages > num_blocks:
+            n_pages = num_blocks - nxt
+        tables[i, :n_pages] = perm[nxt:nxt + n_pages]
+        nxt += n_pages
+        hi = n_pages * block_size
+        lens[i] = hi if full_lens else int(rng.integers(1, hi + 1))
+    return tables, lens
+
+
+@pytest.mark.parametrize(
+    "b,h,kv,d,bs,window",
+    [(4, 4, 2, 16, 8, None), (3, 4, 4, 32, 4, None), (2, 8, 2, 16, 8, 5),
+     (5, 2, 1, 8, 16, None), (4, 4, 2, 16, 8, 12)],
+)
+def test_paged_attention_ragged_sweep(b, h, kv, d, bs, window):
+    """Pallas kernel vs jnp oracle on shuffled, ragged block tables."""
+    rng = np.random.default_rng(b * 31 + h)
+    num_blocks, max_blocks = 24, 4
+    ks = jax.random.split(jax.random.fold_in(KEY, b * h * d), 3)
+    q = jax.random.normal(ks[0], (b, h, d))
+    kp = jax.random.normal(ks[1], (kv, num_blocks, bs, d))
+    vp = jax.random.normal(ks[2], (kv, num_blocks, bs, d))
+    tables, lens = _ragged_tables(rng, b, num_blocks, max_blocks, bs)
+    out = paged_attention(q, kp, vp, jnp.asarray(tables),
+                          jnp.asarray(lens), window=window, interpret=True)
+    want = ref.ref_paged_attention(q, kp, vp, jnp.asarray(tables),
+                                   jnp.asarray(lens), window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_inactive_slot_zero_output():
+    """context_len 0 (an empty serve slot) must yield exactly zero."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 4, 16))
+    kp = jax.random.normal(ks[1], (2, 8, 4, 16))
+    vp = jax.random.normal(ks[2], (2, 8, 4, 16))
+    tables = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    lens = jnp.asarray([0, 6], jnp.int32)
+    for fn in (
+        lambda: paged_attention(q, kp, vp, tables, lens, interpret=True),
+        lambda: ref.ref_paged_attention(q, kp, vp, tables, lens),
+    ):
+        out = np.asarray(fn())
+        np.testing.assert_array_equal(out[0], 0.0)
+        assert np.abs(out[1]).max() > 0
+
+
+def test_paged_attention_matches_dense_attention():
+    """A contiguous single-request table == plain causal attention on
+    the last query position (the dense/paged equivalence the serve
+    engine relies on)."""
+    s, h, kv, d, bs = 12, 4, 2, 16, 4
+    ks = jax.random.split(KEY, 3)
+    q_full = jax.random.normal(ks[0], (1, s, h, d))
+    k_full = jax.random.normal(ks[1], (1, s, kv, d))
+    v_full = jax.random.normal(ks[2], (1, s, kv, d))
+    want = ref.ref_attention(q_full, k_full, v_full, causal=True)[0, -1]
+    # pack rows 0..s-1 into contiguous pages
+    kp = jnp.zeros((kv, 4, bs, d))
+    vp = jnp.zeros((kv, 4, bs, d))
+    kp = kp.at[:, :3].set(
+        k_full[0].transpose(1, 0, 2).reshape(kv, 3, bs, d))
+    vp = vp.at[:, :3].set(
+        v_full[0].transpose(1, 0, 2).reshape(kv, 3, bs, d))
+    tables = jnp.asarray([[0, 1, 2]], jnp.int32)
+    lens = jnp.asarray([s], jnp.int32)
+    got = ref.ref_paged_attention(q_full[:, -1], kp, vp, tables, lens)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -83,6 +83,39 @@ def test_generate_eos_masks_tail():
         assert (c[t + 1:] == PAD).all()
 
 
+def test_generate_eos_on_first_decode_step_single_token_mask():
+    """A request whose *first* decode step emits EOS must come back as a
+    well-formed single-token result: mask [1, 0, ...], PAD completion
+    tail, and exact zeros in log_beta/values beyond the scored EOS —
+    per-request consumers (the serve engine's tokenwise provenance) read
+    these vectors without re-applying the batch mask."""
+    import dataclasses
+
+    def bias_eos(out):
+        return out._replace(logits=out.logits.at[..., EOS].add(1e4))
+
+    # Force EOS from the *prefill* logits only: the dead-row decode
+    # steps that follow sample from ordinary (unforced) distributions,
+    # which is exactly where garbage log-probs used to leak in.
+    forced = dataclasses.replace(
+        BUNDLE,
+        forward=lambda *a, **k: bias_eos(BUNDLE.forward(*a, **k)),
+    )
+    for n in (1, 6):
+        res = jax.jit(lambda pr, k: generate(
+            forced, PARAMS, pr, k, max_new_tokens=n))(
+            _prompt(2, 8), jax.random.PRNGKey(4))
+        comp = np.asarray(res.completion)
+        assert (comp[:, 0] == EOS).all()
+        np.testing.assert_array_equal(
+            np.asarray(res.mask), [[1.0] + [0.0] * (n - 1)] * 2)
+        np.testing.assert_array_equal(comp[:, 1:], PAD)
+        # exact zeros (not just masked garbage) beyond the scored token
+        np.testing.assert_array_equal(np.asarray(res.log_beta[:, 1:]), 0.0)
+        np.testing.assert_array_equal(np.asarray(res.values[:, 1:]), 0.0)
+        assert np.isfinite(np.asarray(res.log_beta)).all()
+
+
 def test_top_p_restricts_support():
     logits = jnp.asarray([[0.0, 0.1, 5.0, 5.1]])
     from repro.rollout.sampler import _top_p_filter

@@ -16,6 +16,7 @@ from repro.runtime import (
     PolicyStore,
     QueueClosed,
     StaleVersionError,
+    TokenwiseTVGate,
     TrajectoryQueue,
     TVGatedAdmission,
     make_admission,
@@ -154,14 +155,138 @@ def test_tv_gate_downweight_mode():
     assert q.stats().downweighted == 1
 
 
+def test_empty_queue_pop_times_out_clean():
+    """Popping an empty (open) queue returns None after the timeout and
+    perturbs no counters."""
+    q = TrajectoryQueue()
+    t0 = time.monotonic()
+    assert q.get(learner_version=0, timeout=0.05) is None
+    assert time.monotonic() - t0 < 5.0
+    stats = q.stats()
+    assert (stats.puts, stats.admitted, stats.dropped) == (0, 0, 0)
+    assert stats.lag_histogram == {}
+    # zero timeout: immediate None, still no counters
+    assert q.get(learner_version=0, timeout=0.0) is None
+    assert q.stats().admitted == 0
+
+
+def test_tv_gate_zero_weight_downweight_clamped_to_drop():
+    """Downweighting must not admit dead data: tv -> inf yields weight 0
+    (and near-inf yields weight < min_weight); both are dropped with a
+    dedicated reason instead of training at weight ~0."""
+    gate = TVGatedAdmission(delta=0.2, tv_fn=lambda p: p,
+                            mode="downweight")
+    q = TrajectoryQueue(admission=gate)
+    for tv in (float("inf"), 1e9, 0.4):
+        q.put(tv, behavior_version=0, learner_version=0)
+    q.close()
+    admitted = []
+    while (item := q.get(learner_version=0)) is not None:
+        admitted.append(item)
+    # only the finite, >= min_weight item survives
+    assert [i.payload for i in admitted] == [0.4]
+    assert admitted[0].weight == pytest.approx(0.1 / 0.4)
+    stats = q.stats()
+    assert stats.drops_by_reason == {"tv_zero_weight": 2}
+    assert stats.downweighted == 1
+
+
+def test_max_lag_eviction_every_item_stale():
+    """When every queued item is over-age the consumer sees a clean
+    end-of-stream (None), with the drops fully accounted."""
+    q = TrajectoryQueue(admission=MaxLagEviction(max_lag=1))
+    for v in range(4):
+        q.put(f"p{v}", behavior_version=v, learner_version=10)
+    q.close()
+    assert q.get(learner_version=10) is None     # all dropped, drained
+    stats = q.stats()
+    assert stats.admitted == 0 and stats.dropped == 4
+    assert stats.drops_by_reason == {"max_lag": 4}
+    assert stats.admission_drop_rate == 1.0
+    assert stats.lag_histogram == {}             # nothing ever admitted
+
+
+def test_max_lag_all_stale_phase_locked_regime_warns_and_stops():
+    """A phase-locked regime whose producer only yields stale items must
+    terminate (with a warning), not spin."""
+    store = PolicyStore(_params(0.0), capacity=2)
+    queue = TrajectoryQueue(admission=MaxLagEviction(max_lag=0))
+    store.publish(_params(1.0))   # learner is at v1; producer serves v0
+
+    regime = make_regime("forward_n", store, queue,
+                         lambda params: float(params["w"][0]), forward_n=2)
+    # items enqueue with behavior_version == fill-time latest (1), then
+    # the learner moves ahead: every consume sees lag >= 1 > max_lag 0.
+    with pytest.warns(RuntimeWarning, match="starved"):
+        item = regime.next_item(learner_version=store.version + 1,
+                                max_refills=3)
+    assert item is None
+    assert queue.stats().dropped > 0
+
+
+def test_tokenwise_tv_gate_segments_and_weights():
+    """Per-segment Eq. 8: only the stale segment is downweighted, and
+    the scalar weight is the token-weighted mean of segment weights."""
+    tv = np.asarray([0.01, 0.01, 0.3, 0.3, 0.3, 0.3])
+    versions = np.asarray([0, 0, 1, 1, 1, 1])
+    gate = TokenwiseTVGate(delta=0.2, token_tv_fn=lambda p: p,
+                           mode="downweight")
+    q = TrajectoryQueue(admission=gate)
+    q.put((tv, versions), behavior_version=0, learner_version=1)
+    item = q.get(learner_version=1)
+    # segment 0 passes (w=1); segment 1 at tv .3 -> w = .1/.3
+    want = (2 * 1.0 + 4 * (0.1 / 0.3)) / 6
+    assert item.weight == pytest.approx(want)
+    segs = item.meta["tv_segments"]
+    assert [(s["version"], s["tokens"]) for s in segs] == [(0, 2), (1, 4)]
+    assert segs[0]["weight"] == 1.0
+    assert segs[1]["weight"] == pytest.approx(0.1 / 0.3)
+    # drop mode: stale segment zeroed, weight = live fraction
+    gate_d = TokenwiseTVGate(delta=0.2, token_tv_fn=lambda p: p,
+                             mode="drop")
+
+    class _I:
+        payload, meta = (tv, versions), {}
+
+    dec = gate_d.admit(_I())
+    assert dec.admit and dec.weight == pytest.approx(2 / 6)
+    # all segments hopeless -> dropped outright
+    hopeless = (np.full((4,), 50.0), np.asarray([0, 0, 1, 1]))
+
+    class _I2:
+        payload, meta = hopeless, {}
+
+    dec2 = gate_d.admit(_I2())
+    assert not dec2.admit and dec2.reason == "tv_gate_tokenwise"
+
+
+def test_tokenwise_tv_gate_empty_and_mismatched():
+    gate = TokenwiseTVGate(delta=0.2, token_tv_fn=lambda p: p)
+
+    class _I:
+        def __init__(self, p):
+            self.payload, self.meta = p, {}
+
+    dec = gate.admit(_I((np.zeros((0,)), np.zeros((0,)))))
+    assert dec.admit and dec.weight == 1.0    # empty trajectory: no-op
+    with pytest.raises(ValueError, match="mismatch"):
+        gate.admit(_I((np.zeros((3,)), np.zeros((2,)))))
+
+
 def test_make_admission_factory():
     assert isinstance(make_admission("pass_through"), PassThrough)
     assert isinstance(make_admission("max_lag", max_lag=1), MaxLagEviction)
     assert isinstance(
         make_admission("tv_gate", delta=0.1, tv_fn=lambda p: 0.0),
         TVGatedAdmission)
+    assert isinstance(
+        make_admission("tv_gate_tokenwise", delta=0.1, tv_fn=lambda p: p,
+                       mode="downweight"),
+        TokenwiseTVGate)
     with pytest.raises(ValueError):
         make_admission("tv_gate")  # tv_fn required
+    with pytest.raises(ValueError):
+        make_admission("tv_gate_tokenwise")  # tv_fn required
     with pytest.raises(ValueError):
         make_admission("nope")
 

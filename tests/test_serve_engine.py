@@ -1,0 +1,300 @@
+"""Serve subsystem: block allocator, continuous-batching scheduler,
+paged-KV engine parity vs the dense generate loop, preemption
+correctness, in-flight weight swap provenance, and tokenwise TV
+admission over served trajectories."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS, get_tokenizer
+from repro.models.registry import build
+from repro.rollout.sampler import generate, score_tokens
+from repro.runtime import (
+    PolicyStore,
+    TokenwiseTVGate,
+    TrajectoryQueue,
+    TVGatedAdmission,
+    make_regime,
+)
+from repro.serve import (
+    BlockAllocator,
+    ContinuousBatchingScheduler,
+    OutOfBlocks,
+    Request,
+    ServeEngine,
+)
+
+TOK = get_tokenizer()
+CFG = ModelConfig(
+    name="serve-test", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=TOK.vocab_size,
+)
+BUNDLE = build(CFG)
+PARAMS = BUNDLE.init(jax.random.PRNGKey(0))
+
+PROMPTS = [np.asarray(TOK.encode(p), np.int32)
+           for p in ("1+2=?#", "3*4=?#", "10-7=?#")]
+BUDGETS = [5, 9, 13]
+
+
+def _greedy_reference(params, row, n):
+    g = jax.jit(lambda p, t, k: generate(
+        BUNDLE, p, t, k, max_new_tokens=n, temperature=1e-4))(
+        params, jnp.asarray(row)[None], jax.random.PRNGKey(7))
+    return np.asarray(g.completion[0])
+
+
+# --- allocator --------------------------------------------------------------
+
+
+def test_allocator_free_list_and_reuse():
+    a = BlockAllocator(num_blocks=4, block_size=8)
+    assert a.num_free == 4
+    b1 = a.allocate(3)
+    assert a.num_free == 1 and len(set(b1)) == 3
+    with pytest.raises(OutOfBlocks):
+        a.allocate(2)
+    a.release(b1[:2])               # copy-free release
+    assert a.num_free == 3
+    b2 = a.allocate(3)
+    assert set(b2) & set(b1[:2])    # released pages are reused
+    assert a.blocks_for(1) == 1 and a.blocks_for(8) == 1
+    assert a.blocks_for(9) == 2
+
+
+def test_allocator_padded_table_in_range():
+    a = BlockAllocator(num_blocks=8, block_size=4)
+    row = a.padded_table([5, 2], width=4)
+    np.testing.assert_array_equal(row, [5, 2, 0, 0])
+    with pytest.raises(ValueError):
+        a.padded_table([1, 2, 3], width=2)
+
+
+# --- scheduler --------------------------------------------------------------
+
+
+def _sched(num_blocks=8, block_size=4, max_batch=2, max_blocks=8):
+    return ContinuousBatchingScheduler(
+        BlockAllocator(num_blocks, block_size),
+        max_batch=max_batch, max_blocks_per_request=max_blocks)
+
+
+def test_scheduler_admits_fifo_into_slots():
+    s = _sched()
+    reqs = [Request(prompt=np.zeros((6,), np.int32), max_new_tokens=4)
+            for _ in range(3)]
+    for r in reqs:
+        s.submit(r)
+    admitted, preempted = s.schedule()
+    assert admitted == reqs[:2] and not preempted   # 2 slots
+    assert [r.slot for r in admitted] == [0, 1]
+    assert all(len(r.blocks) >= 2 for r in admitted)  # 7 rows -> 2 pages
+    s.retire(reqs[0], "eos")
+    admitted, _ = s.schedule()
+    assert admitted == [reqs[2]] and reqs[2].slot == 0  # slot reused
+
+
+def test_scheduler_rejects_impossible_request():
+    s = _sched(num_blocks=2, block_size=4, max_blocks=2)
+    with pytest.raises(ValueError):
+        s.submit(Request(prompt=np.zeros((6,), np.int32),
+                         max_new_tokens=8))   # 14 rows > 8-row pool
+
+
+def test_scheduler_preempts_latest_admitted_on_pressure():
+    s = _sched(num_blocks=4, block_size=4, max_batch=2)
+    r1 = Request(prompt=np.zeros((4,), np.int32), max_new_tokens=9)
+    r2 = Request(prompt=np.zeros((4,), np.int32), max_new_tokens=9)
+    s.submit(r1), s.submit(r2)
+    admitted, _ = s.schedule()
+    assert admitted == [r1, r2]     # 2 pages each (5 rows)
+    # r1 grows past its pages (9th row): pool dry -> r2 (latest) evicted
+    r1.tokens.extend([5, 5, 5, 5, 5])
+    admitted, preempted = s.schedule()
+    assert preempted == [r2] and not admitted    # r1's extension won
+    assert r2.state.value == "waiting" and r2.blocks == []
+    assert r2.num_preemptions == 1
+    assert s.waiting[0] is r2       # requeued at the front
+
+
+# --- engine correctness -----------------------------------------------------
+
+
+@pytest.mark.parametrize("decode_chunk", [1, 4])
+def test_engine_matches_dense_generate_greedy(decode_chunk):
+    """Continuous batching over the paged cache is token-exact vs the
+    phase-locked dense loop under greedy decoding, at mixed lengths."""
+    want = [_greedy_reference(PARAMS, r, n)
+            for r, n in zip(PROMPTS, BUDGETS)]
+    eng = ServeEngine(
+        BUNDLE, PARAMS, num_blocks=32, block_size=4, max_batch=2,
+        max_seq_len=64, temperature=1e-4, seed=0,
+        decode_chunk=decode_chunk)
+    reqs = [eng.submit(r, n) for r, n in zip(PROMPTS, BUDGETS)]
+    trajs = {t.request_id: t for t in eng.run(max_steps=400)}
+    for rq, w in zip(reqs, want):
+        t = trajs[rq.request_id]
+        np.testing.assert_array_equal(t.tokens, w)
+        assert t.mask.tolist() == [1.0] * len(w)
+        assert t.finish_reason in ("eos", "length")
+    # every page returned to the pool, copy-free
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    assert eng.stats.finished == 3
+    from repro.metrics.runtime_metrics import collect_serve_stats
+
+    stats = collect_serve_stats(eng)
+    assert stats["tokens_out"] == sum(BUDGETS)
+    assert stats["pool_utilization"] == 0.0       # all freed
+    assert stats["waiting"] == 0 and stats["running"] == 0
+    assert 0.0 < stats["mean_occupancy"] <= 2.0   # max_batch slots
+
+
+def test_engine_log_beta_matches_rescoring():
+    """Recorded behavior log-probs == teacher-forced rescoring under the
+    same params (the β == π_serve invariant, per request)."""
+    eng = ServeEngine(BUNDLE, PARAMS, num_blocks=32, block_size=4,
+                      max_batch=2, max_seq_len=64, temperature=1.0,
+                      seed=5)
+    eng.submit(PROMPTS[0], 8)
+    t = eng.run(max_steps=100)[0]
+    full = np.concatenate([t.prompt, t.tokens])
+    logp, _, _ = score_tokens(BUNDLE, PARAMS, jnp.asarray(full)[None],
+                              prompt_len=len(t.prompt))
+    np.testing.assert_allclose(np.asarray(logp[0]), t.log_beta, atol=2e-4)
+
+
+def test_engine_preemption_preserves_tokens():
+    """A pool too small for all requests forces preemption; recompute
+    re-prefill must not change any emitted token (greedy)."""
+    want = [_greedy_reference(PARAMS, r, n)
+            for r, n in zip(PROMPTS, BUDGETS)]
+    eng = ServeEngine(BUNDLE, PARAMS, num_blocks=7, block_size=4,
+                      max_batch=3, max_seq_len=64, temperature=1e-4,
+                      seed=0)
+    reqs = [eng.submit(r, n) for r, n in zip(PROMPTS, BUDGETS)]
+    trajs = {t.request_id: t for t in eng.run(max_steps=400)}
+    assert eng.stats.preemptions > 0
+    for rq, w in zip(reqs, want):
+        np.testing.assert_array_equal(trajs[rq.request_id].tokens, w)
+    assert eng.allocator.num_free == 7
+
+
+def test_engine_requires_paged_capable_arch():
+    cfg = CFG.replace(name="rwkv-ish", attn_free=True)
+    bundle = build(cfg)
+    assert bundle.decode_step_paged is None
+    with pytest.raises(ValueError, match="attn-free"):
+        ServeEngine(bundle, PARAMS)
+
+
+# --- in-flight weight swap (acceptance: per-token version provenance) -------
+
+
+def _swap_trajectory(seed=3, swap_after=5, total=12):
+    """Fixed-seed run with one learner publish mid-generation."""
+    store = PolicyStore(PARAMS, capacity=4)
+    eng = ServeEngine(BUNDLE, store=store, num_blocks=32, block_size=4,
+                      max_batch=2, max_seq_len=64, temperature=1.0,
+                      seed=seed)
+    eng.submit(PROMPTS[0], total)
+    for _ in range(swap_after):
+        assert not eng.step()
+    p2 = jax.tree.map(lambda x: x + 0.01, PARAMS)
+    store.publish(p2)
+    trajs = eng.run(max_steps=200)
+    return trajs[0], p2, eng
+
+
+def test_inflight_swap_versions_change_at_boundary():
+    traj, _, eng = _swap_trajectory()
+    v = traj.versions
+    assert v[0] == 0 and v[-1] == 1          # straddles the publish
+    dv = np.diff(v)
+    assert (dv >= 0).all() and dv.sum() == 1  # one clean step boundary
+    assert eng.stats.swaps == 1
+    assert traj.behavior_version == 0         # oldest-version convention
+
+
+def test_inflight_swap_tokenwise_gate_differs_from_whole_trajectory():
+    """Eq. 8 per version segment weights the stale segment only; the
+    whole-trajectory gate averages it away.  (Acceptance criterion.)"""
+    traj, p2, _ = _swap_trajectory()
+    full = np.concatenate([traj.prompt, traj.tokens])
+    logp, _, _ = score_tokens(BUNDLE, p2, jnp.asarray(full)[None],
+                              prompt_len=len(traj.prompt))
+    tv_tokens = 0.5 * np.abs(
+        np.exp(np.asarray(logp[0]) - traj.log_beta) - 1.0)
+    # Threshold at the trajectory-mean TV: the whole-trajectory gate
+    # sits exactly on its boundary (weight 1), while segmentwise the
+    # pre-swap segment (scored under the *new* policy) differs from the
+    # post-swap one, so one segment lands above the mean.
+    delta = 2.0 * float(tv_tokens.mean())
+    payload = (tv_tokens, traj.versions)
+
+    class _Item:
+        def __init__(self, p):
+            self.payload, self.meta = p, {}
+
+    tok_item, whole_item = _Item(payload), _Item(payload)
+    tok_dec = TokenwiseTVGate(
+        delta, lambda p: p, mode="downweight").admit(tok_item)
+    whole_dec = TVGatedAdmission(
+        delta, lambda p: float(np.mean(p[0])),
+        mode="downweight").admit(whole_item)
+    assert whole_dec.admit and whole_dec.weight == 1.0
+    assert tok_dec.admit and tok_dec.weight != whole_dec.weight
+    segs = tok_item.meta["tv_segments"]
+    assert [s["version"] for s in segs] == [0, 1]
+    assert sum(s["tokens"] for s in segs) == traj.num_tokens
+    assert any(s["weight"] < 1.0 for s in segs)
+
+
+# --- engine-driven threaded regime ------------------------------------------
+
+
+def test_threaded_engine_regime_tags_per_token_versions():
+    """The rewired threaded regime drives the engine; queue items carry
+    the full per-token version vector and the oldest-version tag."""
+    store = PolicyStore(PARAMS, capacity=4)
+    queue = TrajectoryQueue(maxsize=4)
+    eng = ServeEngine(BUNDLE, store=store, num_blocks=32, block_size=4,
+                      max_batch=2, max_seq_len=64, temperature=1.0,
+                      seed=11)
+    stream = [(PROMPTS[i % 3], 6) for i in range(4)]
+    it = iter(stream)
+    regime = make_regime(
+        "threaded_engine", store, queue,
+        lambda: next(it, None), engine=eng, max_items=4)
+    regime.start()
+    # Publish while the engine is still warming up its first dispatch:
+    # every trajectory must then see the swap (deterministically).
+    store.publish(jax.tree.map(lambda x: x + 0.001, PARAMS))
+    try:
+        consumed = []
+        while (item := queue.get(learner_version=store.version,
+                                 timeout=30.0)) is not None:
+            consumed.append(item)
+            store.publish(jax.tree.map(
+                lambda x: x + 0.001, store.latest()[0]))
+        assert len(consumed) == 4
+        for item in consumed:
+            versions = item.meta["versions"]
+            assert len(versions) == item.payload.num_tokens
+            assert item.behavior_version == min(versions)
+            assert item.lag >= 0
+        # learner published while serving: some trajectory saw a
+        # non-zero version (the engine swapped in-flight)
+        assert max(max(i.meta["versions"]) for i in consumed) > 0
+    finally:
+        regime.stop()
+
+
+def test_threaded_engine_regime_requires_shared_store():
+    store, other = PolicyStore(PARAMS, 2), PolicyStore(PARAMS, 2)
+    eng = ServeEngine(BUNDLE, store=other, num_blocks=8, block_size=4,
+                      max_batch=1, max_seq_len=32)
+    with pytest.raises(ValueError, match="share"):
+        make_regime("threaded_engine", store, TrajectoryQueue(),
+                    lambda: None, engine=eng)
