@@ -86,12 +86,32 @@ def main() -> None:
     ap.add_argument("--n-actors", type=int, default=8)
     ap.add_argument("--rollout-steps", type=int, default=64)
     ap.add_argument("--algorithm", default="vaco")
+    ap.add_argument("--out", default=None,
+                    help="write a BENCH_runtime.json artifact (same "
+                         "shape as benchmarks.run's) for the CI "
+                         "regression gate")
     args = ap.parse_args()
     res = run(phases=args.phases, n_actors=args.n_actors,
               rollout_steps=args.rollout_steps, algorithm=args.algorithm)
     for k, v in res.items():
         unit = "x" if k == "threaded_speedup" else " env steps/s"
         print(f"{k:18s} {v:10.1f}{unit}")
+    if args.out:
+        import json
+        import os
+
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            # Absolute env-steps/s are workload-dependent: the committed
+            # baseline and CI's fresh run must use the same config for
+            # the regression diff to mean anything.
+            json.dump({"benchmark": "runtime_throughput",
+                       "config": {"phases": args.phases,
+                                  "n_actors": args.n_actors,
+                                  "rollout_steps": args.rollout_steps,
+                                  "algorithm": args.algorithm},
+                       "env_steps_per_s": res}, f, indent=2)
+        print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,215 @@
+"""CI benchmark-regression gate: diff fresh bench JSON against baselines.
+
+``bench-smoke`` produces machine-readable ``BENCH_serve.json`` /
+``BENCH_runtime.json``; this script compares them against the committed
+baselines under ``results/`` and exits non-zero on a regression — the
+benchmarks are *enforced*, not just uploaded.
+
+Two classes of metric, because CI runners are not the machine the
+baseline was measured on:
+
+* **relative** metrics are machine-speed-normalized by construction
+  (continuous-vs-phase-locked speedup, the pool-size-sweep cost ratio,
+  threaded-vs-phase-locked overlap): both sides of the ratio ran on the
+  same box, so a slow runner cancels out.  These get the strict default
+  tolerance (``--tol``, 15%): a >15% drop means the *code* regressed.
+* **absolute** metrics (tokens/s, env steps/s) move with the host; they
+  get their own ``--abs-tol`` so CI can widen it for noisy shared
+  runners while local runs keep it tight.
+
+``pool_sweep.cost_ratio`` additionally carries a *hard cap* (1.2): the
+in-place paged pool's per-step decode cost must stay ~flat in
+``num_blocks`` regardless of what the baseline says — this is the
+acceptance bar for the aliasing work and the backstop against both
+baseline drift and a reverted aliased path.
+
+Self-test (wired into CI): ``--synthetic-slowdown 0.2 --expect-fail``
+degrades every fresh metric by 20% after loading and asserts the gate
+*fails* — proving the gate can actually catch the regression it exists
+for, on every run.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \\
+        --serve-baseline results/BENCH_serve.json \\
+        --serve-fresh results/bench/BENCH_serve.json \\
+        --runtime-baseline results/BENCH_runtime.json \\
+        --runtime-fresh results/bench/BENCH_runtime.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Metric:
+    path: str                     # dotted path into the bench JSON
+    higher_is_better: bool
+    relative: bool                # machine-speed-normalized metric
+    hard_max: Optional[float] = None   # absolute cap (lower-is-better)
+    cap_only: bool = False        # skip the baseline diff, cap suffices
+
+
+SERVE_METRICS = (
+    Metric("continuous.tokens_per_s", True, False),
+    Metric("phase_locked.tokens_per_s", True, False),
+    Metric("speedup_tokens_per_s", True, True),
+    # The tentpole acceptance bar: per-step decode cost flat in pool
+    # size.  Cap-only: a healthy in-place pool fits to ~1.0x and an
+    # O(pool) one to ~2x+, so the absolute 1.2 cap is the whole test —
+    # a baseline-relative band around 1.0 would only add noise flakes.
+    Metric("pool_sweep.cost_ratio", False, True, hard_max=1.2,
+           cap_only=True),
+)
+
+RUNTIME_METRICS = (
+    Metric("env_steps_per_s.backward_mixture", True, False),
+    Metric("env_steps_per_s.threaded", True, False),
+    Metric("env_steps_per_s.threaded_speedup", True, True),
+)
+
+
+def _lookup(doc: Dict, path: str) -> Optional[float]:
+    node = doc
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return float(node) if isinstance(node, (int, float)) else None
+
+
+def _apply_slowdown(doc: Dict, metrics: Tuple[Metric, ...],
+                    slowdown: float) -> None:
+    """Degrade every metric by `slowdown` in its bad direction, in place."""
+    for m in metrics:
+        node = doc
+        parts = m.path.split(".")
+        for part in parts[:-1]:
+            node = node.get(part, {}) if isinstance(node, dict) else {}
+        leaf = parts[-1]
+        if isinstance(node, dict) and isinstance(
+                node.get(leaf), (int, float)):
+            if m.higher_is_better:
+                node[leaf] = node[leaf] * (1.0 - slowdown)
+            else:
+                node[leaf] = node[leaf] / (1.0 - slowdown)
+
+
+def check_pair(
+    name: str,
+    baseline: Dict,
+    fresh: Dict,
+    metrics: Tuple[Metric, ...],
+    *,
+    tol: float,
+    abs_tol: float,
+) -> List[str]:
+    """Returns failure messages (empty = pass)."""
+    failures: List[str] = []
+    for m in metrics:
+        base = _lookup(baseline, m.path)
+        new = _lookup(fresh, m.path)
+        if new is None:
+            failures.append(
+                f"{name}:{m.path}: missing from fresh results "
+                "(benchmark stopped reporting it)")
+            continue
+        if m.hard_max is not None:
+            # `not (<=)` so a NaN metric fails the cap instead of
+            # vacuously passing it.
+            if not (new <= m.hard_max):
+                failures.append(
+                    f"{name}:{m.path}: {new:.3f} exceeds hard cap "
+                    f"{m.hard_max:.3f}")
+            elif m.cap_only:
+                print(f"  ✓ {name}:{m.path} [cap {m.hard_max:.2f}]: "
+                      f"{new:.3f}")
+        if m.cap_only:
+            continue
+        if base is None:
+            print(f"  ~ {name}:{m.path}: no baseline, "
+                  f"fresh={new:.3f} (hard caps only)")
+            continue
+        t = tol if m.relative else abs_tol
+        if m.higher_is_better:
+            floor = base * (1.0 - t)
+            ok = new >= floor
+            verdict = f"{new:.3f} vs baseline {base:.3f} (floor {floor:.3f})"
+        else:
+            ceil = base * (1.0 + t)
+            ok = new <= ceil
+            verdict = f"{new:.3f} vs baseline {base:.3f} (ceil {ceil:.3f})"
+        kind = "rel" if m.relative else "abs"
+        if ok:
+            print(f"  ✓ {name}:{m.path} [{kind} ±{t:.0%}]: {verdict}")
+        else:
+            failures.append(
+                f"{name}:{m.path} [{kind} ±{t:.0%}]: REGRESSION {verdict}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--serve-baseline", default=None)
+    ap.add_argument("--serve-fresh", default=None)
+    ap.add_argument("--runtime-baseline", default=None)
+    ap.add_argument("--runtime-fresh", default=None)
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="tolerance for machine-normalized (relative) "
+                         "metrics; >15%% drop fails")
+    ap.add_argument("--abs-tol", type=float, default=0.15,
+                    help="tolerance for absolute throughput metrics "
+                         "(widen on shared CI runners)")
+    ap.add_argument("--synthetic-slowdown", type=float, default=None,
+                    help="degrade every fresh metric by this fraction "
+                         "after loading (gate self-test)")
+    ap.add_argument("--expect-fail", action="store_true",
+                    help="exit 0 iff the gate FAILED (self-test mode)")
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.serve_fresh:
+        pairs.append(("serve", args.serve_baseline, args.serve_fresh,
+                      SERVE_METRICS))
+    if args.runtime_fresh:
+        pairs.append(("runtime", args.runtime_baseline, args.runtime_fresh,
+                      RUNTIME_METRICS))
+    if not pairs:
+        ap.error("nothing to check: pass --serve-fresh and/or "
+                 "--runtime-fresh")
+
+    failures: List[str] = []
+    for name, base_path, fresh_path, metrics in pairs:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        if base_path:
+            with open(base_path) as f:
+                baseline = json.load(f)
+        else:
+            baseline = {}
+        if args.synthetic_slowdown:
+            _apply_slowdown(fresh, metrics, args.synthetic_slowdown)
+            print(f"[self-test] degraded fresh {name} metrics by "
+                  f"{args.synthetic_slowdown:.0%}")
+        failures.extend(check_pair(
+            name, baseline, fresh, metrics,
+            tol=args.tol, abs_tol=args.abs_tol))
+
+    failed = bool(failures)
+    for msg in failures:
+        print(f"  ✗ {msg}")
+    if args.expect_fail:
+        if failed:
+            print("gate self-test OK: synthetic regression was caught")
+            return 0
+        print("gate self-test FAILED: regression slipped through")
+        return 1
+    print("benchmark regression gate:",
+          "FAIL" if failed else "PASS")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -24,6 +24,8 @@ from repro.kernels.flash_attention_pallas import flash_attention
 from repro.kernels.fused_logprob_pallas import logprobs_pallas
 from repro.kernels.paged_attention_pallas import paged_attention as \
     paged_attention_pallas
+from repro.kernels.paged_kv_write_pallas import paged_kv_write as \
+    paged_kv_write_pallas
 from repro.kernels.ssm_scan_pallas import ssm_scan_pallas
 from repro.kernels.vtrace_pallas import vtrace_pallas
 from repro.kernels.wkv6_pallas import wkv6_pallas
@@ -82,6 +84,28 @@ def paged_attention(
     return paged_attention_pallas(
         q, k_pages, v_pages, block_tables, context_lens,
         window=window, **kw)
+
+
+def paged_kv_write(
+    k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+    *, layer: int, mode: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """In-place scatter of one decode step's K/V rows into the pool.
+
+    Returns the updated ``(k_pages, v_pages)``; both paths update the
+    buffer in place when the caller's pools are donated/dead (the Pallas
+    route via ``input_output_aliases``, the reference route via XLA's
+    in-place dynamic_update_slice), so per-step cost is O(rows), not
+    O(pool).
+    """
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_paged_kv_write(
+            k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+            layer=layer)
+    return paged_kv_write_pallas(
+        k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+        layer=layer, **kw)
 
 
 def wkv6(

@@ -122,6 +122,71 @@ def ref_paged_attention(
 
 
 # ---------------------------------------------------------------------------
+# Paged KV row write (serve engine's in-place pool append)
+# ---------------------------------------------------------------------------
+
+
+def masked_inplace_update(
+    arr: jax.Array,
+    new: jax.Array,
+    start: Tuple[jax.Array, ...],
+    valid,   # bool scalar or broadcastable-to-`new` mask
+) -> jax.Array:
+    """dynamic_update_slice of ``new`` at ``start``, keeping old values
+    where ``valid`` is False.
+
+    This read-select-writeback idiom is the load-bearing in-place
+    pattern of the paged pool: XLA updates a DUS on a dead operand in
+    place (also inside scan bodies), so callers pay O(slice), not
+    O(array).  Shared by the decode-row oracle below and the prefill
+    tile writer (``models.transformer.write_prefill_to_pages``) so the
+    invariant lives in one place.
+    """
+    old = jax.lax.dynamic_slice(arr, start, new.shape)
+    return jax.lax.dynamic_update_slice(
+        arr, jnp.where(valid, new, old), start)
+
+
+def ref_paged_kv_write(
+    k_pages: jax.Array,   # [L, KV, NB, BS, D] pooled key blocks
+    v_pages: jax.Array,   # [L, KV, NB, BS, D] pooled value blocks
+    k_rows: jax.Array,    # [B, KV, D] new key rows (one per slot)
+    v_rows: jax.Array,    # [B, KV, D] new value rows
+    page_idx: jax.Array,  # [B] int32 destination page per slot
+    offset: jax.Array,    # [B] int32 destination row within the page
+    active: jax.Array,    # [B] bool; False slots write nothing
+    *,
+    layer: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Write slot b's K/V row at ``[layer, :, page_idx[b], offset[b], :]``.
+
+    Semantic ground truth for ``paged_kv_write_pallas``.  Deliberately a
+    per-slot ``dynamic_update_slice`` chain rather than one vector
+    scatter: XLA updates DUS-on-a-dead-operand in place (also inside
+    scan bodies), so the reference serve path pays O(rows written) per
+    step instead of O(pool) — the same flatness in ``num_blocks`` the
+    Pallas kernel gets from DMA + buffer aliasing.  Inactive slots keep
+    the old row (read-select-writeback), mirroring the kernel's skipped
+    copy; distinct slots never share a destination (allocator invariant),
+    so the chain order is immaterial.
+    """
+    b, kv, d = k_rows.shape
+    k_rows = k_rows.astype(k_pages.dtype)
+    v_rows = v_rows.astype(v_pages.dtype)
+    safe_page = jnp.where(active, page_idx, 0).astype(jnp.int32)
+    offset = offset.astype(jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    for i in range(b):
+        start = (jnp.asarray(layer, jnp.int32), zero, safe_page[i],
+                 offset[i], zero)
+        k_pages = masked_inplace_update(
+            k_pages, k_rows[i].reshape(1, kv, 1, 1, d), start, active[i])
+        v_pages = masked_inplace_update(
+            v_pages, v_rows[i].reshape(1, kv, 1, 1, d), start, active[i])
+    return k_pages, v_pages
+
+
+# ---------------------------------------------------------------------------
 # WKV6 linear-attention recurrence (rwkv6 time-mix)
 # ---------------------------------------------------------------------------
 

@@ -32,17 +32,19 @@ import sys
 import jax
 
 
-def _add_runtime_args(p, *, regimes, default_regime) -> None:
+def _add_runtime_args(p, *, regimes, default_regime,
+                      admissions=("pass_through", "max_lag", "tv_gate"),
+                      ) -> None:
     p.add_argument("--runtime", default=default_regime, choices=regimes,
                    help="lag regime driving the actor-learner runtime")
     p.add_argument("--admission", default="pass_through",
-                   choices=["pass_through", "max_lag", "tv_gate"],
+                   choices=list(admissions),
                    help="trajectory-queue admission policy")
     p.add_argument("--max-lag", type=int, default=4,
                    help="max_lag admission: drop items older than this")
     p.add_argument("--admission-mode", default="drop",
                    choices=["drop", "downweight"],
-                   help="tv_gate: drop over-threshold items or downweight")
+                   help="tv_gate*: drop over-threshold items or downweight")
     p.add_argument("--queue-maxsize", type=int, default=4,
                    help="bounded queue size (threaded backpressure)")
 
@@ -80,9 +82,14 @@ def main(argv=None) -> int:
     rv.add_argument("--seed", type=int, default=0)
     rv.add_argument("--delta", type=float, default=0.05)
     rv.add_argument("--checkpoint-dir", default=None)
+    # tv_gate_tokenwise: Eq. 8 per producing-version segment, scored by
+    # a tv_fn closed over the PolicyStore (ROADMAP item).  RLVR-only:
+    # classic-RL rollout payloads carry no per-token version record.
     _add_runtime_args(
         rv, regimes=["forward_n", "threaded"],
-        default_regime="forward_n")
+        default_regime="forward_n",
+        admissions=("pass_through", "max_lag", "tv_gate",
+                    "tv_gate_tokenwise"))
 
     args = ap.parse_args(argv)
 

@@ -218,6 +218,54 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
             "v_pages": jnp.zeros(shape, dtype)}
 
 
+def _paged_layer_tail(cfg: ModelConfig, lp: Dict, x: jax.Array,
+                      attn_out: jax.Array) -> jax.Array:
+    """Shared post-attention half of a paged decode layer."""
+    b = x.shape[0]
+    attn_out = attn_out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    x = x + dense_apply(lp["attn"]["wo"], attn_out)
+    h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        mlp_out, _ = moe_mod.moe_apply(
+            lp["moe"], h, cfg.moe, cfg.activation, group_size=h.shape[0],
+        )
+    else:
+        mlp_out = mlp_apply(lp["mlp"], h, cfg.activation)
+    return x + mlp_out
+
+
+def _paged_qkv(cfg: ModelConfig, lp: Dict, x: jax.Array,
+               safe_pos: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                             jax.Array]:
+    """Projections + rope for one paged decode layer ([B, 1, ...])."""
+    h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
+    q = attn._split_heads(dense_apply(lp["attn"]["wq"], h), cfg.n_heads)
+    k_new = attn._split_heads(
+        dense_apply(lp["attn"]["wk"], h), cfg.n_kv_heads)
+    v_new = attn._split_heads(
+        dense_apply(lp["attn"]["wv"], h), cfg.n_kv_heads)
+    q = apply_rope(q, safe_pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, safe_pos[:, None], cfg.rope_theta)
+    return q, k_new, v_new
+
+
+def _paged_head(params: Dict, cfg: ModelConfig, x: jax.Array
+                ) -> ModelOutput:
+    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = embedding_attend(params["embed"], x)
+    else:
+        logits = dense_apply(params["lm_head"], x)
+    logits = softcap(logits, cfg.logit_softcap)
+    value = None
+    if cfg.value_head:
+        value = dense_apply(params["value_head"], x)[..., 0]
+    return ModelOutput(
+        logits=logits[:, 0], value=None if value is None else value[:, 0],
+        cache=None, aux_loss=jnp.zeros((), jnp.float32),
+    )
+
+
 def decode_step_paged(
     params: Dict,
     cfg: ModelConfig,
@@ -236,10 +284,70 @@ def decode_step_paged(
     table, and attends over exactly its ``pos + 1`` live positions.  The
     incoming token's row is written first (so it attends to itself),
     matching the dense path's validity rule ``kv_pos <= position``.
+
+    The layer loop is *hoisted* (a Python unroll, HLO O(L)) rather than
+    a ``lax.scan`` so the pool never rides a scan as a carried value:
+    each layer's row append is an in-place-able op
+    (``kernels.ops.paged_kv_write`` — aliased Pallas DMA scatter, or its
+    dynamic-update-slice oracle), which keeps per-step cost O(rows
+    written), independent of ``num_blocks``.  The scan-carried
+    formulation made XLA rewrite the whole ``[L, KV, NB, BS, Dh]`` pool
+    every step (~2.7x slower at 128 vs 16 blocks at equal work); it is
+    kept as :func:`decode_step_paged_carried` as the equivalence oracle
+    for this path.  Serve archs run reduced depths, so the O(L) HLO is
+    cheap; the O(1)-HLO training forward is untouched.
     """
     from repro.kernels import ops as kops
 
-    b = token.shape[0]
+    block_size = pages["k_pages"].shape[3]
+    x = embedding_apply(params["embed"], token[:, None])
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    safe_pos = jnp.maximum(pos, 0)
+    page_idx = jnp.take_along_axis(
+        block_tables, (safe_pos // block_size)[:, None], axis=1)[:, 0]
+    offset = safe_pos % block_size
+    context_lens = jnp.where(active, safe_pos + 1, 0).astype(jnp.int32)
+
+    k_pages, v_pages = pages["k_pages"], pages["v_pages"]
+    for layer in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[layer], params["layers"])
+        q, k_new, v_new = _paged_qkv(cfg, lp, x, safe_pos)
+        k_pages, v_pages = kops.paged_kv_write(
+            k_pages, v_pages, k_new[:, 0], v_new[:, 0],
+            page_idx, offset, active, layer=layer, mode=kernel_mode,
+        )
+        attn_out = kops.paged_attention(
+            q[:, 0], k_pages[layer], v_pages[layer], block_tables,
+            context_lens, mode=kernel_mode,
+        )
+        x = _paged_layer_tail(cfg, lp, x, attn_out)
+
+    out = _paged_head(params, cfg, x)
+    return out, {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def decode_step_paged_carried(
+    params: Dict,
+    cfg: ModelConfig,
+    token: jax.Array,
+    pages: Dict,
+    block_tables: jax.Array,
+    pos: jax.Array,
+    active: jax.Array,
+    *,
+    kernel_mode: Optional[str] = None,
+) -> Tuple[ModelOutput, Dict]:
+    """Legacy paged decode step: pool carried through the layer scan.
+
+    Semantically identical to :func:`decode_step_paged` — tests assert
+    greedy *token* equality bit-for-bit and ulp-level logit/pool
+    closeness (scan-fused vs standalone ops round the last bit
+    differently) — but O(pool) per step: the pages ride the scan as
+    xs/ys, so every step re-materializes the full ``[L, ...]`` pool.
+    Kept as the oracle for the aliased path; not used by the engine.
+    """
+    from repro.kernels import ops as kops
+
     num_blocks = pages["k_pages"].shape[2]
     block_size = pages["k_pages"].shape[3]
     x = embedding_apply(params["embed"], token[:, None])
@@ -255,14 +363,7 @@ def decode_step_paged(
 
     def layer_step(x, xs):
         lp, k_pages, v_pages = xs
-        h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
-        q = attn._split_heads(dense_apply(lp["attn"]["wq"], h), cfg.n_heads)
-        k_new = attn._split_heads(
-            dense_apply(lp["attn"]["wk"], h), cfg.n_kv_heads)
-        v_new = attn._split_heads(
-            dense_apply(lp["attn"]["wv"], h), cfg.n_kv_heads)
-        q = apply_rope(q, safe_pos[:, None], cfg.rope_theta)
-        k_new = apply_rope(k_new, safe_pos[:, None], cfg.rope_theta)
+        q, k_new, v_new = _paged_qkv(cfg, lp, x, safe_pos)
         # [B, 1, KV, Dh] -> [KV, B, Dh] rows, scattered per slot.
         k_rows = k_new[:, 0].transpose(1, 0, 2)
         v_rows = v_new[:, 0].transpose(1, 0, 2)
@@ -274,36 +375,14 @@ def decode_step_paged(
             q[:, 0], k_pages, v_pages, block_tables, context_lens,
             mode=kernel_mode,
         )
-        attn_out = attn_out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
-        x = x + dense_apply(lp["attn"]["wo"], attn_out)
-        h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
-        if cfg.moe is not None:
-            mlp_out, _ = moe_mod.moe_apply(
-                lp["moe"], h, cfg.moe, cfg.activation, group_size=h.shape[0],
-            )
-        else:
-            mlp_out = mlp_apply(lp["mlp"], h, cfg.activation)
-        x = x + mlp_out
+        x = _paged_layer_tail(cfg, lp, x, attn_out)
         return x, {"k_pages": k_pages, "v_pages": v_pages}
 
     x, new_pages = scan_layers(
         layer_step, x,
         (params["layers"], pages["k_pages"], pages["v_pages"]),
     )
-
-    x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    if cfg.tie_embeddings:
-        logits = embedding_attend(params["embed"], x)
-    else:
-        logits = dense_apply(params["lm_head"], x)
-    logits = softcap(logits, cfg.logit_softcap)
-    value = None
-    if cfg.value_head:
-        value = dense_apply(params["value_head"], x)[..., 0]
-    out = ModelOutput(
-        logits=logits[:, 0], value=None if value is None else value[:, 0],
-        cache=None, aux_loss=jnp.zeros((), jnp.float32),
-    )
+    out = _paged_head(params, cfg, x)
     return out, new_pages
 
 
@@ -314,21 +393,38 @@ def write_prefill_to_pages(
     blocks: jax.Array,        # [M] int32 page ids owned by this request
     prompt_len: jax.Array,    # scalar int32: rows >= prompt_len are dropped
 ) -> Dict:
-    """Scatter one request's prefill K/V rows into its allocated pages."""
-    num_blocks = pages["k_pages"].shape[2]
-    block_size = pages["k_pages"].shape[3]
+    """Scatter one request's prefill K/V rows into its allocated pages.
+
+    Structured as one ``dynamic_update_slice`` per table slot (a static
+    count of page-sized tiles) rather than a row scatter: with the pool
+    donated, XLA updates the tiles in place, so a prefill costs O(rows
+    written), not O(pool).  Tiles past ``prompt_len`` — and the pad
+    slots of ``blocks`` (page 0) — write their *old* contents back
+    (read-select-writeback), i.e. drop semantics without touching the
+    rest of the pool.
+    """
+    k_pages, v_pages = pages["k_pages"], pages["v_pages"]
+    block_size = k_pages.shape[3]
     p = cache_k.shape[2]
-    rows = jnp.arange(p, dtype=jnp.int32)
-    page_idx = jnp.where(
-        rows < prompt_len, blocks[rows // block_size], num_blocks)
-    offset = rows % block_size
-    # [L, 1, P, KV, Dh] -> [L, KV, P, Dh]
-    k_rows = cache_k[:, 0].transpose(0, 2, 1, 3)
-    v_rows = cache_v[:, 0].transpose(0, 2, 1, 3)
-    k_pages = pages["k_pages"].at[:, :, page_idx, offset, :].set(
-        k_rows.astype(pages["k_pages"].dtype), mode="drop")
-    v_pages = pages["v_pages"].at[:, :, page_idx, offset, :].set(
-        v_rows.astype(pages["v_pages"].dtype), mode="drop")
+    n_tiles = -(-p // block_size)
+    pad = n_tiles * block_size - p
+    # [L, 1, P, KV, Dh] -> [L, KV, P(+pad), Dh]
+    k_rows = cache_k[:, 0].transpose(0, 2, 1, 3).astype(k_pages.dtype)
+    v_rows = cache_v[:, 0].transpose(0, 2, 1, 3).astype(v_pages.dtype)
+    if pad:
+        k_rows = jnp.pad(k_rows, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_rows = jnp.pad(v_rows, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    from repro.kernels.ref import masked_inplace_update
+
+    zero = jnp.zeros((), jnp.int32)
+    for j in range(n_tiles):
+        rows = j * block_size + jnp.arange(block_size, dtype=jnp.int32)
+        valid = (rows < prompt_len)[None, None, None, :, None]
+        start = (zero, zero, blocks[j].astype(jnp.int32), zero, zero)
+        new_k = k_rows[:, :, None, j * block_size:(j + 1) * block_size, :]
+        new_v = v_rows[:, :, None, j * block_size:(j + 1) * block_size, :]
+        k_pages = masked_inplace_update(k_pages, new_k, start, valid)
+        v_pages = masked_inplace_update(v_pages, new_v, start, valid)
     return {"k_pages": k_pages, "v_pages": v_pages}
 
 

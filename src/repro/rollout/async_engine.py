@@ -82,11 +82,20 @@ class ForwardLagBatch(NamedTuple):
 
 
 class RLVRMinibatch(NamedTuple):
-    """One generated+verified minibatch — the TrajectoryQueue payload."""
+    """One generated+verified minibatch — the TrajectoryQueue payload.
+
+    ``versions`` is the per-token producing-policy version ``[B, T]``
+    (None when the generator has no version source).  A minibatch is
+    generated under one frozen policy so the matrix is constant, but the
+    tokenwise TV gate consumes the same ``(tv_tokens, versions)``
+    interface for these as for the serve engine's swap-straddling
+    trajectories, so the field carries the honest per-token record.
+    """
 
     gen: GenerationResult
     rewards: jax.Array
     answers: List[str]
+    versions: Optional[np.ndarray] = None
 
 
 class ForwardLagGenerator:
@@ -103,6 +112,7 @@ class ForwardLagGenerator:
         max_new_tokens: int,
         temperature: float = 1.0,
         seed: int = 0,
+        version_fn: Optional[Callable[[], int]] = None,
     ) -> None:
         self.bundle = bundle
         self.dataset = dataset
@@ -110,6 +120,14 @@ class ForwardLagGenerator:
         self.prompts_per_minibatch = prompts_per_minibatch
         self.group_size = completions_per_prompt
         self.max_new_tokens = max_new_tokens
+        # Reads the producing policy's version at generation time (the
+        # trainer closes this over its PolicyStore); feeds the per-token
+        # version record the tokenwise TV gate consumes.  Best-effort:
+        # the lag regimes re-stamp the record from their own
+        # (params, version) pair at enqueue (regimes._stamp_versions),
+        # which closes the publish-during-generation race this read
+        # alone would have.
+        self.version_fn = version_fn
         self._key = jax.random.PRNGKey(seed)
         # Under the threaded regime, generation (producer thread) and
         # eval (learner thread) share this key chain; split-then-store
@@ -146,6 +164,12 @@ class ForwardLagGenerator:
         """
         from repro.data.mathgen import verify
 
+        # Read the producing version *before* generating: under the
+        # threaded regime a learner publish can land mid-generation, and
+        # these tokens were still sampled from the pre-publish params
+        # the regime handed us.
+        version = (int(self.version_fn())
+                   if self.version_fn is not None else None)
         tok = self.dataset.tok
         toks_np, _, answers = self.dataset.sample_batch(
             self.prompts_per_minibatch
@@ -162,7 +186,11 @@ class ForwardLagGenerator:
             ],
             jnp.float32,
         )
-        return RLVRMinibatch(gen=gen, rewards=rewards, answers=answers)
+        versions = None
+        if version is not None:
+            versions = np.full(comp_np.shape, version, np.int64)
+        return RLVRMinibatch(gen=gen, rewards=rewards, answers=answers,
+                             versions=versions)
 
     def generate_phase(self, params: Any) -> List[ForwardLagBatch]:
         """Freeze `params` as β and produce N minibatches of labeled data.

@@ -134,6 +134,26 @@ class FrozenRolloutProducer(_RolloutProducer):
 # ---------------------------------------------------------------------------
 
 
+def _stamp_versions(payload: Any, version: int) -> Any:
+    """Overwrite a payload's per-token ``versions`` record with the
+    version actually paired with the params the regime handed its
+    producer.
+
+    The producer may fill the field itself (it knows the token shape),
+    but it reads the store *during* production — under the threaded
+    regime a learner publish can land in that window and misattribute
+    the whole item.  The regime holds the authoritative
+    ``(params, version)`` pair from one ``store.latest()`` call, so it
+    gets the last word.  Payloads without the field pass through
+    untouched (classic-RL rollouts carry no per-token record).
+    """
+    versions = getattr(payload, "versions", None)
+    if versions is not None and hasattr(payload, "_replace"):
+        return payload._replace(
+            versions=np.full_like(np.asarray(versions), version))
+    return payload
+
+
 class LagRegime:
     """Driver protocol: start() once, next_item() per consume, stop()."""
 
@@ -236,7 +256,7 @@ class ForwardNRegime(LagRegime):
         params, version = self.store.latest()
         for _ in range(self.n_items):
             self.queue.put(
-                self.producer(params),
+                _stamp_versions(self.producer(params), version),
                 behavior_version=version,
                 learner_version=version,
             )
@@ -277,7 +297,7 @@ class ThreadedRegime(LagRegime):
                 self.max_items is None or self.produced < self.max_items
             ):
                 params, version = self.store.latest()
-                payload = self.producer(params)
+                payload = _stamp_versions(self.producer(params), version)
                 try:
                     self.queue.put(
                         payload,

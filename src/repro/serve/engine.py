@@ -190,8 +190,11 @@ class ServeEngine:
                 body, carry, keys)
             return toks, lps, masks, pages
 
-        # Pages are donated: the pool is the engine's single large
-        # buffer and every step rewrites a few rows of it in place.
+        # Pages are donated and every op that touches them inside the
+        # dispatch is in-place-able (decode_step_paged's hoisted layer
+        # loop + kernels.ops.paged_kv_write), so the pool is updated
+        # in place end to end: per-chunk cost is O(rows written), flat
+        # in num_blocks (bench_serve --sweep-blocks measures it).
         self._decode = jax.jit(_decode, donate_argnums=(2,))
         self._prefill_fns: Dict[int, Any] = {}   # keyed by padded length
 
@@ -201,6 +204,8 @@ class ServeEngine:
                 out = bundle.forward(
                     params, prompt, return_cache=True,
                     cache_len=padded_len, kv_valid=kv_valid)
+                # Donated pages + per-tile dynamic_update_slice writes:
+                # the prefill lands in the pool without copying it.
                 pages = write_prefill_to_pages(
                     out.cache["k"], out.cache["v"], pages, blocks, plen)
                 last = jnp.take(out.logits[0], plen - 1, axis=0)

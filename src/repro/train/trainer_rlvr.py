@@ -75,8 +75,9 @@ class RLVRHyperparams:
     store_capacity: int = 4       # policy snapshot ring size
     queue_maxsize: int = 4        # producer backpressure (threaded)
     admission: str = "pass_through"  # pass_through|max_lag|tv_gate
+    #                                 # |tv_gate_tokenwise
     max_lag: int = 8
-    admission_mode: str = "drop"  # tv_gate: drop|downweight
+    admission_mode: str = "drop"  # tv_gate*: drop|downweight
     get_timeout: float = 300.0    # learner wait per item (threaded)
 
 
@@ -191,20 +192,25 @@ class RLVRTrainer:
             max_new_tokens=hp.max_new_tokens,
             temperature=hp.temperature,
             seed=seed + 1,
+            version_fn=lambda: self.store.version,
         )
         self._update = make_update_step(bundle, hp, dataset.prompt_len)
         self._warmup = make_warmup_step(bundle, hp)
 
         # --- runtime assembly ------------------------------------------------
         self.store = PolicyStore(params, capacity=hp.store_capacity)
+        tv_fn = None
+        if hp.admission == "tv_gate":
+            tv_fn = self._make_tv_fn()
+        elif hp.admission == "tv_gate_tokenwise":
+            tv_fn = self._make_token_tv_fn()
         self.queue = TrajectoryQueue(
             maxsize=hp.queue_maxsize if hp.runtime == "threaded" else 0,
             admission=make_admission(
                 hp.admission,
                 max_lag=hp.max_lag,
                 delta=hp.delta,
-                tv_fn=(self._make_tv_fn()
-                       if hp.admission == "tv_gate" else None),
+                tv_fn=tv_fn,
                 mode=hp.admission_mode,
             ),
         )
@@ -229,6 +235,33 @@ class RLVRTrainer:
             params, _ = self.store.latest()
             return float(_tv(params, payload.gen.tokens,
                              payload.gen.log_beta, payload.gen.mask))
+
+        return tv_fn
+
+    def _make_token_tv_fn(self):
+        """Per-token TV terms + producing versions for the tokenwise gate.
+
+        Returns ``payload -> (tv_tokens, versions)`` (both flattened over
+        the minibatch's mask-valid completion tokens, row-major so a
+        row's version run stays contiguous), scoring against the *latest*
+        policy in the store — the Eq. 8 estimator the
+        ``TokenwiseTVGate`` applies per version segment.
+        """
+        bundle, prompt_len = self.bundle, self.dataset.prompt_len
+
+        @jax.jit
+        def _tv_terms(params, tokens, log_beta):
+            log_pi, _, _ = score_tokens(bundle, params, tokens, prompt_len)
+            return 0.5 * jnp.abs(jnp.exp(log_pi - log_beta) - 1.0)
+
+        def tv_fn(payload: RLVRMinibatch):
+            params, _ = self.store.latest()
+            tv = np.asarray(_tv_terms(
+                params, payload.gen.tokens, payload.gen.log_beta))
+            valid = np.asarray(payload.gen.mask) > 0
+            versions = (payload.versions if payload.versions is not None
+                        else np.zeros(tv.shape, np.int64))
+            return tv[valid], np.asarray(versions)[valid]
 
         return tv_fn
 

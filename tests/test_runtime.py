@@ -332,6 +332,31 @@ def test_forward_n_regime_linear_forward_lag():
     assert lags == [0, 1, 2]                       # the §5.2 protocol
 
 
+def test_regime_restamps_payload_versions_to_frozen_params():
+    """A payload's per-token `versions` record is overwritten by the
+    regime from the (params, version) pair it actually handed the
+    producer — a producer that reads the store mid-generation (after a
+    concurrent publish) must not leak the newer version into the item."""
+    from collections import namedtuple
+
+    store = PolicyStore(_params(0.0), capacity=4)
+    queue = TrajectoryQueue()
+    Payload = namedtuple("Payload", ["tokens", "versions"])
+
+    def producer(params):
+        # Simulate a learner publish landing during generation: the
+        # producer's own store read now returns the *newer* version.
+        store.publish(_params(store.version + 1.0))
+        return Payload(tokens=np.zeros((2, 3)),
+                       versions=np.full((2, 3), store.version, np.int64))
+
+    regime = make_regime("forward_n", store, queue, producer, forward_n=1)
+    regime.fill()
+    item = queue.get(learner_version=store.version)
+    assert item.behavior_version == 0
+    np.testing.assert_array_equal(item.payload.versions, 0)
+
+
 def test_threaded_regime_concurrent_production_and_tags():
     store = PolicyStore(_params(0.0), capacity=2)
     queue = TrajectoryQueue(maxsize=2)
