@@ -293,6 +293,215 @@ def run_pool_sweep(
     }
 
 
+def run_speculative(
+    *,
+    k: int = 4,
+    n_requests: int = 16,
+    max_batch: int = 4,
+    budget: int = 32,
+    block_size: int = 8,
+    num_blocks: int = 48,
+    prompt_len: int = 32,
+    decode_chunk: int = 8,
+    arch: str = "qwen2.5-0.5b",
+    seed: int = 0,
+    repeats: int = 5,
+) -> Dict:
+    """Speculative vs plain continuous decode at a *cooperative* draft.
+
+    The draft is the benchmark's replay **oracle**: a zero-cost host
+    callable that proposes the continuation a prior plain greedy run of
+    the same engine produced (both arms are greedy and share params, so
+    the verifier re-derives exactly those tokens and acceptance sits at
+    ~1).  That makes this the acceptance-rate *ceiling* instrument: it
+    isolates what the single-dispatch multi-token verify path buys over
+    per-token chunked decode — one k-query model evaluation per k
+    emitted tokens instead of k sequential in-scan evaluations — with
+    draft cost and draft quality taken out of the picture.  Production
+    drafts (``--draft version:-n`` self-speculation, a small registry
+    model) pay real draft cost and their acceptance is a *measured*
+    property; this number is the mechanism's upper bound and the one CI
+    gates (hard floor 1.2x at k=4).
+    """
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+    from repro.models.registry import build
+    from repro.serve import ServeEngine
+
+    tok = get_tokenizer()
+    cfg = reduced_config(arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(seed))
+    ds = MathTaskDataset(prompt_len=prompt_len, level=0, seed=seed + 1)
+    toks_np, _, _ = ds.sample_batch(n_requests)
+    prompts = [row[row != tok.pad_id] for row in toks_np]
+    max_seq_len = prompt_len + budget + block_size
+
+    def _mk(spec_k, draft):
+        return ServeEngine(
+            bundle, params, num_blocks=num_blocks, block_size=block_size,
+            max_batch=max_batch, max_seq_len=max_seq_len,
+            decode_chunk=decode_chunk, temperature=1e-4, seed=seed + 2,
+            speculate_k=spec_k, draft=draft)
+
+    def _run(engine, on_submit=None) -> Dict:
+        before = dict(engine.stats.__dict__)
+        t0 = time.perf_counter()
+        for i, p in enumerate(prompts):
+            req = engine.submit(p, budget)
+            if on_submit is not None:
+                on_submit(i, req)
+        trajs = engine.run()
+        wall = time.perf_counter() - t0
+        d = {key: engine.stats.__dict__[key] - v
+             for key, v in before.items()}
+        return {"wall_s": wall, "tokens": d["tokens_out"],
+                "drafted": d.get("drafted_tokens", 0),
+                "accepted": d.get("accepted_tokens", 0), "trajs": trajs}
+
+    plain = _mk(0, None)
+    warm = _run(plain)                      # compile + oracle source
+    continuations = [np.asarray(t.tokens, np.int32)
+                     for t in sorted(warm["trajs"],
+                                     key=lambda t: t.request_id)]
+
+    cont_by_id: Dict[int, np.ndarray] = {}
+
+    def oracle(req, kk):
+        cont = cont_by_id.get(req.request_id)
+        if cont is None:
+            return np.zeros((kk,), np.int32)
+        m = len(req.tokens)
+        return cont[m:m + kk]
+
+    spec = _mk(k, oracle)
+    seed_oracle = lambda i, req: cont_by_id.setdefault(  # noqa: E731
+        req.request_id, continuations[i])
+    _run(spec, seed_oracle)                 # compile/warm
+
+    # Arms alternate within each repeat and the gated speedup is the
+    # MEDIAN of per-pair ratios: host drift (scheduler contention,
+    # turbo) lands on both arms of a pair ~equally instead of silently
+    # deflating whichever arm it happened to hit, which is what a
+    # best-of-per-arm split measurement is vulnerable to.
+    pairs = []
+    for _ in range(max(repeats, 1)):
+        p_run = _run(plain)
+        s_run = _run(spec, seed_oracle)
+        pairs.append((p_run, s_run))
+    ratios = [
+        (s_["tokens"] / s_["wall_s"]) / (p_["tokens"] / p_["wall_s"])
+        for p_, s_ in pairs
+    ]
+    p = min((p_ for p_, _ in pairs), key=lambda r: r["wall_s"])
+    s = min((s_ for _, s_ in pairs), key=lambda r: r["wall_s"])
+    plain_tps = p["tokens"] / p["wall_s"]
+    spec_tps = s["tokens"] / s["wall_s"]
+    return {
+        "config": {
+            "arch": arch, "k": k, "n_requests": n_requests,
+            "max_batch": max_batch, "budget": budget,
+            "block_size": block_size, "num_blocks": num_blocks,
+            "prompt_len": prompt_len, "decode_chunk": decode_chunk,
+            "seed": seed, "draft": "oracle",
+        },
+        "plain_tokens_per_s": plain_tps,
+        "tokens_per_s": spec_tps,
+        "speedup_vs_plain": float(np.median(ratios)),
+        "acceptance_rate": (
+            s["accepted"] / s["drafted"] if s["drafted"] else 0.0),
+        "drafted": s["drafted"],
+        "accepted": s["accepted"],
+        "emitted": s["tokens"],
+    }
+
+
+def run_burst(
+    *,
+    burst: int = 8,
+    prompt_len: int = 32,
+    budget: int = 8,
+    max_batch: int = 4,
+    block_size: int = 8,
+    num_blocks: int = 64,
+    decode_chunk: int = 4,
+    arch: str = "qwen2.5-0.5b",
+    seed: int = 0,
+    repeats: int = 3,
+) -> Dict:
+    """Batched-prefill micro-bench: a burst of same-length admissions.
+
+    All ``burst`` requests arrive at once with identical (padded) prompt
+    length — the regime where per-request prefill dispatches hurt most.
+    Reported per mode (batched vs per-request prefill): **admission
+    latency** p50/p99 (submit -> first emitted token, queueing included)
+    and prefill dispatch counts.  ``admission_speedup`` (unbatched p50 /
+    batched p50) is machine-normalized: both sides ran on this host.
+    """
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+    from repro.models.registry import build
+    from repro.serve import ServeEngine
+
+    tok = get_tokenizer()
+    cfg = reduced_config(arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(seed))
+    ds = MathTaskDataset(prompt_len=prompt_len, level=0, seed=seed + 1)
+    toks_np, _, _ = ds.sample_batch(burst)
+    # Full fixed-length rows: identical padded length by construction.
+    rows = [np.asarray(r, np.int32) for r in toks_np]
+    max_seq_len = prompt_len + budget + block_size
+
+    def _run(engine) -> Dict:
+        before = dict(engine.stats.__dict__)
+        t0 = time.monotonic()
+        reqs = [engine.submit(r, budget) for r in rows]
+        engine.run()
+        wall = time.monotonic() - t0
+        d = {key: engine.stats.__dict__[key] - v
+             for key, v in before.items()}
+        lat = np.asarray(
+            [r.first_token_time - t0 for r in reqs]) * 1e3
+        return {
+            "wall_s": wall,
+            "admission_p50_ms": float(np.percentile(lat, 50)),
+            "admission_p99_ms": float(np.percentile(lat, 99)),
+            "prefill_dispatches": d["prefill_dispatches"],
+            "prefills": d["prefills"],
+        }
+
+    out: Dict = {
+        "config": {
+            "arch": arch, "burst": burst, "prompt_len": prompt_len,
+            "budget": budget, "max_batch": max_batch,
+            "block_size": block_size, "num_blocks": num_blocks,
+            "decode_chunk": decode_chunk, "seed": seed,
+        },
+    }
+    for label, batched in (("batched", True), ("unbatched", False)):
+        engine = ServeEngine(
+            bundle, params, num_blocks=num_blocks, block_size=block_size,
+            max_batch=max_batch, max_seq_len=max_seq_len,
+            decode_chunk=decode_chunk, temperature=1e-4, seed=seed + 2,
+            batch_prefill=batched)
+        _run(engine)                        # compile/warm
+        runs = [_run(engine) for _ in range(max(repeats, 1))]
+        out[label] = min(runs, key=lambda r: r["admission_p50_ms"])
+    out["admission_speedup"] = (
+        out["unbatched"]["admission_p50_ms"]
+        / out["batched"]["admission_p50_ms"]
+        if out["batched"]["admission_p50_ms"] else 0.0
+    )
+    return out
+
+
 def write_json(res: Dict, path: str) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
@@ -317,6 +526,12 @@ def main() -> None:
                          "decode cost vs num_blocks (the in-place pool "
                          "must be ~flat)")
     ap.add_argument("--sweep-block-counts", default="16,32,64,128,256")
+    ap.add_argument("--speculate", type=int, default=4,
+                    help="speculative-decode bench draft length k "
+                         "(oracle cooperative draft; 0 disables)")
+    ap.add_argument("--burst", type=int, default=8,
+                    help="batched-prefill bench: same-length requests "
+                         "submitted at once (0 disables)")
     ap.add_argument("--out", default="results/bench/BENCH_serve.json")
     args = ap.parse_args()
     res = run(
@@ -350,6 +565,24 @@ def main() -> None:
               f"(fitted {min(counts)}->{max(counts)}-block per-step "
               f"cost, 1.0 = flat; raw max/min "
               f"{sweep['cost_ratio_maxmin']:.2f}x)")
+    if args.speculate:
+        spec = run_speculative(
+            k=args.speculate, arch=args.arch, seed=args.seed)
+        res["speculative"] = spec
+        print(f"{'speculative':13s} {spec['tokens_per_s']:8.1f} tok/s  "
+              f"vs plain {spec['plain_tokens_per_s']:8.1f} "
+              f"({spec['speedup_vs_plain']:.2f}x at k={args.speculate}, "
+              f"acceptance {spec['acceptance_rate']:.2f}, oracle draft)")
+    if args.burst:
+        burst = run_burst(burst=args.burst, arch=args.arch,
+                          seed=args.seed)
+        res["burst"] = burst
+        print(f"{'burst':13s} admission p50 "
+              f"{burst['batched']['admission_p50_ms']:.1f} ms batched "
+              f"({burst['batched']['prefill_dispatches']} dispatches) vs "
+              f"{burst['unbatched']['admission_p50_ms']:.1f} ms "
+              f"per-request ({burst['unbatched']['prefill_dispatches']}) "
+              f"-> {burst['admission_speedup']:.2f}x")
     if args.out:
         write_json(res, args.out)
         print(f"wrote {args.out}")

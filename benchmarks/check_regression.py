@@ -49,6 +49,7 @@ class Metric:
     higher_is_better: bool
     relative: bool                # machine-speed-normalized metric
     hard_max: Optional[float] = None   # absolute cap (lower-is-better)
+    hard_min: Optional[float] = None   # absolute floor (higher-is-better)
     cap_only: bool = False        # skip the baseline diff, cap suffices
 
 
@@ -56,12 +57,28 @@ SERVE_METRICS = (
     Metric("continuous.tokens_per_s", True, False),
     Metric("phase_locked.tokens_per_s", True, False),
     Metric("speedup_tokens_per_s", True, True),
-    # The tentpole acceptance bar: per-step decode cost flat in pool
+    # The PR-3 acceptance bar: per-step decode cost flat in pool
     # size.  Cap-only: a healthy in-place pool fits to ~1.0x and an
     # O(pool) one to ~2x+, so the absolute 1.2 cap is the whole test —
     # a baseline-relative band around 1.0 would only add noise flakes.
     Metric("pool_sweep.cost_ratio", False, True, hard_max=1.2,
            cap_only=True),
+    # Speculative decode (PR-4 acceptance bar): at the cooperative
+    # (oracle) draft and k=4, the single-dispatch multi-token verify
+    # must buy >= 1.2x tokens/s over plain chunked decode on the smoke
+    # config — a hard floor, independent of baseline drift, on top of
+    # the usual relative band.  The speedup is a median of paired
+    # same-host ratios, so it is machine-normalized by construction.
+    Metric("speculative.speedup_vs_plain", True, True, hard_min=1.2),
+    # Acceptance rate at the oracle draft is a pure-correctness number
+    # (it only drops if verify/accept logic changes): machine-free,
+    # gated on the relative band.
+    Metric("speculative.acceptance_rate", True, True),
+    Metric("speculative.tokens_per_s", True, False),
+    # Batched prefill: admission-latency win of stacking same-length
+    # admissions into one dispatch (both sides measured on this host).
+    Metric("burst.admission_speedup", True, True),
+    Metric("burst.batched.admission_p50_ms", False, False),
 )
 
 RUNTIME_METRICS = (
@@ -125,6 +142,14 @@ def check_pair(
                     f"{m.hard_max:.3f}")
             elif m.cap_only:
                 print(f"  ✓ {name}:{m.path} [cap {m.hard_max:.2f}]: "
+                      f"{new:.3f}")
+        if m.hard_min is not None:
+            if not (new >= m.hard_min):
+                failures.append(
+                    f"{name}:{m.path}: {new:.3f} below hard floor "
+                    f"{m.hard_min:.3f}")
+            else:
+                print(f"  ✓ {name}:{m.path} [floor {m.hard_min:.2f}]: "
                       f"{new:.3f}")
         if m.cap_only:
             continue

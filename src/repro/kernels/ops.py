@@ -24,6 +24,8 @@ from repro.kernels.flash_attention_pallas import flash_attention
 from repro.kernels.fused_logprob_pallas import logprobs_pallas
 from repro.kernels.paged_attention_pallas import paged_attention as \
     paged_attention_pallas
+from repro.kernels.paged_attention_pallas import paged_attention_multi as \
+    paged_attention_multi_pallas
 from repro.kernels.paged_kv_write_pallas import paged_kv_write as \
     paged_kv_write_pallas
 from repro.kernels.ssm_scan_pallas import ssm_scan_pallas
@@ -82,6 +84,22 @@ def paged_attention(
         return ref_mod.ref_paged_attention(
             q, k_pages, v_pages, block_tables, context_lens, window=window)
     return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables, context_lens,
+        window=window, **kw)
+
+
+def paged_attention_multi(
+    q, k_pages, v_pages, block_tables, context_lens,
+    *, window: Optional[int] = None, mode: Optional[str] = None,
+):
+    """Multi-token verify attention over the paged pool ([B, T, H, D]):
+    query ``t`` sits at absolute position ``context_lens - T + t`` and
+    attends causally — T drafted tokens scored in one dispatch."""
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_paged_attention_multi(
+            q, k_pages, v_pages, block_tables, context_lens, window=window)
+    return paged_attention_multi_pallas(
         q, k_pages, v_pages, block_tables, context_lens,
         window=window, **kw)
 

@@ -24,8 +24,22 @@ step touches exactly the pages its requests own:
 Pad slots of a table must hold an *in-range* page id (the allocator pads
 with 0): the index map runs for skipped iterations too.
 
-Forward-only (decode); the pure-jnp oracle is
-``repro.kernels.ref.ref_paged_attention``.
+Two entry points share the machinery:
+
+* :func:`paged_attention` — one query token per request (the plain
+  decode step).
+* :func:`paged_attention_multi` — ``T`` *consecutive* query tokens per
+  request in one dispatch (the speculative-decode verifier): query
+  ``t`` sits at absolute position ``context_lens[b] - T + t`` and
+  attends causally over exactly its own prefix, so all ``T`` drafted
+  tokens are scored against the paged pool in a single kernel launch
+  instead of ``T`` sequential ones.  The online-softmax state simply
+  grows a ``T`` row axis; the page loop, scalar-prefetch gather and
+  window logic are identical.
+
+Forward-only (decode); the pure-jnp oracles are
+``repro.kernels.ref.ref_paged_attention`` and
+``ref.ref_paged_attention_multi``.
 """
 from __future__ import annotations
 
@@ -152,6 +166,136 @@ def paged_attention(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
+def _paged_multi_kernel(
+    tables_ref,   # scalar prefetch [B, M] int32
+    lens_ref,     # scalar prefetch [B] int32 (rows live incl. the chunk)
+    q_ref,        # [1, T, 1, D]
+    k_ref,        # [1, 1, BS, D]
+    v_ref,        # [1, 1, BS, D]
+    o_ref,        # [1, T, 1, D]
+    m_ref,        # scratch [T, 1]
+    l_ref,        # scratch [T, 1]
+    acc_ref,      # scratch [T, D]
+    *,
+    block_size: int,
+    num_blocks_max: int,
+    q_len: int,
+    window: Optional[int],
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    ctx = lens_ref[b]
+    base = ctx - q_len            # absolute position of query 0
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_start = j * block_size
+    live = k_start < ctx
+    if window is not None:
+        # The *oldest* query (position `base`) has the leftmost window;
+        # a page fully left of it is dead for every query in the chunk.
+        live = jnp.logical_and(
+            live, base - (k_start + block_size - 1) < window
+        )
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale       # [T, D]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [BS, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # [T, BS]
+
+        kpos = k_start + jax.lax.iota(jnp.int32, block_size)  # [BS]
+        qpos = base + jax.lax.iota(jnp.int32, q_len)          # [T]
+        mask = kpos[None, :] <= qpos[:, None]                 # causal
+        if window is not None:
+            mask = jnp.logical_and(
+                mask, (qpos[:, None] - kpos[None, :]) < window)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_ref[:, 0]                                  # [T]
+        l_prev = l_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])                  # [T, BS]
+        l_ref[...] = (alpha * l_prev + jnp.sum(p, axis=1))[:, None]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(j == num_blocks_max - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"),
+)
+def paged_attention_multi(
+    q: jax.Array,             # [B, T, H, D] consecutive query tokens
+    k_pages: jax.Array,       # [KV, NB, BS, D]
+    v_pages: jax.Array,       # [KV, NB, BS, D]
+    block_tables: jax.Array,  # [B, M] int32 page ids (pads must be in-range)
+    context_lens: jax.Array,  # [B] int32 rows live *including* the T chunk
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Multi-token decode attention: query ``t`` of request ``b`` sits at
+    absolute position ``context_lens[b] - T + t`` and attends causally
+    over positions ``<=`` its own.  A slot with ``context_lens[b] == 0``
+    is inactive and yields exactly zero."""
+    b, t, h, d = q.shape
+    kv, _, block_size, _ = k_pages.shape
+    m = block_tables.shape[1]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, h, m),
+        in_specs=[
+            pl.BlockSpec(
+                (1, t, 1, d), lambda b_, h_, j, tbl, cl: (b_, 0, h_, 0)),
+            pl.BlockSpec(
+                (1, 1, block_size, d),
+                lambda b_, h_, j, tbl, cl: (h_ // group, tbl[b_, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_size, d),
+                lambda b_, h_, j, tbl, cl: (h_ // group, tbl[b_, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, t, 1, d), lambda b_, h_, j, tbl, cl: (b_, 0, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_multi_kernel, block_size=block_size, num_blocks_max=m,
+            q_len=t, window=window, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
       q, k_pages, v_pages)

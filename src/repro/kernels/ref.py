@@ -121,6 +121,46 @@ def ref_paged_attention(
     return out.reshape(b, h, d)
 
 
+def ref_paged_attention_multi(
+    q: jax.Array,             # [B, T, H, D] consecutive query tokens
+    k_pages: jax.Array,       # [KV, NB, BS, D] pooled key blocks
+    v_pages: jax.Array,       # [KV, NB, BS, D] pooled value blocks
+    block_tables: jax.Array,  # [B, M] int32 page ids
+    context_lens: jax.Array,  # [B] int32 rows live *including* the T chunk
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Multi-token (speculative-verify) paged attention ground truth.
+
+    Query ``t`` of request ``b`` sits at absolute position
+    ``context_lens[b] - T + t`` and attends causally over positions
+    ``<=`` its own (its K/V row — and those of the earlier drafted
+    tokens — are expected to already be written).  ``T = 1`` reduces
+    exactly to :func:`ref_paged_attention`.
+    """
+    kv, _, bs, d = k_pages.shape
+    b, t, h, _ = q.shape
+    g = h // kv
+    scale = d ** -0.5
+    keys = k_pages[:, block_tables].reshape(kv, b, -1, d)
+    vals = v_pages[:, block_tables].reshape(kv, b, -1, d)
+    qg = q.reshape(b, t, kv, g, d)
+    scores = jnp.einsum("btkgd,kbsd->bkgts", qg * scale, keys,
+                        preferred_element_type=jnp.float32)
+    pos = jnp.arange(keys.shape[2], dtype=jnp.int32)[None, None, :]
+    qpos = (context_lens[:, None] - t
+            + jnp.arange(t, dtype=jnp.int32)[None, :])[:, :, None]
+    valid = pos <= qpos                                   # [B, T, S]
+    if window is not None:
+        valid = jnp.logical_and(valid, (qpos - pos) < window)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,kbsd->btkgd", probs, vals)
+    out = jnp.where(
+        context_lens[:, None, None, None, None] > 0, out, 0.0)
+    return out.reshape(b, t, h, d)
+
+
 # ---------------------------------------------------------------------------
 # Paged KV row write (serve engine's in-place pool append)
 # ---------------------------------------------------------------------------

@@ -77,12 +77,37 @@ def _serve_static(args, bundle, params, store, tok, prompts_np, answers):
         print(f"  [{i}] -> {text!r} (gold {answers[i]}, reward {r}){vtag}")
 
 
+def _parse_draft(spec: str, args, bundle, params, tok):
+    """--draft grammar: ``version:-n`` (self-speculation from the
+    PolicyStore ring), ``model:<arch>`` (small registry draft model),
+    ``self`` (verifier's own params; accept-all ceiling)."""
+    import jax as _jax
+
+    if spec.startswith("version:"):
+        return ("version", int(spec.split(":", 1)[1]))
+    if spec.startswith("model:"):
+        from repro.configs import reduced_config
+        from repro.models.registry import build
+
+        dcfg = reduced_config(spec.split(":", 1)[1], vocab=tok.vocab_size)
+        dbundle = build(dcfg)
+        dparams = dbundle.init(_jax.random.PRNGKey(args.seed + 7))
+        return ("model", dbundle, dparams)
+    if spec == "self":
+        return ("params", params)
+    raise SystemExit(f"--draft {spec!r}: want version:-n, model:<arch> "
+                     "or self")
+
+
 def _serve_continuous(args, bundle, params, store, tok, ds):
     from repro.data.mathgen import verify
     from repro.serve import ServeEngine
 
     lengths = [int(x) for x in args.mixed_lengths.split(",")] \
         if args.mixed_lengths else [args.max_new_tokens]
+    draft = None
+    if args.speculate:
+        draft = _parse_draft(args.draft, args, bundle, params, tok)
     engine = ServeEngine(
         bundle, params if store is None else None, store=store,
         num_blocks=args.num_blocks, block_size=args.block_size,
@@ -90,6 +115,8 @@ def _serve_continuous(args, bundle, params, store, tok, ds):
         decode_chunk=args.decode_chunk,
         swap_interval=args.swap_interval, temperature=args.temperature,
         top_p=args.top_p, seed=args.seed + 2,
+        speculate_k=args.speculate, draft=draft,
+        batch_prefill=not args.no_batch_prefill,
     )
     toks_np, prompts, answers = ds.sample_batch(args.requests)
     meta = {}
@@ -113,9 +140,20 @@ def _serve_continuous(args, bundle, params, store, tok, ds):
         lat_tag = (f"latency p50 {np.percentile(lat, 50):.1f} ms "
                    f"p99 {np.percentile(lat, 99):.1f} ms")
     print(f"  occupancy {stats['mean_occupancy']:.2f}/{args.max_batch}, "
-          f"prefills {stats['prefills']}, "
+          f"prefills {stats['prefills']} "
+          f"({stats['prefill_dispatches']} dispatches), "
           f"preemptions {stats['preemptions']}, swaps {stats['swaps']}, "
           f"{lat_tag}")
+    if args.speculate:
+        dv = stats.get("draft_version")
+        dtag = ("oracle/callable" if dv is None and engine.draft is not None
+                and not hasattr(engine.draft, "pages")
+                else f"v{dv}" if dv is not None else "fixed-params")
+        print(f"  speculative k={args.speculate}: acceptance "
+              f"{stats['acceptance_rate']:.2f} "
+              f"({stats['accepted_tokens']}/{stats['drafted_tokens']} "
+              f"drafted), draft {dtag}, lag hist "
+              f"{stats.get('draft_version_lag_histogram', {})}")
     for t in sorted(trajs, key=lambda t: t.request_id)[:8]:
         prompt_text, ans = meta[t.request_id]
         text = tok.decode(t.tokens)
@@ -149,6 +187,19 @@ def main(argv=None) -> int:
     ap.add_argument("--decode-chunk", type=int, default=4,
                     help="continuous: decode steps per dispatch "
                          "(scheduling happens between chunks)")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="continuous: speculative-decode draft length k "
+                         "(0 = off); k drafted tokens are verified in "
+                         "one multi-token dispatch")
+    ap.add_argument("--draft", default="version:-1",
+                    help="draft policy: version:-n (self-speculation "
+                         "from the PolicyStore, needs --runtime "
+                         "versioned), model:<arch> (small registry "
+                         "draft), self (verifier params; accept-all)")
+    ap.add_argument("--no-batch-prefill", action="store_true",
+                    help="continuous: prefill admissions one dispatch "
+                         "per request (default stacks same-padded-"
+                         "length admissions)")
     ap.add_argument("--swap-interval", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-p", type=float, default=1.0)

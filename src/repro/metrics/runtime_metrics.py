@@ -56,7 +56,15 @@ class RuntimeQueueStats:
 def collect_serve_stats(engine: Any) -> Dict[str, Any]:
     """JSON-ready view of a ServeEngine: decode/occupancy counters plus
     the paged-pool and scheduler state (the serve-side analogue of
-    :func:`collect_runtime_stats`)."""
+    :func:`collect_runtime_stats`).
+
+    Speculative runs additionally report the acceptance rate (accepted
+    draft tokens / drafted; ``as_dict`` computes it), drafted-vs-emitted
+    token counts, the draft slot's policy version and the
+    **draft-version lag histogram**: per emitted token, how many
+    publishes the draft policy lagged the verifier — the serve-side
+    mirror of the runtime's behavior-policy lag histograms.
+    """
     alloc = engine.allocator
     sched = engine.scheduler
     out = dict(engine.stats.as_dict())
@@ -71,7 +79,15 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
         "block_size": alloc.block_size,
         "waiting": len(sched.waiting),
         "running": len(sched.running),
+        "speculate_k": getattr(engine, "speculate_k", 0),
     })
+    draft = getattr(engine, "draft", None)
+    if draft is not None:
+        out["draft_version"] = draft.version
+        out["draft_version_lag_histogram"] = {
+            str(k): v
+            for k, v in engine._draft_lag_hist.snapshot().items()
+        }
     return out
 
 

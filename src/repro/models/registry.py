@@ -36,6 +36,9 @@ class ModelBundle:
     # see transformer.paged_arch_unsupported for the reasons).
     decode_step_paged: Optional[Callable] = None
     init_paged_cache: Optional[Callable] = None
+    # Multi-token verify step for speculative decode (None iff the paged
+    # path is unsupported).
+    decode_step_paged_multi: Optional[Callable] = None
 
 
 def build(cfg: ModelConfig, unroll_layers: bool = False,
@@ -71,6 +74,7 @@ def _build_decoder_only(cfg: ModelConfig,
 
     decode_step_paged = None
     init_paged_cache = None
+    decode_step_paged_multi = None
     if tf_mod.paged_arch_unsupported(cfg) is None:
         def decode_step_paged(params, token, pages, block_tables, pos,
                               active, kernel_mode=None):
@@ -78,13 +82,21 @@ def _build_decoder_only(cfg: ModelConfig,
                 params, cfg, token, pages, block_tables, pos, active,
                 kernel_mode=kernel_mode)
 
+        def decode_step_paged_multi(params, tokens, pages, block_tables,
+                                    pos, active, write_cap,
+                                    kernel_mode=None):
+            return tf_mod.decode_step_paged_multi(
+                params, cfg, tokens, pages, block_tables, pos, active,
+                write_cap, kernel_mode=kernel_mode)
+
         def init_paged_cache(num_blocks, block_size, dtype=jnp.float32):
             return tf_mod.init_paged_cache(cfg, num_blocks, block_size,
                                            dtype)
 
     return ModelBundle(cfg, init, forward, decode_step, init_cache,
                        aux_shapes, decode_step_paged=decode_step_paged,
-                       init_paged_cache=init_paged_cache)
+                       init_paged_cache=init_paged_cache,
+                       decode_step_paged_multi=decode_step_paged_multi)
 
 
 def _build_encdec(cfg: ModelConfig,

@@ -220,9 +220,9 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
 
 def _paged_layer_tail(cfg: ModelConfig, lp: Dict, x: jax.Array,
                       attn_out: jax.Array) -> jax.Array:
-    """Shared post-attention half of a paged decode layer."""
+    """Shared post-attention half of a paged decode layer ([B, S, ...])."""
     b = x.shape[0]
-    attn_out = attn_out.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    attn_out = attn_out.reshape(b, -1, cfg.n_heads * cfg.head_dim)
     x = x + dense_apply(lp["attn"]["wo"], attn_out)
     h = rmsnorm_apply(lp["norm2"], x, cfg.norm_eps)
     if cfg.moe is not None:
@@ -235,22 +235,24 @@ def _paged_layer_tail(cfg: ModelConfig, lp: Dict, x: jax.Array,
 
 
 def _paged_qkv(cfg: ModelConfig, lp: Dict, x: jax.Array,
-               safe_pos: jax.Array) -> Tuple[jax.Array, jax.Array,
-                                             jax.Array]:
-    """Projections + rope for one paged decode layer ([B, 1, ...])."""
+               positions: jax.Array) -> Tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """Projections + rope for one paged decode layer ([B, S, ...]);
+    ``positions`` is [B, S] absolute rope positions."""
     h = rmsnorm_apply(lp["norm1"], x, cfg.norm_eps)
     q = attn._split_heads(dense_apply(lp["attn"]["wq"], h), cfg.n_heads)
     k_new = attn._split_heads(
         dense_apply(lp["attn"]["wk"], h), cfg.n_kv_heads)
     v_new = attn._split_heads(
         dense_apply(lp["attn"]["wv"], h), cfg.n_kv_heads)
-    q = apply_rope(q, safe_pos[:, None], cfg.rope_theta)
-    k_new = apply_rope(k_new, safe_pos[:, None], cfg.rope_theta)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
     return q, k_new, v_new
 
 
-def _paged_head(params: Dict, cfg: ModelConfig, x: jax.Array
-                ) -> ModelOutput:
+def _paged_head_full(params: Dict, cfg: ModelConfig, x: jax.Array
+                     ) -> ModelOutput:
+    """Final norm + readout over every query position ([B, S, V])."""
     x = rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     if cfg.tie_embeddings:
         logits = embedding_attend(params["embed"], x)
@@ -261,8 +263,17 @@ def _paged_head(params: Dict, cfg: ModelConfig, x: jax.Array
     if cfg.value_head:
         value = dense_apply(params["value_head"], x)[..., 0]
     return ModelOutput(
-        logits=logits[:, 0], value=None if value is None else value[:, 0],
+        logits=logits, value=value,
         cache=None, aux_loss=jnp.zeros((), jnp.float32),
+    )
+
+
+def _paged_head(params: Dict, cfg: ModelConfig, x: jax.Array
+                ) -> ModelOutput:
+    out = _paged_head_full(params, cfg, x)
+    return out._replace(
+        logits=out.logits[:, 0],
+        value=None if out.value is None else out.value[:, 0],
     )
 
 
@@ -311,7 +322,7 @@ def decode_step_paged(
     k_pages, v_pages = pages["k_pages"], pages["v_pages"]
     for layer in range(cfg.n_layers):
         lp = jax.tree.map(lambda a: a[layer], params["layers"])
-        q, k_new, v_new = _paged_qkv(cfg, lp, x, safe_pos)
+        q, k_new, v_new = _paged_qkv(cfg, lp, x, safe_pos[:, None])
         k_pages, v_pages = kops.paged_kv_write(
             k_pages, v_pages, k_new[:, 0], v_new[:, 0],
             page_idx, offset, active, layer=layer, mode=kernel_mode,
@@ -323,6 +334,78 @@ def decode_step_paged(
         x = _paged_layer_tail(cfg, lp, x, attn_out)
 
     out = _paged_head(params, cfg, x)
+    return out, {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def decode_step_paged_multi(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,        # [B, T] consecutive tokens per slot
+    pages: Dict,              # {"k_pages","v_pages"} [L, KV, NB, BS, Dh]
+    block_tables: jax.Array,  # [B, M] int32 page ids (pads in-range)
+    pos: jax.Array,           # [B] int32 tokens already cached per slot
+    active: jax.Array,        # [B] bool; inactive slots write/read nothing
+    write_cap: jax.Array,     # [B] int32 rows this slot owns pages for
+    *,
+    kernel_mode: Optional[str] = None,
+) -> Tuple[ModelOutput, Dict]:
+    """Score ``T`` consecutive tokens per slot in one dispatch (the
+    speculative-decode verifier).
+
+    Token ``t`` of slot ``b`` sits at absolute position ``pos[b] + t``:
+    its K/V row is written first (at that position, through the slot's
+    block table) and it attends causally over its own prefix — exactly
+    ``T`` sequential :func:`decode_step_paged` calls fused into one
+    launch, with the attention read done by the multi-query paged
+    kernel (``kernels.ops.paged_attention_multi``) instead of ``T``
+    single-query ones.  ``T = 1`` is the plain decode step.
+
+    ``write_cap[b]`` bounds the rows slot ``b`` may write (its allocated
+    pages): positions ``>= write_cap`` *drop* their K/V write instead of
+    landing in the table's in-range pad pages (page 0 belongs to someone
+    else).  Logits at such positions are garbage — callers never emit
+    from them (the scheduler allocates pages for every row that can
+    influence an emitted token; only past-end-of-budget draft positions
+    are ever uncovered).
+
+    Rollback after partial acceptance is *pure position arithmetic*: the
+    caller rewinds ``pos`` to the accepted prefix and the rejected rows
+    are simply overwritten by the next chunk — no page copies, no
+    retraction of emitted tokens, preemption-safe (a preempted request
+    re-prefills prompt + emitted tokens exactly as before).
+    """
+    from repro.kernels import ops as kops
+
+    b, t = tokens.shape
+    block_size = pages["k_pages"].shape[3]
+    x = embedding_apply(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    safe_pos = jnp.maximum(pos, 0)
+    positions = safe_pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    page_idx = jnp.take_along_axis(
+        block_tables, positions // block_size, axis=1)       # [B, T]
+    offset = positions % block_size
+    write_ok = jnp.logical_and(
+        active[:, None], positions < write_cap[:, None])     # [B, T]
+    context_lens = jnp.where(active, safe_pos + t, 0).astype(jnp.int32)
+
+    k_pages, v_pages = pages["k_pages"], pages["v_pages"]
+    for layer in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[layer], params["layers"])
+        q, k_new, v_new = _paged_qkv(cfg, lp, x, positions)
+        for step in range(t):
+            k_pages, v_pages = kops.paged_kv_write(
+                k_pages, v_pages, k_new[:, step], v_new[:, step],
+                page_idx[:, step], offset[:, step], write_ok[:, step],
+                layer=layer, mode=kernel_mode,
+            )
+        attn_out = kops.paged_attention_multi(
+            q, k_pages[layer], v_pages[layer], block_tables,
+            context_lens, mode=kernel_mode,
+        )
+        x = _paged_layer_tail(cfg, lp, x, attn_out)
+
+    out = _paged_head_full(params, cfg, x)
     return out, {"k_pages": k_pages, "v_pages": v_pages}
 
 
@@ -363,7 +446,7 @@ def decode_step_paged_carried(
 
     def layer_step(x, xs):
         lp, k_pages, v_pages = xs
-        q, k_new, v_new = _paged_qkv(cfg, lp, x, safe_pos)
+        q, k_new, v_new = _paged_qkv(cfg, lp, x, safe_pos[:, None])
         # [B, 1, KV, Dh] -> [KV, B, Dh] rows, scattered per slot.
         k_rows = k_new[:, 0].transpose(1, 0, 2)
         v_rows = v_new[:, 0].transpose(1, 0, 2)

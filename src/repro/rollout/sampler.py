@@ -119,6 +119,91 @@ def generate(
     )
 
 
+def speculative_accept(
+    verifier_logits: jax.Array,  # [B, K, V] L_i: verifier logits after
+                                 # consuming query i (= the token the
+                                 # draft's step i also consumed)
+    draft_tokens: jax.Array,     # [B, K] int32 proposed tokens d_{i+1}
+    draft_logits: jax.Array,     # [B, K, V] draft logits that sampled
+                                 # d_{i+1} (same position alignment)
+    key: jax.Array,
+    *,
+    temperature: float = 1.0,
+    top_p: float = 1.0,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Speculative-sampling accept/rollback (Leviathan et al., 2023).
+
+    Position ``i`` accepts draft token ``d`` with probability
+    ``min(1, p_i(d) / q_i(d))`` where ``p``/``q`` are the verifier/draft
+    distributions under the *same* temperature + top-p transform the
+    serve engine samples with.  The first rejection emits a correction
+    drawn from the residual ``max(p - q, 0)`` (renormalized) instead,
+    and everything after it is rolled back.  The emitted-token marginal
+    is exactly ``p`` at every position, so the recorded ``log_beta`` is
+    the **verifier's** log-prob of the emitted token — β stays the
+    latest policy and downstream TV-gate admission is unchanged.
+
+    Greedy decode is the ``temperature -> 0`` limit of the same rule:
+    the sharpened ``p``/``q`` are one-hot, so a draft token is accepted
+    iff it equals the verifier argmax and the residual collapses onto
+    the verifier argmax — speculative greedy output is token-exact with
+    non-speculative greedy decode at any acceptance rate.
+
+    Returns ``(tokens [B, K], log_p [B, K], n_accepted [B],
+    n_emitted [B])``: positions ``< n_emitted`` hold the emitted tokens
+    (accepted prefix + one correction when a rejection happened;
+    ``n_emitted == K`` means every draft was accepted and no correction
+    is appended — the caller re-feeds ``d_K`` as the next query, which
+    rewrites its row idempotently).  Positions ``>= n_emitted`` are PAD
+    with log-prob exactly 0.
+    """
+    b, k, _ = verifier_logits.shape
+    temp = max(float(temperature), 1e-6)
+
+    def _log_dist(logits):
+        logits = logits.astype(jnp.float32) / temp
+        logits = _top_p_filter(logits, top_p)
+        return jax.nn.log_softmax(logits, axis=-1)
+
+    logp_p = _log_dist(verifier_logits)                    # [B, K, V]
+    logp_q = _log_dist(draft_logits)
+    p_d = jnp.take_along_axis(
+        logp_p, draft_tokens[..., None], axis=-1)[..., 0]  # [B, K]
+    q_d = jnp.take_along_axis(
+        logp_q, draft_tokens[..., None], axis=-1)[..., 0]
+
+    k_u, k_r = jax.random.split(key)
+    u = jax.random.uniform(k_u, (b, k), minval=1e-7)
+    # accept_i: u < p(d)/q(d), in log space (p_d = -inf always rejects).
+    accept = jnp.log(u) < (p_d - q_d)
+    n_acc = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+
+    # Correction at the first rejected position (clamped when everything
+    # was accepted; that sample is masked out below).
+    rej = jnp.minimum(n_acc, k - 1)
+    pr = jnp.take_along_axis(logp_p, rej[:, None, None], axis=1)[:, 0]
+    qr = jnp.take_along_axis(logp_q, rej[:, None, None], axis=1)[:, 0]
+    residual = jnp.maximum(jnp.exp(pr) - jnp.exp(qr), 0.0)  # [B, V]
+    res_sum = residual.sum(axis=-1, keepdims=True)
+    # Degenerate residual (p == q everywhere) can only pair with a
+    # rejection through float round-off; fall back to sampling from p.
+    corr_logits = jnp.where(
+        res_sum > 1e-9, jnp.log(jnp.maximum(residual, 1e-38)), pr)
+    corr = jax.random.categorical(k_r, corr_logits, axis=-1)  # [B]
+    corr_logp = jnp.take_along_axis(pr, corr[:, None], axis=1)[:, 0]
+
+    idx = jnp.arange(k, dtype=jnp.int32)[None, :]
+    is_acc = idx < n_acc[:, None]
+    is_corr = jnp.logical_and(idx == n_acc[:, None], n_acc[:, None] < k)
+    tokens = jnp.where(
+        is_acc, draft_tokens,
+        jnp.where(is_corr, corr[:, None], jnp.int32(PAD)))
+    log_p = jnp.where(is_acc, p_d,
+                      jnp.where(is_corr, corr_logp[:, None], 0.0))
+    n_emit = jnp.minimum(n_acc + 1, k)
+    return tokens, log_p, n_acc, n_emit
+
+
 def score_tokens(
     bundle: ModelBundle,
     params: Any,

@@ -70,6 +70,9 @@ class PolicyStore:
         self._history: Dict[int, SnapshotMeta] = {
             0: SnapshotMeta(0, time.time(), dict(meta or {}))
         }
+        # version -> [params, refcount]: snapshots kept alive past ring
+        # eviction for long-lived readers (speculative-decode drafts).
+        self._pinned: Dict[int, List[Any]] = {}
 
     # -- publication ---------------------------------------------------------
 
@@ -120,23 +123,123 @@ class PolicyStore:
             return [int(self._slot_versions[s]) for s in slots]
 
     def get(self, version: int) -> Any:
-        """Parameters of `version`; StaleVersionError once evicted."""
+        """Parameters of `version`; StaleVersionError once evicted
+        (pinned versions stay readable past eviction)."""
         with self._lock:
-            cap = self._buffer.capacity
-            head = int(self._buffer.head)
-            count = int(self._buffer.count)
-            for j in range(count):
-                slot = (head - count + j) % cap
-                if int(self._slot_versions[slot]) == version:
-                    return jax.tree.map(
-                        lambda s: s[slot], self._buffer.stacked
-                    )
+            params = self._resident_locked(version)
+            if params is not None:
+                return params
         if version in self._history:
             raise StaleVersionError(
                 f"version {version} was evicted from the ring "
                 f"(capacity {self.capacity}, latest {self._version})"
             )
         raise KeyError(f"version {version} was never published")
+
+    def _resident_locked(self, version: int) -> Optional[Any]:
+        """Params of `version` if resident (ring or pin); None otherwise.
+        Caller holds the lock."""
+        if version in self._pinned:
+            return self._pinned[version][0]
+        cap = self._buffer.capacity
+        head = int(self._buffer.head)
+        count = int(self._buffer.count)
+        for j in range(count):
+            slot = (head - count + j) % cap
+            if int(self._slot_versions[slot]) == version:
+                return jax.tree.map(
+                    lambda s: s[slot], self._buffer.stacked
+                )
+        return None
+
+    # -- pinning (long-lived readers, e.g. speculative-decode drafts) --------
+
+    def pin(self, version: int) -> Any:
+        """Keep `version`'s parameters alive past ring eviction.
+
+        Refcounted: pin the same version twice, release it twice.  The
+        version must still be resident (ring or an existing pin) when
+        first pinned; afterwards the pin itself keeps it readable by
+        :meth:`get` and resolvable by :meth:`resolve_lagged` no matter
+        how many publishes evict it from the ring.  Returns the params.
+        """
+        with self._lock:
+            if version in self._pinned:
+                self._pinned[version][1] += 1
+                return self._pinned[version][0]
+            params = self._resident_locked(version)
+            if params is not None:
+                self._pinned[version] = [params, 1]
+                return params
+        # Out of the lock: reuse get()'s error taxonomy.
+        return self.get(version)
+
+    def release(self, version: int) -> None:
+        """Drop one pin on `version`; params free once refcount hits 0
+        (ring residency is unaffected)."""
+        with self._lock:
+            entry = self._pinned.get(version)
+            if entry is None:
+                raise KeyError(f"version {version} is not pinned")
+            entry[1] -= 1
+            if entry[1] <= 0:
+                del self._pinned[version]
+
+    def pinned_versions(self) -> List[int]:
+        with self._lock:
+            return sorted(self._pinned)
+
+    def _resolve_lagged_locked(self, offset: int) -> int:
+        target = self._version + offset
+        cap = self._buffer.capacity
+        head = int(self._buffer.head)
+        count = int(self._buffer.count)
+        resident = {
+            int(self._slot_versions[(head - count + j) % cap])
+            for j in range(count)
+        }
+        resident.update(self._pinned)
+        older = [v for v in resident if v <= target]
+        return max(older) if older else min(resident)
+
+    def resolve_lagged(self, offset: int) -> int:
+        """Resident version closest to ``latest + offset`` (offset <= 0).
+
+        The speculative-decode draft slot asks for "the policy n
+        publishes behind the verifier"; when that exact version was
+        evicted, the nearest *older* resident one is returned (stalest
+        acceptable), falling back to the oldest resident overall.
+        Resident = in the ring or pinned.  The result is only
+        guaranteed pin-able while no publish intervenes — callers that
+        go on to pin should use :meth:`pin_lagged` instead.
+        """
+        if offset > 0:
+            raise ValueError(f"offset must be <= 0, got {offset}")
+        with self._lock:
+            return self._resolve_lagged_locked(offset)
+
+    def pin_lagged(self, offset: int) -> Tuple[Any, int]:
+        """Resolve ``latest + offset`` and pin it in ONE lock hold.
+
+        A separate resolve()-then-pin() pair races concurrent
+        publishes: the resolved version (often the oldest resident,
+        i.e. the very next eviction victim) can leave the ring between
+        the two calls and the pin then raises StaleVersionError —
+        exactly the learner-publishes-while-serving interleaving the
+        threaded regimes run all day.  Returns ``(params, version)``.
+        """
+        if offset > 0:
+            raise ValueError(f"offset must be <= 0, got {offset}")
+        with self._lock:
+            version = self._resolve_lagged_locked(offset)
+            if version in self._pinned:
+                self._pinned[version][1] += 1
+                return self._pinned[version][0], version
+            params = self._resident_locked(version)
+            # Resolution only returns resident versions and the lock is
+            # still held, so params cannot be None here.
+            self._pinned[version] = [params, 1]
+            return params, version
 
     def meta(self, version: int) -> SnapshotMeta:
         return self._history[version]

@@ -17,9 +17,18 @@ system* rather than a fixed-batch ``generate()`` loop:
                      token records the policy version that produced it,
                      so finished trajectories carry per-token version
                      vectors + per-token ``log_beta`` for the runtime's
-                     ``tv_gate_tokenwise`` admission policy.
+                     ``tv_gate_tokenwise`` admission policy.  Optional
+                     speculative decode (draft slot + single-dispatch
+                     multi-token verify, rollback = pos rewind) and
+                     batched same-padded-length prefill admissions.
 """
-from repro.serve.engine import ServeEngine, ServedTrajectory, ServeStats
+from repro.serve.engine import (
+    CallableDraft,
+    ModelDraft,
+    ServeEngine,
+    ServeStats,
+    ServedTrajectory,
+)
 from repro.serve.paged_cache import BlockAllocator, OutOfBlocks
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
@@ -29,7 +38,9 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "BlockAllocator",
+    "CallableDraft",
     "ContinuousBatchingScheduler",
+    "ModelDraft",
     "OutOfBlocks",
     "Request",
     "RequestState",

@@ -25,22 +25,52 @@ Preemption recomputes KV (re-prefill over prompt + already-emitted
 tokens) rather than retracting tokens: emitted tokens may already be
 streamed to a client and their recorded (log_beta, version) provenance
 stays valid — the re-prefill only rebuilds cache rows.
+
+**Speculative decode** (``speculate_k > 0``): a cheap *draft* policy
+proposes ``k`` tokens per slot and the latest policy scores all of them
+in one multi-token dispatch (``decode_step_paged_multi``), accepting a
+prefix via the Leviathan accept rule (``rollout.sampler.
+speculative_accept``).  The draft slot is either **self-speculation** —
+a lagged PolicyStore version, pinned so learner publishes can't evict
+it, which turns the very staleness the paper studies into actor-side
+throughput — a separate small draft model, or a host callable (the
+benchmark's zero-cost oracle).  Model drafts keep their *own* paged
+pool addressed by the same block tables (draft K/V differ from verifier
+K/V), so rollback after a rejection is a pure ``pos`` rewind on both:
+rejected rows are simply overwritten by the next chunk, no page copies,
+no retraction of emitted tokens, and preemption's recompute path is
+untouched.  Emitted tokens are distributed exactly as the verifier's
+policy, so per-token ``log_beta``/``version`` provenance — and
+everything downstream that consumes it (TV-gate admission) — is
+identical to non-speculative serving; speculative greedy decode is
+token-exact with non-speculative greedy decode at any acceptance rate.
+
+**Batched prefill** (``batch_prefill=True``, default): admissions of
+the same padded prompt length are stacked into one prefill dispatch
+instead of paying one dispatch per request, cutting admission latency
+under bursty load (``benchmarks.bench_serve --burst`` measures it).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import EOS, PAD
+from repro.metrics.runtime_metrics import LagHistogram
 from repro.models.registry import ModelBundle
 from repro.models.transformer import write_prefill_to_pages
-from repro.rollout.sampler import _top_p_filter
+from repro.rollout.sampler import _top_p_filter, speculative_accept
 from repro.serve.paged_cache import BlockAllocator
-from repro.serve.scheduler import ContinuousBatchingScheduler, Request
+from repro.serve.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    RequestState,
+)
 
 
 @dataclass(frozen=True)
@@ -77,13 +107,20 @@ class ServedTrajectory:
 @dataclass
 class ServeStats:
     steps: int = 0               # scheduling rounds (one chunk each)
-    decode_steps: int = 0        # individual decode iterations
-    prefills: int = 0
+    decode_steps: int = 0        # decode iterations (1 per spec round)
+    prefills: int = 0            # requests prefilled
+    prefill_dispatches: int = 0  # prefill launches (< prefills when batched)
     finished: int = 0
     tokens_out: int = 0
     preemptions: int = 0
     swaps: int = 0
     occupancy_sum: float = 0.0   # emitting slots summed over decode steps
+    # Speculative decode: drafted = k per active slot per round;
+    # accepted counts draft tokens that survived verification
+    # (corrections are emitted but not "accepted").
+    spec_rounds: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
     def as_dict(self) -> Dict[str, Any]:
         d = dict(self.__dict__)
@@ -91,7 +128,51 @@ class ServeStats:
             self.occupancy_sum / self.decode_steps
             if self.decode_steps else 0.0
         )
+        d["acceptance_rate"] = (
+            self.accepted_tokens / self.drafted_tokens
+            if self.drafted_tokens else 0.0
+        )
         return d
+
+
+class ModelDraft:
+    """Draft policy with its own paged pool (self-spec or a small model).
+
+    ``version`` is the PolicyStore version the params were pinned from
+    (None for fixed-params drafts); ``version_offset`` non-None marks a
+    *self-speculation* draft that re-resolves ``latest + offset`` after
+    every verifier weight swap.  The pool shares the verifier's page
+    ids/tables but holds this draft's own K/V (different weights write
+    different rows), so scheduler allocation covers both pools at once.
+    """
+
+    def __init__(self, bundle: ModelBundle, params: Any,
+                 version: Optional[int], version_offset: Optional[int],
+                 num_blocks: int, block_size: int) -> None:
+        if bundle.decode_step_paged is None or bundle.init_paged_cache is None:
+            raise ValueError(
+                f"draft arch {bundle.cfg.name} cannot run the paged path")
+        self.bundle = bundle
+        self.params = params
+        self.version = version
+        self.version_offset = version_offset
+        self.pages = bundle.init_paged_cache(num_blocks, block_size)
+
+
+class CallableDraft:
+    """Host-side draft: ``fn(request, k) -> up-to-k int32 token ids``.
+
+    Zero-cost proposals (n-gram lookups, the benchmark's replay oracle).
+    The proposal is treated as a deterministic one-hot draft
+    distribution, which keeps the accept rule exactly
+    verifier-distribution-preserving.
+    """
+
+    version: Optional[int] = None
+    version_offset = None
+
+    def __init__(self, fn: Callable[[Request, int], Any]) -> None:
+        self.fn = fn
 
 
 class ServeEngine:
@@ -113,7 +194,17 @@ class ServeEngine:
         top_p: float = 1.0,
         seed: int = 0,
         kernel_mode: Optional[str] = None,
+        speculate_k: int = 0,
+        draft: Any = None,
+        batch_prefill: bool = True,
     ) -> None:
+        """``speculate_k > 0`` turns on speculative decode; ``draft`` is
+        one of ``("version", -n)`` (self-speculation from the store's
+        ring, pinned), ``("params", p)`` (same arch, fixed params),
+        ``("model", bundle, params)`` (separate draft model), a callable
+        ``fn(request, k) -> token ids``, or None (defaults to
+        ``("version", -1)`` with a store, else the verifier's own params).
+        """
         if bundle.decode_step_paged is None:
             from repro.models.transformer import paged_arch_unsupported
 
@@ -145,6 +236,8 @@ class ServeEngine:
         self.stats = ServeStats()
         self._kernel_mode = kernel_mode
         temp = max(float(temperature), 1e-6)
+        self._temperature = temp
+        self._top_p = float(top_p)
 
         def _sample(logits, key):
             logits = logits.astype(jnp.float32) / temp
@@ -154,6 +247,7 @@ class ServeEngine:
             lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
             return tok.astype(jnp.int32), lp
 
+        self._sample = _sample
         chunk = max(int(decode_chunk), 1)
         self.decode_chunk = chunk
 
@@ -196,25 +290,26 @@ class ServeEngine:
         # in place end to end: per-chunk cost is O(rows written), flat
         # in num_blocks (bench_serve --sweep-blocks measures it).
         self._decode = jax.jit(_decode, donate_argnums=(2,))
-        self._prefill_fns: Dict[int, Any] = {}   # keyed by padded length
+        # Prefill dispatches are keyed by (padded length, group size):
+        # batched prefill stacks same-padded-length admissions into one
+        # forward, so bursty admissions stop paying a dispatch each.
+        self.batch_prefill = bool(batch_prefill)
+        self._prefill_fns: Dict[Tuple[int, int], Any] = {}
+        self._draft_prefill_fns: Dict[Tuple[int, int], Any] = {}
 
-        def _make_prefill(padded_len: int):
-            def _prefill(params, prompt, kv_valid, blocks, plen, pages,
-                         key):
-                out = bundle.forward(
-                    params, prompt, return_cache=True,
-                    cache_len=padded_len, kv_valid=kv_valid)
-                # Donated pages + per-tile dynamic_update_slice writes:
-                # the prefill lands in the pool without copying it.
-                pages = write_prefill_to_pages(
-                    out.cache["k"], out.cache["v"], pages, blocks, plen)
-                last = jnp.take(out.logits[0], plen - 1, axis=0)
-                tok, lp = _sample(last[None], key)
-                return tok[0], lp[0], pages
-
-            return jax.jit(_prefill, donate_argnums=(5,))
-
-        self._make_prefill = _make_prefill
+        # -- speculative decode ---------------------------------------------
+        self.speculate_k = max(int(speculate_k), 0)
+        self.draft: Any = None
+        self._draft_lag_hist = LagHistogram()
+        if self.speculate_k:
+            if bundle.decode_step_paged_multi is None:
+                raise ValueError(
+                    f"{bundle.cfg.name}: multi-token verify unavailable "
+                    "(paged path unsupported)")
+            self.draft = self._build_draft(draft, num_blocks, block_size)
+            if isinstance(self.draft, ModelDraft):
+                self._draft_step = self._make_draft_fn()
+            self._verify = self._make_verify_fn()
 
     # -- request intake ------------------------------------------------------
 
@@ -251,41 +346,215 @@ class ServeEngine:
         if version != self.version:
             self.params, self.version = params, version
             self.stats.swaps += 1
+            self._refresh_draft()
 
-    def _prefill(self, req: Request, finished: List[ServedTrajectory]
-                 ) -> None:
-        """(Re)compute KV rows for prompt + emitted tokens; fresh
-        requests also sample their first token from the prefill logits."""
-        slot = req.slot
-        resume = bool(req.tokens)
-        ids = req.prompt if not resume else np.concatenate(
-            [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
-        plen = int(ids.shape[0])
-        padded = -(-plen // self.block_size) * self.block_size
-        fn = self._prefill_fns.get(padded)
+    # -- speculative draft slot ----------------------------------------------
+
+    def _build_draft(self, spec: Any, num_blocks: int,
+                     block_size: int) -> Any:
+        if callable(spec):
+            return CallableDraft(spec)
+        if spec is None:
+            spec = (("version", -1) if self.store is not None
+                    else ("params", self.params))
+        kind = spec[0]
+        if kind == "version":
+            if self.store is None:
+                raise ValueError("draft=('version', n) needs a PolicyStore")
+            offset = int(spec[1])
+            if offset > 0:
+                raise ValueError(f"draft version offset must be <= 0, "
+                                 f"got {offset}")
+            params, version = self.store.pin_lagged(offset)
+            return ModelDraft(self.bundle, params, version, offset,
+                              num_blocks, block_size)
+        if kind == "params":
+            return ModelDraft(self.bundle, spec[1], None, None,
+                              num_blocks, block_size)
+        if kind == "model":
+            return ModelDraft(spec[1], spec[2], None, None,
+                              num_blocks, block_size)
+        raise ValueError(f"unknown draft spec {spec!r}")
+
+    def _refresh_draft(self) -> None:
+        """Re-pin the self-speculation draft at latest+offset after a
+        verifier swap.  Draft pool rows written under the old draft
+        weights stay (they only shape *proposals*; correctness rides on
+        the verifier) and age out as decode overwrites them."""
+        d = self.draft
+        if not isinstance(d, ModelDraft) or d.version_offset is None:
+            return
+        # Atomic resolve+pin: a learner publish between a resolve and a
+        # separate pin could evict the resolved version mid-handoff.
+        params, target = self.store.pin_lagged(d.version_offset)
+        if target == d.version:
+            self.store.release(target)   # unchanged; drop the extra pin
+            return
+        self.store.release(d.version)
+        d.params, d.version = params, target
+
+    def _make_draft_fn(self):
+        """k draft decode steps in one dispatch over the draft pool."""
+        bundle_d = self.draft.bundle
+        sample = self._sample
+        kernel_mode = self._kernel_mode
+        k = self.speculate_k
+
+        def _draft(params, token, pages, tables, pos, active, cap, key):
+            def body(carry, k_t):
+                token, pos, pages = carry
+                # Past-allocation steps go inactive: their write would
+                # land in the table's pad pages (owned by someone else),
+                # and their proposals can never be recorded anyway.
+                step_active = jnp.logical_and(active, pos < cap)
+                out, pages = bundle_d.decode_step_paged(
+                    params, token, pages, tables, pos, step_active,
+                    kernel_mode=kernel_mode)
+                tok, _ = sample(out.logits, k_t)
+                tok = jnp.where(step_active, tok, jnp.int32(PAD))
+                return (tok, pos + 1, pages), (tok, out.logits)
+
+            keys = jax.random.split(key, k)
+            (_, _, pages), (toks, logits) = jax.lax.scan(
+                body, (token, pos, pages), keys)
+            return toks.T, logits.transpose(1, 0, 2), pages
+
+        return jax.jit(_draft, donate_argnums=(2,))
+
+    def _make_verify_fn(self):
+        """Single-dispatch multi-token verify + accept + pos arithmetic."""
+        bundle = self.bundle
+        kernel_mode = self._kernel_mode
+        temp, top_p = self._temperature, self._top_p
+
+        def _verify(params, first_tok, draft_toks, draft_logits, pages,
+                    tables, pos, active, cap, key):
+            # Queries = [t0, d1..d_{k-1}]: logits after query i score
+            # draft token d_{i+1}.  All k rows are written; a rejection
+            # just rewinds pos and the next chunk overwrites them.
+            queries = jnp.concatenate(
+                [first_tok[:, None], draft_toks[:, :-1]], axis=1)
+            out, pages = bundle.decode_step_paged_multi(
+                params, queries, pages, tables, pos, active, cap,
+                kernel_mode=kernel_mode)
+            toks, lps, n_acc, n_emit = speculative_accept(
+                out.logits, draft_toks, draft_logits, key,
+                temperature=temp, top_p=top_p)
+            toks = jnp.where(active[:, None], toks, jnp.int32(PAD))
+            lps = jnp.where(active[:, None], lps, 0.0)
+            n_acc = jnp.where(active, n_acc, 0)
+            n_emit = jnp.where(active, n_emit, 0)
+            return toks, lps, n_acc, n_emit, pages
+
+        return jax.jit(_verify, donate_argnums=(4,))
+
+    # -- prefill (batched admissions) ----------------------------------------
+
+    def _prefill_admitted(self, admitted: List[Request],
+                          finished: List[ServedTrajectory]) -> None:
+        """(Re)compute KV rows for every admitted request; same-padded-
+        length admissions share one prefill dispatch (batch_prefill)."""
+        if not admitted:
+            return
+        groups: Dict[int, List] = {}
+        for req in admitted:
+            ids = req.prompt if not req.tokens else np.concatenate(
+                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+            plen = int(ids.shape[0])
+            padded = -(-plen // self.block_size) * self.block_size
+            groups.setdefault(padded, []).append((req, ids, plen))
+        for padded in sorted(groups):
+            items = groups[padded]
+            size = len(items) if self.batch_prefill else 1
+            for lo in range(0, len(items), size):
+                self._prefill_group(padded, items[lo:lo + size], finished)
+
+    def _prefill_group(self, padded: int, items: List,
+                       finished: List[ServedTrajectory]) -> None:
+        n = len(items)
+        rows = np.zeros((n, padded), np.int32)
+        kv_valid = np.zeros((n, padded), bool)
+        plens = np.zeros((n,), np.int32)
+        tables = np.zeros((n, self._tables.shape[1]), np.int32)
+        for i, (req, ids, plen) in enumerate(items):
+            rows[i, :plen] = ids
+            kv_valid[i, :plen] = True
+            plens[i] = plen
+            tables[i] = self.allocator.padded_table(
+                req.blocks, self._tables.shape[1])
+        key = (padded, n)
+        fn = self._prefill_fns.get(key)
         if fn is None:
-            fn = self._prefill_fns[padded] = self._make_prefill(padded)
-        row = np.zeros((1, padded), np.int32)
-        row[0, :plen] = ids
-        kv_valid = np.zeros((1, padded), bool)
-        kv_valid[0, :plen] = True
-        table = self.allocator.padded_table(
-            req.blocks, self._tables.shape[1])
-        tok, lp, self.pages = fn(
-            self.params, jnp.asarray(row), jnp.asarray(kv_valid),
-            jnp.asarray(table), jnp.int32(plen), self.pages,
+            fn = self._prefill_fns[key] = self._make_prefill(padded, n)
+        toks, lps, self.pages = fn(
+            self.params, jnp.asarray(rows), jnp.asarray(kv_valid),
+            jnp.asarray(tables), jnp.asarray(plens), self.pages,
             self._next_key())
-        self.stats.prefills += 1
-        self._tables[slot] = table
-        self._pos[slot] = plen
-        if resume:
-            self._last_tok[slot] = req.tokens[-1]
-        else:
-            self._record(req, int(tok), float(lp), finished)
+        self.stats.prefills += n
+        self.stats.prefill_dispatches += 1
+        if isinstance(self.draft, ModelDraft):
+            dfn = self._draft_prefill_fns.get(key)
+            if dfn is None:
+                dfn = self._draft_prefill_fns[key] = \
+                    self._make_draft_prefill(padded, n)
+            self.draft.pages = dfn(
+                self.draft.params, jnp.asarray(rows), jnp.asarray(kv_valid),
+                jnp.asarray(tables), jnp.asarray(plens), self.draft.pages)
+        toks_np, lps_np = np.asarray(toks), np.asarray(lps)
+        for i, (req, ids, plen) in enumerate(items):
+            slot = req.slot
+            self._tables[slot] = tables[i]
+            self._pos[slot] = plen
+            if req.tokens:                     # resume after preemption
+                self._last_tok[slot] = req.tokens[-1]
+            else:
+                self._record(req, int(toks_np[i]), float(lps_np[i]),
+                             finished)
+
+    def _make_prefill(self, padded_len: int, n: int):
+        bundle = self.bundle
+        sample = self._sample
+
+        def _prefill(params, prompts, kv_valid, blocks, plens, pages,
+                     key):
+            out = bundle.forward(
+                params, prompts, return_cache=True,
+                cache_len=padded_len, kv_valid=kv_valid)
+            # Donated pages + per-tile dynamic_update_slice writes: each
+            # request's prefill lands in the pool without copying it.
+            for i in range(n):
+                pages = write_prefill_to_pages(
+                    jax.lax.slice_in_dim(out.cache["k"], i, i + 1, axis=1),
+                    jax.lax.slice_in_dim(out.cache["v"], i, i + 1, axis=1),
+                    pages, blocks[i], plens[i])
+            last = jnp.take_along_axis(
+                out.logits, (plens - 1)[:, None, None], axis=1)[:, 0]
+            tok, lp = sample(last, key)
+            return tok, lp, pages
+
+        return jax.jit(_prefill, donate_argnums=(5,))
+
+    def _make_draft_prefill(self, padded_len: int, n: int):
+        bundle_d = self.draft.bundle
+
+        def _prefill(params, prompts, kv_valid, blocks, plens, pages):
+            out = bundle_d.forward(
+                params, prompts, return_cache=True,
+                cache_len=padded_len, kv_valid=kv_valid)
+            for i in range(n):
+                pages = write_prefill_to_pages(
+                    jax.lax.slice_in_dim(out.cache["k"], i, i + 1, axis=1),
+                    jax.lax.slice_in_dim(out.cache["v"], i, i + 1, axis=1),
+                    pages, blocks[i], plens[i])
+            return pages
+
+        return jax.jit(_prefill, donate_argnums=(5,))
 
     def _record(self, req: Request, tok: int, lp: float,
                 finished: List[ServedTrajectory]) -> None:
         """Book one emitted token; retire the request when done."""
+        if req.first_token_time is None:
+            req.first_token_time = time.monotonic()
         req.tokens.append(tok)
         req.log_beta.append(lp)
         req.versions.append(self.version)
@@ -327,15 +596,15 @@ class ServeEngine:
     # -- the decode loop -----------------------------------------------------
 
     def step(self) -> List[ServedTrajectory]:
-        """One scheduling round + decode chunk; returns newly finished
-        trajectories."""
+        """One scheduling round + decode chunk (or speculative round);
+        returns newly finished trajectories."""
         finished: List[ServedTrajectory] = []
         self._maybe_swap()
         self.stats.steps += 1
-        admitted, _ = self.scheduler.schedule(lookahead=self.decode_chunk)
+        lookahead = self.speculate_k or self.decode_chunk
+        admitted, _ = self.scheduler.schedule(lookahead=lookahead)
         self.stats.preemptions = self.scheduler.preemptions
-        for req in admitted:
-            self._prefill(req, finished)
+        self._prefill_admitted(admitted, finished)
         # Rebuild slot state from the scheduler: preempted/retired slots
         # (their Request no longer knows its old index) go quiet, and
         # running rows pick up pages the extension pass just granted.
@@ -351,6 +620,9 @@ class ServeEngine:
                     req.blocks, self._tables.shape[1])
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
         if not self._active.any():
+            return finished
+        if self.speculate_k:
+            self._spec_round(finished)
             return finished
         toks, lps, masks, self.pages = self._decode(
             self.params, jnp.asarray(self._last_tok), self.pages,
@@ -371,6 +643,61 @@ class ServeEngine:
                 self._record(req, int(toks_np[t, slot]),
                              float(lps_np[t, slot]), finished)
         return finished
+
+    def _spec_round(self, finished: List[ServedTrajectory]) -> None:
+        """One draft-then-verify round: k cheap draft steps, one
+        multi-token verifier dispatch, accept/rollback by pos rewind."""
+        k = self.speculate_k
+        cap = np.zeros((self.max_batch,), np.int32)
+        for req in self.scheduler.running:
+            cap[req.slot] = len(req.blocks) * self.block_size
+        if isinstance(self.draft, ModelDraft):
+            draft_toks, draft_logits, self.draft.pages = self._draft_step(
+                self.draft.params, jnp.asarray(self._last_tok),
+                self.draft.pages, jnp.asarray(self._tables),
+                jnp.asarray(self._pos), jnp.asarray(self._active),
+                jnp.asarray(cap), self._next_key())
+        else:
+            prop_np = np.zeros((self.max_batch, k), np.int32)
+            for req in self.scheduler.running:
+                prop = np.asarray(
+                    self.draft.fn(req, k), np.int32).reshape(-1)[:k]
+                prop_np[req.slot, :prop.shape[0]] = prop
+            draft_toks = jnp.asarray(prop_np)
+            # One-hot proposal logits, built host-side (one transfer
+            # instead of per-round device compare/where dispatches).
+            vocab = self.bundle.cfg.vocab_size
+            oh = np.full((self.max_batch, k, vocab), -1e9, np.float32)
+            np.put_along_axis(oh, prop_np[..., None], 0.0, axis=-1)
+            draft_logits = jnp.asarray(oh)
+        toks, lps, n_acc, n_emit, self.pages = self._verify(
+            self.params, jnp.asarray(self._last_tok), draft_toks,
+            draft_logits, self.pages, jnp.asarray(self._tables),
+            jnp.asarray(self._pos), jnp.asarray(self._active),
+            jnp.asarray(cap), self._next_key())
+        toks_np, lps_np, n_acc_np, n_emit_np = jax.device_get(
+            (toks, lps, n_acc, n_emit))
+        n_active = int(self._active.sum())
+        self.stats.decode_steps += 1
+        self.stats.occupancy_sum += float(n_active)
+        self.stats.spec_rounds += 1
+        self.stats.drafted_tokens += k * n_active
+        self.stats.accepted_tokens += int(n_acc_np[self._active].sum())
+        lag = (None if self.draft.version is None
+               else self.version - self.draft.version)
+        for req in list(self.scheduler.running):
+            slot = req.slot
+            n_e = int(n_emit_np[slot])
+            # Rollback = rewind: pos covers only the accepted prefix;
+            # rejected rows are overwritten by the next round's writes.
+            self._pos[slot] += n_e
+            if lag is not None and n_e:
+                self._draft_lag_hist.record(lag, n_e)
+            for t in range(n_e):
+                self._record(req, int(toks_np[slot, t]),
+                             float(lps_np[slot, t]), finished)
+                if req.state is not RequestState.RUNNING:
+                    break    # EOS/budget retired it; drop the tail
 
     def run(self, max_steps: Optional[int] = None
             ) -> List[ServedTrajectory]:

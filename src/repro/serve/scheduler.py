@@ -60,6 +60,7 @@ class Request:
     log_beta: List[float] = field(default_factory=list)
     versions: List[int] = field(default_factory=list)
     submit_time: float = field(default_factory=time.monotonic)
+    first_token_time: Optional[float] = None   # admission latency probe
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
     num_preemptions: int = 0
