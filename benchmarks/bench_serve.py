@@ -238,16 +238,18 @@ def run_pool_sweep(
                 jnp.asarray(e._last_tok), jnp.asarray(e._tables),
                 jnp.asarray(e._pos), jnp.asarray(e._active),
                 jnp.full((max_batch,), budget, jnp.int32),
+                jnp.asarray(e._slot_shard),
                 jax.random.PRNGKey(seed + 3))
             self.pages = e.pages
 
         def time_once(self) -> float:
-            token, tables, pos, active, remaining, key = self.args
+            (token, tables, pos, active, remaining, slot_shard,
+             key) = self.args
             t0 = time.perf_counter()
             for _ in range(dispatches):
                 _, _, _, self.pages = self.engine._decode(
                     self.engine.params, token, self.pages, tables, pos,
-                    active, remaining, key)
+                    active, remaining, slot_shard, key)
             jax.tree.map(np.asarray, self.pages)   # block until ready
             return (time.perf_counter() - t0) / dispatches
 
@@ -502,6 +504,105 @@ def run_burst(
     return out
 
 
+def run_sharded(
+    *,
+    data: int = 2,
+    n_requests: int = 12,
+    max_batch: int = 4,
+    lengths: tuple = (2, 4, 8, 48),
+    block_size: int = 8,
+    num_blocks: int = 64,
+    prompt_len: int = 32,
+    decode_chunk: int = 8,
+    arch: str = "qwen2.5-0.5b",
+    seed: int = 0,
+    repeats: int = 3,
+) -> Dict:
+    """Mesh-sharded vs single-device continuous serve, same stream.
+
+    Correctness instrument first, throughput second: on forced
+    multi-device CPU the shards are fake (one physical core pool runs
+    all of them plus the psum recombines), so ``speedup_vs_single`` is
+    NOT expected to exceed 1 — the gate only keeps it from collapsing,
+    while ``token_exact`` (greedy sharded output == single-device
+    output, every request) is the hard acceptance bar.  On real
+    accelerators the same path turns the NB-sharded pool into
+    multi-device decode capacity.
+    """
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+    from repro.launch.mesh import make_debug_mesh
+    from repro.serve import ServeEngine
+    from repro.models.registry import build
+
+    n_dev = len(jax.devices())
+    if n_dev < data:
+        return {"skipped": f"host has {n_dev} devices, wants {data} "
+                           "(set XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=N)"}
+    mesh = make_debug_mesh(data=data)
+    tok = get_tokenizer()
+    cfg = reduced_config(arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(seed))
+    ds = MathTaskDataset(prompt_len=prompt_len, level=0, seed=seed + 1)
+    toks_np, _, _ = ds.sample_batch(n_requests)
+    prompts = [row[row != tok.pad_id] for row in toks_np]
+    budgets = [lengths[i % len(lengths)] for i in range(n_requests)]
+    max_seq_len = prompt_len + max(lengths) + block_size
+
+    def _mk(m):
+        return ServeEngine(
+            bundle, params, num_blocks=num_blocks, block_size=block_size,
+            max_batch=max_batch, max_seq_len=max_seq_len,
+            decode_chunk=decode_chunk, temperature=1e-4, seed=seed + 2,
+            mesh=m)
+
+    def _run(engine) -> Dict:
+        before = dict(engine.stats.__dict__)
+        t0 = time.perf_counter()
+        for p, b in zip(prompts, budgets):
+            engine.submit(p, b)
+        trajs = engine.run()
+        wall = time.perf_counter() - t0
+        d = {k: engine.stats.__dict__[k] - v for k, v in before.items()}
+        toks = [t.tokens for t in sorted(trajs,
+                                         key=lambda t: t.request_id)]
+        return {"wall_s": wall, "tokens": d["tokens_out"], "out": toks}
+
+    single, sharded = _mk(None), _mk(mesh)
+    warm_single, warm_sharded = _run(single), _run(sharded)
+    exact = len(warm_single["out"]) == len(warm_sharded["out"]) and all(
+        np.array_equal(a, b)
+        for a, b in zip(warm_single["out"], warm_sharded["out"]))
+    # Paired per-repeat ratios (median): host drift hits both arms.
+    pairs = [(_run(single), _run(sharded))
+             for _ in range(max(repeats, 1))]
+    ratios = [
+        (h["tokens"] / h["wall_s"]) / (s["tokens"] / s["wall_s"])
+        for s, h in pairs
+    ]
+    s_best = min((s for s, _ in pairs), key=lambda r: r["wall_s"])
+    h_best = min((h for _, h in pairs), key=lambda r: r["wall_s"])
+    return {
+        "config": {
+            "arch": arch, "data": data, "n_requests": n_requests,
+            "max_batch": max_batch, "lengths": list(lengths),
+            "block_size": block_size, "num_blocks": num_blocks,
+            "prompt_len": prompt_len, "decode_chunk": decode_chunk,
+            "seed": seed,
+        },
+        "num_shards": data,
+        "token_exact": 1.0 if exact else 0.0,
+        "single_tokens_per_s": s_best["tokens"] / s_best["wall_s"],
+        "tokens_per_s": h_best["tokens"] / h_best["wall_s"],
+        "speedup_vs_single": float(np.median(ratios)),
+    }
+
+
 def write_json(res: Dict, path: str) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
@@ -532,6 +633,12 @@ def main() -> None:
     ap.add_argument("--burst", type=int, default=8,
                     help="batched-prefill bench: same-length requests "
                          "submitted at once (0 disables)")
+    ap.add_argument("--sharded", type=int, default=0,
+                    help="mesh-sharded serve bench over N data shards "
+                         "(0 disables; needs N devices — on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N): records sharded-vs-single tokens/s "
+                         "and greedy token-exactness")
     ap.add_argument("--out", default="results/bench/BENCH_serve.json")
     args = ap.parse_args()
     res = run(
@@ -573,6 +680,18 @@ def main() -> None:
               f"vs plain {spec['plain_tokens_per_s']:8.1f} "
               f"({spec['speedup_vs_plain']:.2f}x at k={args.speculate}, "
               f"acceptance {spec['acceptance_rate']:.2f}, oracle draft)")
+    if args.sharded:
+        sh = run_sharded(data=args.sharded, arch=args.arch,
+                         seed=args.seed)
+        res["sharded"] = sh
+        if "skipped" in sh:
+            print(f"{'sharded':13s} skipped: {sh['skipped']}")
+        else:
+            print(f"{'sharded':13s} {sh['tokens_per_s']:8.1f} tok/s over "
+                  f"{sh['num_shards']} shards vs "
+                  f"{sh['single_tokens_per_s']:8.1f} single "
+                  f"({sh['speedup_vs_single']:.2f}x, token_exact="
+                  f"{int(sh['token_exact'])})")
     if args.burst:
         burst = run_burst(burst=args.burst, arch=args.arch,
                           seed=args.seed)

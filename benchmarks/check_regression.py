@@ -87,6 +87,20 @@ RUNTIME_METRICS = (
     Metric("env_steps_per_s.threaded_speedup", True, True),
 )
 
+# Sharded-serve job (forced multi-device CPU).  CPU sharding is a
+# correctness instrument, not a speedup: token_exact is the hard bar
+# (greedy sharded output == single-device output — 1.0 or the gate
+# fails, no baseline needed), while the sharded-vs-single throughput
+# ratio only gets the (wide, CI-set) relative band so a collapse —
+# e.g. an accidental full-pool re-materialization per shard step —
+# still trips.
+SHARDED_METRICS = (
+    Metric("sharded.token_exact", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("sharded.speedup_vs_single", True, True),
+    Metric("sharded.tokens_per_s", True, False),
+)
+
 
 def _lookup(doc: Dict, path: str) -> Optional[float]:
     node = doc
@@ -181,6 +195,8 @@ def main(argv=None) -> int:
     ap.add_argument("--serve-fresh", default=None)
     ap.add_argument("--runtime-baseline", default=None)
     ap.add_argument("--runtime-fresh", default=None)
+    ap.add_argument("--sharded-baseline", default=None)
+    ap.add_argument("--sharded-fresh", default=None)
     ap.add_argument("--tol", type=float, default=0.15,
                     help="tolerance for machine-normalized (relative) "
                          "metrics; >15%% drop fails")
@@ -201,9 +217,12 @@ def main(argv=None) -> int:
     if args.runtime_fresh:
         pairs.append(("runtime", args.runtime_baseline, args.runtime_fresh,
                       RUNTIME_METRICS))
+    if args.sharded_fresh:
+        pairs.append(("sharded", args.sharded_baseline, args.sharded_fresh,
+                      SHARDED_METRICS))
     if not pairs:
-        ap.error("nothing to check: pass --serve-fresh and/or "
-                 "--runtime-fresh")
+        ap.error("nothing to check: pass --serve-fresh, --runtime-fresh "
+                 "and/or --sharded-fresh")
 
     failures: List[str] = []
     for name, base_path, fresh_path, metrics in pairs:

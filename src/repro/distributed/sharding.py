@@ -197,3 +197,25 @@ def cache_shardings(
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# -- serve-path (paged pool) shardings ---------------------------------------
+
+
+def paged_pool_sharding(mesh: Mesh, axis_name: str = "data"
+                        ) -> NamedSharding:
+    """Placement of the ``[L, KV, NB, BS, Dh]`` paged KV pool: the NB
+    (page) axis shards over the mesh's data axis — the layout PR 2
+    chose precisely so this split is clean.  Each device holds
+    ``NB / data`` whole pages; block tables stay host-side and carry
+    shard-local ids (see ``repro.serve.paged_cache``)."""
+    return NamedSharding(mesh, P(None, None, axis_name, None, None))
+
+
+def shard_paged_pool(pages: Any, mesh: Optional[Mesh],
+                     axis_name: str = "data") -> Any:
+    """Place a paged pool pytree onto the mesh (identity when mesh is
+    None — the single-device path is the unsharded special case)."""
+    if mesh is None:
+        return pages
+    return jax.device_put(pages, paged_pool_sharding(mesh, axis_name))

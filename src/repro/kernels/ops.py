@@ -10,6 +10,28 @@ Selection policy (``KernelMode``):
 Default comes from ``REPRO_KERNEL_MODE`` (falls back to ``reference`` on
 CPU hosts).  The wrappers keep one signature regardless of backend so the
 models/trainers never branch.
+
+**Mesh-sharded serve** (``mesh=`` on the paged ops): the paged KV pool
+shards its ``NB`` (page) axis over the mesh's ``data`` axis, and every
+request's pages live on exactly ONE shard (placement is host-side, in
+``repro.serve``).  The sharded dispatchers wrap the same kernel bodies
+in ``shard_map``:
+
+* ``paged_attention`` / ``paged_attention_multi`` — block tables carry
+  *shard-local* page ids; each device runs the kernel over its local
+  pool with non-local slots masked to ``context_len 0`` (both the
+  Pallas kernel and the oracle produce exact zeros there), then a
+  ``psum`` over the data axis recombines the batch.  Since every slot
+  is non-zero on exactly one shard, the sum is exact — the sharded path
+  is bit-identical to the single-device one.
+* ``paged_kv_write`` — each device applies the row scatter with the
+  active mask restricted to its own slots; out_specs keep the pool
+  sharded, and the in-place aliasing (Pallas ``input_output_aliases``
+  / XLA DUS-on-dead-operand) survives because each shard updates only
+  its local buffer.
+
+``mesh=None`` (or a data axis of size 1) is the single-device special
+case of the same code path, not a sibling implementation.
 """
 from __future__ import annotations
 
@@ -18,6 +40,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels import ref as ref_mod
 from repro.kernels.flash_attention_pallas import flash_attention
@@ -49,6 +73,17 @@ def _pallas_kwargs(mode: Optional[str]) -> Optional[dict]:
     return {"interpret": mode == "pallas_interpret"}
 
 
+def mesh_data_size(mesh, axis_name: str = "data") -> int:
+    """Size of the mesh's serve-sharding axis (1 = unsharded/no mesh)."""
+    if mesh is None or axis_name not in mesh.shape:
+        return 1
+    return int(mesh.shape[axis_name])
+
+
+def _sharded(mesh, axis_name: str) -> bool:
+    return mesh_data_size(mesh, axis_name) > 1
+
+
 def vtrace(
     log_ratios, values, bootstrap_value, rewards, discounts,
     *, rho_bar: float = 1.0, c_bar: float = 1.0, lam: float = 1.0,
@@ -74,11 +109,9 @@ def attention(
     return flash_attention(q, k, v, window=window, **kw)
 
 
-def paged_attention(
-    q, k_pages, v_pages, block_tables, context_lens,
-    *, window: Optional[int] = None, mode: Optional[str] = None,
+def _paged_attention_local(
+    q, k_pages, v_pages, block_tables, context_lens, *, window, mode,
 ):
-    """Decode attention over a block-table paged KV pool ([B, H, D])."""
     kw = _pallas_kwargs(mode)
     if kw is None:
         return ref_mod.ref_paged_attention(
@@ -88,13 +121,43 @@ def paged_attention(
         window=window, **kw)
 
 
-def paged_attention_multi(
+def paged_attention(
     q, k_pages, v_pages, block_tables, context_lens,
     *, window: Optional[int] = None, mode: Optional[str] = None,
+    mesh=None, slot_shard=None, axis_name: str = "data",
 ):
-    """Multi-token verify attention over the paged pool ([B, T, H, D]):
-    query ``t`` sits at absolute position ``context_lens - T + t`` and
-    attends causally — T drafted tokens scored in one dispatch."""
+    """Decode attention over a block-table paged KV pool ([B, H, D]).
+
+    With a ``mesh``, ``k_pages``/``v_pages`` are NB-sharded over
+    ``axis_name``, ``block_tables`` hold shard-local page ids, and
+    ``slot_shard[b]`` names the shard owning slot ``b``'s pages: each
+    device attends over its local pool with foreign slots masked to
+    context 0 (exact zero output) and a ``psum`` recombines the batch.
+    """
+    if not _sharded(mesh, axis_name):
+        return _paged_attention_local(
+            q, k_pages, v_pages, block_tables, context_lens,
+            window=window, mode=mode)
+
+    def body(q, kp, vp, tbl, lens, ss):
+        idx = jax.lax.axis_index(axis_name)
+        local_lens = jnp.where(ss == idx, lens, 0).astype(jnp.int32)
+        out = _paged_attention_local(
+            q, kp, vp, tbl, local_lens, window=window, mode=mode)
+        return jax.lax.psum(out, axis_name)
+
+    pool = P(None, axis_name, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), pool, pool, P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    )(q, k_pages, v_pages, block_tables, context_lens,
+      slot_shard.astype(jnp.int32))
+
+
+def _paged_attention_multi_local(
+    q, k_pages, v_pages, block_tables, context_lens, *, window, mode,
+):
     kw = _pallas_kwargs(mode)
     if kw is None:
         return ref_mod.ref_paged_attention_multi(
@@ -104,18 +167,40 @@ def paged_attention_multi(
         window=window, **kw)
 
 
-def paged_kv_write(
-    k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
-    *, layer: int, mode: Optional[str] = None,
-) -> Tuple[jax.Array, jax.Array]:
-    """In-place scatter of one decode step's K/V rows into the pool.
+def paged_attention_multi(
+    q, k_pages, v_pages, block_tables, context_lens,
+    *, window: Optional[int] = None, mode: Optional[str] = None,
+    mesh=None, slot_shard=None, axis_name: str = "data",
+):
+    """Multi-token verify attention over the paged pool ([B, T, H, D]):
+    query ``t`` sits at absolute position ``context_lens - T + t`` and
+    attends causally — T drafted tokens scored in one dispatch.  Mesh
+    semantics match :func:`paged_attention` (local tables + psum)."""
+    if not _sharded(mesh, axis_name):
+        return _paged_attention_multi_local(
+            q, k_pages, v_pages, block_tables, context_lens,
+            window=window, mode=mode)
 
-    Returns the updated ``(k_pages, v_pages)``; both paths update the
-    buffer in place when the caller's pools are donated/dead (the Pallas
-    route via ``input_output_aliases``, the reference route via XLA's
-    in-place dynamic_update_slice), so per-step cost is O(rows), not
-    O(pool).
-    """
+    def body(q, kp, vp, tbl, lens, ss):
+        idx = jax.lax.axis_index(axis_name)
+        local_lens = jnp.where(ss == idx, lens, 0).astype(jnp.int32)
+        out = _paged_attention_multi_local(
+            q, kp, vp, tbl, local_lens, window=window, mode=mode)
+        return jax.lax.psum(out, axis_name)
+
+    pool = P(None, axis_name, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), pool, pool, P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    )(q, k_pages, v_pages, block_tables, context_lens,
+      slot_shard.astype(jnp.int32))
+
+
+def _paged_kv_write_local(
+    k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+    *, layer, mode,
+):
     kw = _pallas_kwargs(mode)
     if kw is None:
         return ref_mod.ref_paged_kv_write(
@@ -124,6 +209,45 @@ def paged_kv_write(
     return paged_kv_write_pallas(
         k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
         layer=layer, **kw)
+
+
+def paged_kv_write(
+    k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+    *, layer: int, mode: Optional[str] = None,
+    mesh=None, slot_shard=None, axis_name: str = "data",
+) -> Tuple[jax.Array, jax.Array]:
+    """In-place scatter of one decode step's K/V rows into the pool.
+
+    Returns the updated ``(k_pages, v_pages)``; both paths update the
+    buffer in place when the caller's pools are donated/dead (the Pallas
+    route via ``input_output_aliases``, the reference route via XLA's
+    in-place dynamic_update_slice), so per-step cost is O(rows), not
+    O(pool).
+
+    With a ``mesh`` the pools are NB-sharded over ``axis_name``,
+    ``page_idx`` is shard-local, and each device narrows ``active`` to
+    its own slots (``slot_shard``), so a slot's row lands only on its
+    home shard; out_specs keep the pool sharded and the per-shard
+    buffers update in place exactly as on one device.
+    """
+    if not _sharded(mesh, axis_name):
+        return _paged_kv_write_local(
+            k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+            layer=layer, mode=mode)
+
+    def body(kp, vp, kr, vr, pidx, off, act, ss):
+        idx = jax.lax.axis_index(axis_name)
+        local_act = jnp.logical_and(act, ss == idx)
+        return _paged_kv_write_local(
+            kp, vp, kr, vr, pidx, off, local_act, layer=layer, mode=mode)
+
+    pool = P(None, None, axis_name, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(pool, pool, P(), P(), P(), P(), P(), P()),
+        out_specs=(pool, pool), check_rep=False,
+    )(k_pages, v_pages, k_rows, v_rows, page_idx, offset, active,
+      slot_shard.astype(jnp.int32))
 
 
 def wkv6(

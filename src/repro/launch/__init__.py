@@ -7,6 +7,7 @@ initialized jax unless 512 host devices are intended.
 from repro.launch.mesh import (
     make_production_mesh,
     make_debug_mesh,
+    parse_mesh_spec,
     PEAK_FLOPS_BF16,
     HBM_BW,
     ICI_BW,

@@ -25,6 +25,30 @@ def make_debug_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def parse_mesh_spec(spec: str):
+    """``"data=4"`` / ``"data=4,model=2"`` -> axis-size dict.
+
+    The grammar of the launchers' ``--mesh`` flag; axes it doesn't name
+    default to 1.  Raises ValueError on unknown axes so a typo doesn't
+    silently serve unsharded.
+    """
+    sizes = {"data": 1, "model": 1}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, val = part.partition("=")
+        name = name.strip()
+        if (name not in sizes or not val.strip().isdigit()
+                or int(val) < 1):
+            raise ValueError(
+                f"--mesh {spec!r}: want e.g. 'data=4' or "
+                f"'data=4,model=2' with positive sizes "
+                f"(axes: {sorted(sizes)})")
+        sizes[name] = int(val)
+    return sizes
+
+
 # Hardware constants for the roofline analysis (TPU v5e).
 PEAK_FLOPS_BF16 = 197e12        # per chip, FLOP/s
 HBM_BW = 819e9                  # per chip, bytes/s

@@ -99,7 +99,7 @@ def _parse_draft(spec: str, args, bundle, params, tok):
                      "or self")
 
 
-def _serve_continuous(args, bundle, params, store, tok, ds):
+def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None):
     from repro.data.mathgen import verify
     from repro.serve import ServeEngine
 
@@ -117,6 +117,7 @@ def _serve_continuous(args, bundle, params, store, tok, ds):
         top_p=args.top_p, seed=args.seed + 2,
         speculate_k=args.speculate, draft=draft,
         batch_prefill=not args.no_batch_prefill,
+        mesh=mesh, speculate_adaptive=args.speculate_adaptive,
     )
     toks_np, prompts, answers = ds.sample_batch(args.requests)
     meta = {}
@@ -144,6 +145,10 @@ def _serve_continuous(args, bundle, params, store, tok, ds):
           f"({stats['prefill_dispatches']} dispatches), "
           f"preemptions {stats['preemptions']}, swaps {stats['swaps']}, "
           f"{lat_tag}")
+    if stats.get("num_shards", 1) > 1:
+        print(f"  sharded over {stats['num_shards']} shards: "
+              f"free pages by shard {stats['pool_free_by_shard']}, "
+              f"live slots by shard {stats['live_slots_by_shard']}")
     if args.speculate:
         dv = stats.get("draft_version")
         dtag = ("oracle/callable" if dv is None and engine.draft is not None
@@ -154,6 +159,9 @@ def _serve_continuous(args, bundle, params, store, tok, ds):
               f"({stats['accepted_tokens']}/{stats['drafted_tokens']} "
               f"drafted), draft {dtag}, lag hist "
               f"{stats.get('draft_version_lag_histogram', {})}")
+        if args.speculate_adaptive:
+            print(f"  adaptive k in [1, {args.speculate}]: chosen-k "
+                  f"histogram {stats.get('chosen_k_histogram', {})}")
     for t in sorted(trajs, key=lambda t: t.request_id)[:8]:
         prompt_text, ans = meta[t.request_id]
         text = tok.decode(t.tokens)
@@ -196,10 +204,20 @@ def main(argv=None) -> int:
                          "from the PolicyStore, needs --runtime "
                          "versioned), model:<arch> (small registry "
                          "draft), self (verifier params; accept-all)")
+    ap.add_argument("--speculate-adaptive", action="store_true",
+                    help="continuous: adapt the per-round draft length "
+                         "in [1, --speculate] from each slot's measured "
+                         "acceptance-rate EMA")
     ap.add_argument("--no-batch-prefill", action="store_true",
                     help="continuous: prefill admissions one dispatch "
                          "per request (default stacks same-padded-"
                          "length admissions)")
+    ap.add_argument("--mesh", default=None,
+                    help="shard the serve path over a device mesh, e.g. "
+                         "'data=2': the paged pool partitions its page "
+                         "axis, requests are placed per shard (CPU "
+                         "hosts: set XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N first)")
     ap.add_argument("--swap-interval", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -230,13 +248,36 @@ def main(argv=None) -> int:
         params, step, meta = load_checkpoint(args.checkpoint, params)
         print(f"loaded checkpoint step={step} meta={meta}")
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_debug_mesh, parse_mesh_spec
+
+        sizes = parse_mesh_spec(args.mesh)
+        if args.engine != "continuous":
+            raise SystemExit("--mesh requires --engine continuous")
+        n_dev = len(jax.devices())
+        if sizes["data"] * sizes["model"] > n_dev:
+            raise SystemExit(
+                f"--mesh {args.mesh}: wants "
+                f"{sizes['data'] * sizes['model']} devices, host has "
+                f"{n_dev} (CPU: export XLA_FLAGS=--xla_force_host_"
+                f"platform_device_count=N before launching)")
+        mesh = make_debug_mesh(data=sizes["data"], model=sizes["model"])
+        print(f"serving over mesh {dict(mesh.shape)} "
+              f"({len(mesh.devices.flat)} devices)")
+
     store = None
     if args.runtime == "versioned":
         from repro.runtime import PolicyStore
 
+        sharding = None
+        if mesh is not None:
+            from repro.distributed.sharding import replicated
+
+            sharding = replicated(mesh)
         # v0 is the true random init; the checkpoint (if any) becomes v1.
         store = PolicyStore(init_params, capacity=2,
-                            meta={"source": "init"})
+                            meta={"source": "init"}, sharding=sharding)
         if args.checkpoint:
             store.publish(params, source="checkpoint",
                           checkpoint=args.checkpoint)
@@ -244,7 +285,7 @@ def main(argv=None) -> int:
     ds = MathTaskDataset(prompt_len=32, level=args.level,
                          seed=args.seed + 1)
     if args.engine == "continuous":
-        _serve_continuous(args, bundle, params, store, tok, ds)
+        _serve_continuous(args, bundle, params, store, tok, ds, mesh=mesh)
     else:
         toks_np, prompts, answers = ds.sample_batch(args.batch)
         _serve_static(args, bundle, params, store, tok, toks_np, answers)

@@ -60,10 +60,16 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
 
     Speculative runs additionally report the acceptance rate (accepted
     draft tokens / drafted; ``as_dict`` computes it), drafted-vs-emitted
-    token counts, the draft slot's policy version and the
+    token counts, the draft slot's policy version, the
     **draft-version lag histogram**: per emitted token, how many
     publishes the draft policy lagged the verifier — the serve-side
-    mirror of the runtime's behavior-policy lag histograms.
+    mirror of the runtime's behavior-policy lag histograms — and the
+    **chosen-k histogram**: how many speculative rounds ran each draft
+    length (constant at ``speculate_k`` unless ``speculate_adaptive``
+    shrinks low-acceptance rounds).
+
+    Sharded engines (``mesh``) add per-shard pool and placement
+    counters: free pages and live decode slots by shard.
     """
     alloc = engine.allocator
     sched = engine.scheduler
@@ -88,6 +94,16 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
             str(k): v
             for k, v in engine._draft_lag_hist.snapshot().items()
         }
+        out["speculate_adaptive"] = getattr(
+            engine, "speculate_adaptive", False)
+        out["chosen_k_histogram"] = {
+            str(k): v
+            for k, v in engine._chosen_k_hist.snapshot().items()
+        }
+    if getattr(alloc, "num_shards", 1) > 1:
+        out["num_shards"] = alloc.num_shards
+        out["pool_free_by_shard"] = alloc.free_by_shard()
+        out["live_slots_by_shard"] = sched._live_slots_by_shard()
     return out
 
 

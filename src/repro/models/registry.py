@@ -77,17 +77,20 @@ def _build_decoder_only(cfg: ModelConfig,
     decode_step_paged_multi = None
     if tf_mod.paged_arch_unsupported(cfg) is None:
         def decode_step_paged(params, token, pages, block_tables, pos,
-                              active, kernel_mode=None):
+                              active, kernel_mode=None, mesh=None,
+                              slot_shard=None):
             return tf_mod.decode_step_paged(
                 params, cfg, token, pages, block_tables, pos, active,
-                kernel_mode=kernel_mode)
+                kernel_mode=kernel_mode, mesh=mesh, slot_shard=slot_shard)
 
         def decode_step_paged_multi(params, tokens, pages, block_tables,
                                     pos, active, write_cap,
-                                    kernel_mode=None):
+                                    kernel_mode=None, mesh=None,
+                                    slot_shard=None):
             return tf_mod.decode_step_paged_multi(
                 params, cfg, tokens, pages, block_tables, pos, active,
-                write_cap, kernel_mode=kernel_mode)
+                write_cap, kernel_mode=kernel_mode, mesh=mesh,
+                slot_shard=slot_shard)
 
         def init_paged_cache(num_blocks, block_size, dtype=jnp.float32):
             return tf_mod.init_paged_cache(cfg, num_blocks, block_size,

@@ -184,9 +184,11 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def paged_arch_unsupported(cfg: ModelConfig) -> Optional[str]:
     """Why this config cannot run the paged decode path (None = it can).
 
-    The paged KV pool covers the standard attention archs; recurrent
-    state (rwkv/ssm) has no per-position rows to page, prefix-LM/vision
-    prefixes and per-layer sliding windows are serve/ follow-ons.
+    The paged KV pool covers the standard attention archs — including
+    gemma3-style per-layer sliding windows, which the paged kernels
+    mask natively (the hoisted layer loop passes each layer's static
+    window).  Recurrent state (rwkv/ssm) has no per-position rows to
+    page; prefix-LM/VLM prefixes are still serve/ follow-ons.
     """
     if cfg.attn_free:
         return "attn-free (rwkv) archs keep recurrent state, not KV rows"
@@ -194,8 +196,6 @@ def paged_arch_unsupported(cfg: ModelConfig) -> Optional[str]:
         return "hybrid attn+ssm archs carry unpaged ssm/conv state"
     if cfg.encoder_layers > 0:
         return "encoder-decoder cross-attention cache is not paged"
-    if cfg.sliding_window is not None:
-        return "per-layer sliding windows not yet wired into paged decode"
     if cfg.vision_prefix_len > 0:
         return "vision prefix rows are not paged"
     return None
@@ -287,6 +287,8 @@ def decode_step_paged(
     active: jax.Array,        # [B] bool; inactive slots write/read nothing
     *,
     kernel_mode: Optional[str] = None,
+    mesh=None,
+    slot_shard: Optional[jax.Array] = None,  # [B] int32 home shard per slot
 ) -> Tuple[ModelOutput, Dict]:
     """One decode step for a batch of *independent ragged* requests.
 
@@ -307,6 +309,16 @@ def decode_step_paged(
     kept as :func:`decode_step_paged_carried` as the equivalence oracle
     for this path.  Serve archs run reduced depths, so the O(L) HLO is
     cheap; the O(1)-HLO training forward is untouched.
+
+    The hoisted loop also gives each layer its *static* sliding window
+    (``cfg.window_for_layer``), so gemma3-style local:global patterns
+    run the paged path natively — the kernels mask reads outside the
+    window; old rows stay resident (pages are not reclaimed early).
+
+    With ``mesh``/``slot_shard`` the pool is NB-sharded over the mesh's
+    ``data`` axis and block tables carry shard-local page ids; the
+    kernels dispatch through ``shard_map`` (see ``kernels.ops``) and
+    this function's math is bit-identical to the single-device case.
     """
     from repro.kernels import ops as kops
 
@@ -326,10 +338,12 @@ def decode_step_paged(
         k_pages, v_pages = kops.paged_kv_write(
             k_pages, v_pages, k_new[:, 0], v_new[:, 0],
             page_idx, offset, active, layer=layer, mode=kernel_mode,
+            mesh=mesh, slot_shard=slot_shard,
         )
         attn_out = kops.paged_attention(
             q[:, 0], k_pages[layer], v_pages[layer], block_tables,
-            context_lens, mode=kernel_mode,
+            context_lens, window=cfg.window_for_layer(layer),
+            mode=kernel_mode, mesh=mesh, slot_shard=slot_shard,
         )
         x = _paged_layer_tail(cfg, lp, x, attn_out)
 
@@ -348,6 +362,8 @@ def decode_step_paged_multi(
     write_cap: jax.Array,     # [B] int32 rows this slot owns pages for
     *,
     kernel_mode: Optional[str] = None,
+    mesh=None,
+    slot_shard: Optional[jax.Array] = None,  # [B] int32 home shard per slot
 ) -> Tuple[ModelOutput, Dict]:
     """Score ``T`` consecutive tokens per slot in one dispatch (the
     speculative-decode verifier).
@@ -398,10 +414,12 @@ def decode_step_paged_multi(
                 k_pages, v_pages, k_new[:, step], v_new[:, step],
                 page_idx[:, step], offset[:, step], write_ok[:, step],
                 layer=layer, mode=kernel_mode,
+                mesh=mesh, slot_shard=slot_shard,
             )
         attn_out = kops.paged_attention_multi(
             q, k_pages[layer], v_pages[layer], block_tables,
-            context_lens, mode=kernel_mode,
+            context_lens, window=cfg.window_for_layer(layer),
+            mode=kernel_mode, mesh=mesh, slot_shard=slot_shard,
         )
         x = _paged_layer_tail(cfg, lp, x, attn_out)
 
@@ -419,6 +437,8 @@ def decode_step_paged_carried(
     active: jax.Array,
     *,
     kernel_mode: Optional[str] = None,
+    mesh=None,
+    slot_shard: Optional[jax.Array] = None,
 ) -> Tuple[ModelOutput, Dict]:
     """Legacy paged decode step: pool carried through the layer scan.
 
@@ -428,8 +448,20 @@ def decode_step_paged_carried(
     differently) — but O(pool) per step: the pages ride the scan as
     xs/ys, so every step re-materializes the full ``[L, ...]`` pool.
     Kept as the oracle for the aliased path; not used by the engine.
+    Uniform-scan body: no per-layer windows (use the hoisted path for
+    sliding-window archs) and no mesh dispatch.
     """
     from repro.kernels import ops as kops
+
+    if cfg.sliding_window is not None:
+        raise ValueError(
+            "decode_step_paged_carried has a uniform scan body and "
+            "cannot carry per-layer sliding windows; use "
+            "decode_step_paged")
+    if mesh is not None and kops.mesh_data_size(mesh) > 1:
+        raise ValueError(
+            "decode_step_paged_carried is a single-device test oracle; "
+            "mesh dispatch lives on decode_step_paged")
 
     num_blocks = pages["k_pages"].shape[2]
     block_size = pages["k_pages"].shape[3]
@@ -508,6 +540,62 @@ def write_prefill_to_pages(
         new_v = v_rows[:, :, None, j * block_size:(j + 1) * block_size, :]
         k_pages = masked_inplace_update(k_pages, new_k, start, valid)
         v_pages = masked_inplace_update(v_pages, new_v, start, valid)
+    return {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def write_prefill_batch_to_pages(
+    cache_k: jax.Array,       # [L, N, P, KV, Dh] dense prefill rows
+    cache_v: jax.Array,
+    pages: Dict,
+    blocks: jax.Array,        # [N, M] int32 page ids (shard-local w/ mesh)
+    prompt_lens: jax.Array,   # [N] int32 rows to write per request
+    home_shard: Optional[jax.Array] = None,   # [N] int32 (mesh only)
+    *,
+    mesh=None,
+    axis_name: str = "data",
+) -> Dict:
+    """Scatter a *group* of prefilled requests into their pages.
+
+    The single-device path is exactly ``N`` calls to
+    :func:`write_prefill_to_pages` (the bit-pinned baseline).  With a
+    ``mesh`` the pool is NB-sharded over ``axis_name`` and each request
+    writes only on its ``home_shard``: inside ``shard_map`` foreign
+    requests get ``prompt_len 0`` (every tile's validity mask is then
+    all-False, i.e. read-select-writeback keeps the local pool rows
+    untouched), so the per-shard buffers still update in place.
+    """
+    n = cache_k.shape[1]
+
+    def write_all(kc, vc, pages, blocks, plens):
+        for i in range(n):
+            pages = write_prefill_to_pages(
+                jax.lax.slice_in_dim(kc, i, i + 1, axis=1),
+                jax.lax.slice_in_dim(vc, i, i + 1, axis=1),
+                pages, blocks[i], plens[i])
+        return pages
+
+    from repro.kernels.ops import _sharded
+
+    if not _sharded(mesh, axis_name):
+        return write_all(cache_k, cache_v, pages, blocks, prompt_lens)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(kc, vc, k_pages, v_pages, blocks, plens, home):
+        idx = jax.lax.axis_index(axis_name)
+        local_plens = jnp.where(home == idx, plens, 0).astype(jnp.int32)
+        out = write_all(kc, vc, {"k_pages": k_pages, "v_pages": v_pages},
+                        blocks, local_plens)
+        return out["k_pages"], out["v_pages"]
+
+    pool = P(None, None, axis_name, None, None)
+    k_pages, v_pages = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), pool, pool, P(), P(), P()),
+        out_specs=(pool, pool), check_rep=False,
+    )(cache_k, cache_v, pages["k_pages"], pages["v_pages"],
+      blocks, prompt_lens, home_shard.astype(jnp.int32))
     return {"k_pages": k_pages, "v_pages": v_pages}
 
 

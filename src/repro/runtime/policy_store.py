@@ -58,10 +58,21 @@ class PolicyStore:
         init_params: Any,
         capacity: int,
         meta: Optional[Dict[str, Any]] = None,
+        sharding: Any = None,
     ) -> None:
+        """``sharding`` (a ``NamedSharding``, typically
+        ``distributed.sharding.replicated(mesh)``) places every
+        published snapshot on the mesh at publish time, so sharded
+        serve engines read correctly-placed parameters straight from
+        ``latest()``/``pin_lagged()`` instead of re-placing them per
+        swap.  The ring's stacked pytree inherits the placement
+        (eager jnp ops follow their operands' shardings)."""
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self._lock = threading.Lock()
+        self._sharding = sharding
+        if sharding is not None:
+            init_params = jax.device_put(init_params, sharding)
         self._buffer: PolicyBuffer = buffer_init(init_params, capacity)
         self._version = 0
         # buffer_init marks the initial policy valid at slot capacity-1
@@ -78,6 +89,10 @@ class PolicyStore:
 
     def publish(self, params: Any, **meta: Any) -> int:
         """Insert a new snapshot; returns its (monotonic) version."""
+        if self._sharding is not None:
+            # Outside the lock: device placement can be slow and needs
+            # no store state.
+            params = jax.device_put(params, self._sharding)
         with self._lock:
             slot = int(self._buffer.head)
             self._buffer = buffer_push(self._buffer, params)

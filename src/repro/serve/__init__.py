@@ -29,7 +29,12 @@ from repro.serve.engine import (
     ServeStats,
     ServedTrajectory,
 )
-from repro.serve.paged_cache import BlockAllocator, OutOfBlocks
+from repro.serve.paged_cache import (
+    BlockAllocator,
+    OutOfBlocks,
+    ShardedBlockAllocator,
+    make_allocator,
+)
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
     Request,
@@ -47,4 +52,6 @@ __all__ = [
     "ServeEngine",
     "ServeStats",
     "ServedTrajectory",
+    "ShardedBlockAllocator",
+    "make_allocator",
 ]

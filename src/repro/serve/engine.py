@@ -49,6 +49,22 @@ token-exact with non-speculative greedy decode at any acceptance rate.
 the same padded prompt length are stacked into one prefill dispatch
 instead of paying one dispatch per request, cutting admission latency
 under bursty load (``benchmarks.bench_serve --burst`` measures it).
+
+**Sharded serve** (``mesh=...``): the paged pool partitions its NB
+(page) axis over the mesh's ``data`` axis; the scheduler places every
+request's pages on ONE shard (balancing live slots per shard) and the
+paged kernels dispatch through ``shard_map`` (``kernels.ops``) with
+shard-local block tables — foreign slots mask to zero and a psum
+recombines the batch, so sharded greedy output is **token-exact** with
+the single-device engine, speculation and preemption included, and the
+per-shard pool buffers still update in place.  ``mesh=None`` is the
+single-shard special case of the same code path.
+
+**Adaptive speculation** (``speculate_adaptive=True``): a per-slot EMA
+of the measured draft acceptance rate adapts the per-round draft
+length between 1 and ``speculate_k`` — slots that keep rejecting stop
+paying for long drafts; the chosen-k histogram lands in
+``collect_serve_stats``.
 """
 from __future__ import annotations
 
@@ -61,11 +77,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import EOS, PAD
+from repro.distributed.sharding import replicated, shard_paged_pool
+from repro.kernels.ops import mesh_data_size
 from repro.metrics.runtime_metrics import LagHistogram
 from repro.models.registry import ModelBundle
-from repro.models.transformer import write_prefill_to_pages
+from repro.models.transformer import write_prefill_batch_to_pages
 from repro.rollout.sampler import _top_p_filter, speculative_accept
-from repro.serve.paged_cache import BlockAllocator
+from repro.serve.paged_cache import make_allocator
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
     Request,
@@ -148,15 +166,21 @@ class ModelDraft:
 
     def __init__(self, bundle: ModelBundle, params: Any,
                  version: Optional[int], version_offset: Optional[int],
-                 num_blocks: int, block_size: int) -> None:
+                 num_blocks: int, block_size: int, mesh: Any = None
+                 ) -> None:
         if bundle.decode_step_paged is None or bundle.init_paged_cache is None:
             raise ValueError(
                 f"draft arch {bundle.cfg.name} cannot run the paged path")
         self.bundle = bundle
-        self.params = params
+        self.params = (params if mesh is None
+                       else jax.device_put(params, replicated(mesh)))
         self.version = version
         self.version_offset = version_offset
-        self.pages = bundle.init_paged_cache(num_blocks, block_size)
+        # The draft pool shards exactly like the verifier pool (same NB
+        # axis, same shard-local tables), so one placement decision
+        # covers both.
+        self.pages = shard_paged_pool(
+            bundle.init_paged_cache(num_blocks, block_size), mesh)
 
 
 class CallableDraft:
@@ -197,6 +221,8 @@ class ServeEngine:
         speculate_k: int = 0,
         draft: Any = None,
         batch_prefill: bool = True,
+        mesh: Any = None,
+        speculate_adaptive: bool = False,
     ) -> None:
         """``speculate_k > 0`` turns on speculative decode; ``draft`` is
         one of ``("version", -n)`` (self-speculation from the store's
@@ -204,6 +230,12 @@ class ServeEngine:
         ``("model", bundle, params)`` (separate draft model), a callable
         ``fn(request, k) -> token ids``, or None (defaults to
         ``("version", -1)`` with a store, else the verifier's own params).
+
+        ``mesh`` (a jax Mesh with a ``data`` axis) shards the paged
+        pool's NB axis over that axis; ``num_blocks`` is the TOTAL pool
+        and must divide by the data-axis size.  ``speculate_adaptive``
+        adapts the per-round draft length in ``[1, speculate_k]`` from
+        each slot's measured acceptance EMA.
         """
         if bundle.decode_step_paged is None:
             from repro.models.transformer import paged_arch_unsupported
@@ -219,19 +251,39 @@ class ServeEngine:
             self.params, self.version = store.latest()
         else:
             self.params, self.version = params, 0
+        self.mesh = mesh
+        self.num_shards = mesh_data_size(mesh)
+        if num_blocks % self.num_shards != 0:
+            raise ValueError(
+                f"num_blocks {num_blocks} must divide over the mesh's "
+                f"data axis ({self.num_shards} shards)")
+        if mesh is not None:
+            # Replicate the weights over the mesh up front; swapped-in
+            # versions get the same placement in _maybe_swap.
+            self.params = jax.device_put(self.params, replicated(mesh))
         self.block_size = block_size
         max_blocks_per_request = -(-max_seq_len // block_size)
-        self.allocator = BlockAllocator(num_blocks, block_size)
+        self.allocator = make_allocator(
+            num_blocks, block_size, self.num_shards)
         self.scheduler = ContinuousBatchingScheduler(
             self.allocator, max_batch=max_batch,
             max_blocks_per_request=max_blocks_per_request)
-        self.pages = bundle.init_paged_cache(num_blocks, block_size)
+        self.pages = shard_paged_pool(
+            bundle.init_paged_cache(num_blocks, block_size), mesh)
         self.max_batch = max_batch
         self._tables = np.zeros(
             (max_batch, max_blocks_per_request), np.int32)
         self._pos = np.zeros((max_batch,), np.int32)
         self._active = np.zeros((max_batch,), bool)
         self._last_tok = np.zeros((max_batch,), np.int32)
+        self._slot_shard = np.zeros((max_batch,), np.int32)
+        # Device-side cache of slot-state arrays that only change on
+        # scheduling events (admit/preempt/retire/extend).  A host->
+        # device transfer of even a [B] int32 costs tens of µs on CPU;
+        # at one decode/verify dispatch per round that overhead is a
+        # measurable slice of a small-model round, so arrays are
+        # re-uploaded only when their host copy actually changed.
+        self._dev_cache: Dict[str, Tuple[np.ndarray, jax.Array]] = {}
         self._key = jax.random.PRNGKey(seed)
         self.stats = ServeStats()
         self._kernel_mode = kernel_mode
@@ -252,7 +304,7 @@ class ServeEngine:
         self.decode_chunk = chunk
 
         def _decode(params, token, pages, tables, pos, active, remaining,
-                    key):
+                    slot_shard, key):
             """`chunk` decode steps in one dispatch (lax.scan).
 
             Multi-step decode amortizes the per-step host round-trip —
@@ -267,7 +319,8 @@ class ServeEngine:
                 token, pos, active, emitted, pages = carry
                 out, pages = bundle.decode_step_paged(
                     params, token, pages, tables, pos, active,
-                    kernel_mode=kernel_mode)
+                    kernel_mode=kernel_mode, mesh=mesh,
+                    slot_shard=slot_shard)
                 tok, lp = _sample(out.logits, k_t)
                 mask = active
                 tok = jnp.where(active, tok, jnp.int32(PAD))
@@ -299,17 +352,25 @@ class ServeEngine:
 
         # -- speculative decode ---------------------------------------------
         self.speculate_k = max(int(speculate_k), 0)
+        self.speculate_adaptive = bool(speculate_adaptive) and \
+            self.speculate_k > 1
         self.draft: Any = None
         self._draft_lag_hist = LagHistogram()
+        self._chosen_k_hist = LagHistogram()
+        # Per-slot EMA of the measured acceptance rate; optimistic start
+        # (1.0 = draft the full k) reset whenever a slot is re-admitted.
+        self._accept_ema = np.ones((max_batch,), np.float64)
+        self._accept_ema_alpha = 0.3
         if self.speculate_k:
             if bundle.decode_step_paged_multi is None:
                 raise ValueError(
                     f"{bundle.cfg.name}: multi-token verify unavailable "
                     "(paged path unsupported)")
             self.draft = self._build_draft(draft, num_blocks, block_size)
-            if isinstance(self.draft, ModelDraft):
-                self._draft_step = self._make_draft_fn()
-            self._verify = self._make_verify_fn()
+            # Draft/verify dispatches are keyed by the round's draft
+            # length: adaptive speculation walks k in [1, speculate_k].
+            self._draft_fns: Dict[int, Any] = {}
+            self._verify_fns: Dict[int, Any] = {}
 
     # -- request intake ------------------------------------------------------
 
@@ -337,6 +398,15 @@ class ServeEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _dev(self, name: str, arr: np.ndarray) -> jax.Array:
+        """Device copy of `arr`, re-uploaded only when it changed."""
+        hit = self._dev_cache.get(name)
+        if hit is not None and np.array_equal(hit[0], arr):
+            return hit[1]
+        val = jnp.asarray(arr)
+        self._dev_cache[name] = (arr.copy(), val)
+        return val
+
     def _maybe_swap(self) -> None:
         if self.store is None:
             return
@@ -344,6 +414,8 @@ class ServeEngine:
             return
         params, version = self.store.latest()
         if version != self.version:
+            if self.mesh is not None:
+                params = jax.device_put(params, replicated(self.mesh))
             self.params, self.version = params, version
             self.stats.swaps += 1
             self._refresh_draft()
@@ -367,13 +439,13 @@ class ServeEngine:
                                  f"got {offset}")
             params, version = self.store.pin_lagged(offset)
             return ModelDraft(self.bundle, params, version, offset,
-                              num_blocks, block_size)
+                              num_blocks, block_size, self.mesh)
         if kind == "params":
             return ModelDraft(self.bundle, spec[1], None, None,
-                              num_blocks, block_size)
+                              num_blocks, block_size, self.mesh)
         if kind == "model":
             return ModelDraft(spec[1], spec[2], None, None,
-                              num_blocks, block_size)
+                              num_blocks, block_size, self.mesh)
         raise ValueError(f"unknown draft spec {spec!r}")
 
     def _refresh_draft(self) -> None:
@@ -391,16 +463,31 @@ class ServeEngine:
             self.store.release(target)   # unchanged; drop the extra pin
             return
         self.store.release(d.version)
+        if self.mesh is not None:
+            params = jax.device_put(params, replicated(self.mesh))
         d.params, d.version = params, target
 
-    def _make_draft_fn(self):
+    def _draft_fn(self, k: int):
+        fn = self._draft_fns.get(k)
+        if fn is None:
+            fn = self._draft_fns[k] = self._make_draft_fn(k)
+        return fn
+
+    def _verify_fn(self, k: int):
+        fn = self._verify_fns.get(k)
+        if fn is None:
+            fn = self._verify_fns[k] = self._make_verify_fn(k)
+        return fn
+
+    def _make_draft_fn(self, k: int):
         """k draft decode steps in one dispatch over the draft pool."""
         bundle_d = self.draft.bundle
         sample = self._sample
         kernel_mode = self._kernel_mode
-        k = self.speculate_k
+        mesh = self.mesh
 
-        def _draft(params, token, pages, tables, pos, active, cap, key):
+        def _draft(params, token, pages, tables, pos, active, cap,
+                   slot_shard, key):
             def body(carry, k_t):
                 token, pos, pages = carry
                 # Past-allocation steps go inactive: their write would
@@ -409,7 +496,8 @@ class ServeEngine:
                 step_active = jnp.logical_and(active, pos < cap)
                 out, pages = bundle_d.decode_step_paged(
                     params, token, pages, tables, pos, step_active,
-                    kernel_mode=kernel_mode)
+                    kernel_mode=kernel_mode, mesh=mesh,
+                    slot_shard=slot_shard)
                 tok, _ = sample(out.logits, k_t)
                 tok = jnp.where(step_active, tok, jnp.int32(PAD))
                 return (tok, pos + 1, pages), (tok, out.logits)
@@ -421,14 +509,15 @@ class ServeEngine:
 
         return jax.jit(_draft, donate_argnums=(2,))
 
-    def _make_verify_fn(self):
+    def _make_verify_fn(self, k: int):
         """Single-dispatch multi-token verify + accept + pos arithmetic."""
         bundle = self.bundle
         kernel_mode = self._kernel_mode
+        mesh = self.mesh
         temp, top_p = self._temperature, self._top_p
 
         def _verify(params, first_tok, draft_toks, draft_logits, pages,
-                    tables, pos, active, cap, key):
+                    tables, pos, active, cap, slot_shard, key):
             # Queries = [t0, d1..d_{k-1}]: logits after query i score
             # draft token d_{i+1}.  All k rows are written; a rejection
             # just rewinds pos and the next chunk overwrites them.
@@ -436,7 +525,7 @@ class ServeEngine:
                 [first_tok[:, None], draft_toks[:, :-1]], axis=1)
             out, pages = bundle.decode_step_paged_multi(
                 params, queries, pages, tables, pos, active, cap,
-                kernel_mode=kernel_mode)
+                kernel_mode=kernel_mode, mesh=mesh, slot_shard=slot_shard)
             toks, lps, n_acc, n_emit = speculative_accept(
                 out.logits, draft_toks, draft_logits, key,
                 temperature=temp, top_p=top_p)
@@ -475,11 +564,13 @@ class ServeEngine:
         rows = np.zeros((n, padded), np.int32)
         kv_valid = np.zeros((n, padded), bool)
         plens = np.zeros((n,), np.int32)
+        home = np.zeros((n,), np.int32)
         tables = np.zeros((n, self._tables.shape[1]), np.int32)
         for i, (req, ids, plen) in enumerate(items):
             rows[i, :plen] = ids
             kv_valid[i, :plen] = True
             plens[i] = plen
+            home[i] = req.shard or 0
             tables[i] = self.allocator.padded_table(
                 req.blocks, self._tables.shape[1])
         key = (padded, n)
@@ -488,8 +579,8 @@ class ServeEngine:
             fn = self._prefill_fns[key] = self._make_prefill(padded, n)
         toks, lps, self.pages = fn(
             self.params, jnp.asarray(rows), jnp.asarray(kv_valid),
-            jnp.asarray(tables), jnp.asarray(plens), self.pages,
-            self._next_key())
+            jnp.asarray(tables), jnp.asarray(plens), jnp.asarray(home),
+            self.pages, self._next_key())
         self.stats.prefills += n
         self.stats.prefill_dispatches += 1
         if isinstance(self.draft, ModelDraft):
@@ -499,7 +590,8 @@ class ServeEngine:
                     self._make_draft_prefill(padded, n)
             self.draft.pages = dfn(
                 self.draft.params, jnp.asarray(rows), jnp.asarray(kv_valid),
-                jnp.asarray(tables), jnp.asarray(plens), self.draft.pages)
+                jnp.asarray(tables), jnp.asarray(plens),
+                jnp.asarray(home), self.draft.pages)
         toks_np, lps_np = np.asarray(toks), np.asarray(lps)
         for i, (req, ids, plen) in enumerate(items):
             slot = req.slot
@@ -514,41 +606,40 @@ class ServeEngine:
     def _make_prefill(self, padded_len: int, n: int):
         bundle = self.bundle
         sample = self._sample
+        mesh = self.mesh
 
-        def _prefill(params, prompts, kv_valid, blocks, plens, pages,
-                     key):
+        def _prefill(params, prompts, kv_valid, blocks, plens, home,
+                     pages, key):
             out = bundle.forward(
                 params, prompts, return_cache=True,
                 cache_len=padded_len, kv_valid=kv_valid)
             # Donated pages + per-tile dynamic_update_slice writes: each
-            # request's prefill lands in the pool without copying it.
-            for i in range(n):
-                pages = write_prefill_to_pages(
-                    jax.lax.slice_in_dim(out.cache["k"], i, i + 1, axis=1),
-                    jax.lax.slice_in_dim(out.cache["v"], i, i + 1, axis=1),
-                    pages, blocks[i], plens[i])
+            # request's prefill lands in the pool without copying it
+            # (under a mesh: only on its home shard, via shard_map).
+            pages = write_prefill_batch_to_pages(
+                out.cache["k"], out.cache["v"], pages, blocks, plens,
+                home, mesh=mesh)
             last = jnp.take_along_axis(
                 out.logits, (plens - 1)[:, None, None], axis=1)[:, 0]
             tok, lp = sample(last, key)
             return tok, lp, pages
 
-        return jax.jit(_prefill, donate_argnums=(5,))
+        return jax.jit(_prefill, donate_argnums=(6,))
 
     def _make_draft_prefill(self, padded_len: int, n: int):
         bundle_d = self.draft.bundle
+        mesh = self.mesh
 
-        def _prefill(params, prompts, kv_valid, blocks, plens, pages):
+        def _prefill(params, prompts, kv_valid, blocks, plens, home,
+                     pages):
             out = bundle_d.forward(
                 params, prompts, return_cache=True,
                 cache_len=padded_len, kv_valid=kv_valid)
-            for i in range(n):
-                pages = write_prefill_to_pages(
-                    jax.lax.slice_in_dim(out.cache["k"], i, i + 1, axis=1),
-                    jax.lax.slice_in_dim(out.cache["v"], i, i + 1, axis=1),
-                    pages, blocks[i], plens[i])
-            return pages
+            return write_prefill_batch_to_pages(
+                out.cache["k"], out.cache["v"], pages, blocks, plens,
+                home, mesh=mesh)
 
-        return jax.jit(_prefill, donate_argnums=(5,))
+        return jax.jit(_prefill, donate_argnums=(6,))
 
     def _record(self, req: Request, tok: int, lp: float,
                 finished: List[ServedTrajectory]) -> None:
@@ -604,6 +695,10 @@ class ServeEngine:
         lookahead = self.speculate_k or self.decode_chunk
         admitted, _ = self.scheduler.schedule(lookahead=lookahead)
         self.stats.preemptions = self.scheduler.preemptions
+        for req in admitted:
+            # Fresh occupant: the acceptance EMA of whoever held this
+            # slot before says nothing about the new request.
+            self._accept_ema[req.slot] = 1.0
         self._prefill_admitted(admitted, finished)
         # Rebuild slot state from the scheduler: preempted/retired slots
         # (their Request no longer knows its old index) go quiet, and
@@ -616,6 +711,7 @@ class ServeEngine:
                 self._clear_slot(slot)
             else:
                 self._active[slot] = True
+                self._slot_shard[slot] = req.shard or 0
                 self._tables[slot] = self.allocator.padded_table(
                     req.blocks, self._tables.shape[1])
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
@@ -626,9 +722,10 @@ class ServeEngine:
             return finished
         toks, lps, masks, self.pages = self._decode(
             self.params, jnp.asarray(self._last_tok), self.pages,
-            jnp.asarray(self._tables), jnp.asarray(self._pos),
-            jnp.asarray(self._active), jnp.asarray(remaining),
-            self._next_key())
+            self._dev("tables", self._tables), jnp.asarray(self._pos),
+            self._dev("active", self._active),
+            self._dev("remaining", remaining),
+            self._dev("slot_shard", self._slot_shard), self._next_key())
         toks_np = np.asarray(toks)       # [chunk, B]
         lps_np = np.asarray(lps)
         masks_np = np.asarray(masks)
@@ -644,19 +741,43 @@ class ServeEngine:
                              float(lps_np[t, slot]), finished)
         return finished
 
+    def _choose_k(self) -> int:
+        """Per-round draft length.
+
+        Non-adaptive: the configured ``speculate_k``.  Adaptive: each
+        slot targets ``1 + round(ema * (k_max - 1))`` from its own
+        acceptance EMA and the round runs the mean target over active
+        slots — one dispatch serves the whole batch, so per-slot k is
+        a compromise; the mean neither starves high-acceptance slots
+        (max would overdraft the bad ones) nor throttles them to the
+        worst slot (min).
+        """
+        k_max = self.speculate_k
+        if not self.speculate_adaptive:
+            return k_max
+        act = self._active
+        if not act.any():
+            return k_max
+        targets = np.clip(
+            np.rint(1.0 + self._accept_ema[act] * (k_max - 1)), 1, k_max)
+        return int(np.clip(np.rint(targets.mean()), 1, k_max))
+
     def _spec_round(self, finished: List[ServedTrajectory]) -> None:
         """One draft-then-verify round: k cheap draft steps, one
         multi-token verifier dispatch, accept/rollback by pos rewind."""
-        k = self.speculate_k
+        k = self._choose_k()
+        self._chosen_k_hist.record(k)
         cap = np.zeros((self.max_batch,), np.int32)
         for req in self.scheduler.running:
             cap[req.slot] = len(req.blocks) * self.block_size
         if isinstance(self.draft, ModelDraft):
-            draft_toks, draft_logits, self.draft.pages = self._draft_step(
+            draft_toks, draft_logits, self.draft.pages = self._draft_fn(k)(
                 self.draft.params, jnp.asarray(self._last_tok),
-                self.draft.pages, jnp.asarray(self._tables),
-                jnp.asarray(self._pos), jnp.asarray(self._active),
-                jnp.asarray(cap), self._next_key())
+                self.draft.pages, self._dev("tables", self._tables),
+                jnp.asarray(self._pos), self._dev("active", self._active),
+                self._dev("cap", cap),
+                self._dev("slot_shard", self._slot_shard),
+                self._next_key())
         else:
             prop_np = np.zeros((self.max_batch, k), np.int32)
             for req in self.scheduler.running:
@@ -670,11 +791,13 @@ class ServeEngine:
             oh = np.full((self.max_batch, k, vocab), -1e9, np.float32)
             np.put_along_axis(oh, prop_np[..., None], 0.0, axis=-1)
             draft_logits = jnp.asarray(oh)
-        toks, lps, n_acc, n_emit, self.pages = self._verify(
+        toks, lps, n_acc, n_emit, self.pages = self._verify_fn(k)(
             self.params, jnp.asarray(self._last_tok), draft_toks,
-            draft_logits, self.pages, jnp.asarray(self._tables),
-            jnp.asarray(self._pos), jnp.asarray(self._active),
-            jnp.asarray(cap), self._next_key())
+            draft_logits, self.pages, self._dev("tables", self._tables),
+            jnp.asarray(self._pos), self._dev("active", self._active),
+            self._dev("cap", cap),
+            self._dev("slot_shard", self._slot_shard),
+            self._next_key())
         toks_np, lps_np, n_acc_np, n_emit_np = jax.device_get(
             (toks, lps, n_acc, n_emit))
         n_active = int(self._active.sum())
@@ -683,6 +806,13 @@ class ServeEngine:
         self.stats.spec_rounds += 1
         self.stats.drafted_tokens += k * n_active
         self.stats.accepted_tokens += int(n_acc_np[self._active].sum())
+        if self.speculate_adaptive:
+            # Acceptance EMA feeds the next round's adaptive k choice.
+            a = self._accept_ema_alpha
+            for slot in np.nonzero(self._active)[0]:
+                rate = float(n_acc_np[slot]) / k
+                self._accept_ema[slot] = (
+                    (1.0 - a) * self._accept_ema[slot] + a * rate)
         lag = (None if self.draft.version is None
                else self.version - self.draft.version)
         for req in list(self.scheduler.running):

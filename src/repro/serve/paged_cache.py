@@ -12,11 +12,21 @@ Page ids are plain ints; per-request block tables (ordered page lists)
 live on the :class:`repro.serve.scheduler.Request`.  The table rows the
 kernel sees must pad unused slots with an *in-range* id (0): the paged
 attention index map fetches skipped pages too.
+
+**Sharded pools**: under a mesh, the pool's NB axis is partitioned over
+the ``data`` axis and :class:`ShardedBlockAllocator` keeps one free
+list *per shard*.  A request's pages all come from ONE shard (its home
+shard — the scheduler picks it at admission), and the page ids handed
+out are **shard-local** (``0 .. num_blocks/num_shards - 1``): they
+index the shard's local pool slice, which is exactly what the
+``shard_map``-dispatched kernels see.  Both allocator classes expose
+the same shard-aware API; :class:`BlockAllocator` is the
+``num_shards == 1`` case where local and global ids coincide.
 """
 from __future__ import annotations
 
 from collections import deque
-from typing import Deque, Iterable, List
+from typing import Deque, Iterable, List, Optional
 
 import numpy as np
 
@@ -27,6 +37,8 @@ class OutOfBlocks(RuntimeError):
 
 class BlockAllocator:
     """FIFO free list over ``num_blocks`` fixed-size KV pages."""
+
+    num_shards = 1
 
     def __init__(self, num_blocks: int, block_size: int) -> None:
         if num_blocks < 1 or block_size < 1:
@@ -42,14 +54,22 @@ class BlockAllocator:
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def shard_num_blocks(self) -> int:
+        """Pages per shard (= the whole pool when unsharded)."""
+        return self.num_blocks
+
+    def shard_free(self, shard: int = 0) -> int:
+        return len(self._free)
+
     def blocks_for(self, n_tokens: int) -> int:
         """Pages needed to hold `n_tokens` rows."""
         return -(-n_tokens // self.block_size)
 
-    def can_allocate(self, n: int) -> bool:
+    def can_allocate(self, n: int, shard: int = 0) -> bool:
         return n <= len(self._free)
 
-    def allocate(self, n: int) -> List[int]:
+    def allocate(self, n: int, shard: int = 0) -> List[int]:
         """Pop `n` page ids; raises :class:`OutOfBlocks` when short."""
         if n > len(self._free):
             raise OutOfBlocks(
@@ -57,7 +77,7 @@ class BlockAllocator:
                 f"(pool {self.num_blocks})")
         return [self._free.popleft() for _ in range(n)]
 
-    def release(self, blocks: Iterable[int]) -> None:
+    def release(self, blocks: Iterable[int], shard: int = 0) -> None:
         """Return pages to the pool (copy-free: no cache data moves)."""
         for b in blocks:
             self._free.append(int(b))
@@ -71,3 +91,67 @@ class BlockAllocator:
         row = np.zeros((width,), np.int32)
         row[: len(blocks)] = blocks
         return row
+
+
+class ShardedBlockAllocator:
+    """Per-shard free lists over an NB-partitioned pool.
+
+    ``num_blocks`` is the *total* pool; each of the ``num_shards``
+    shards owns ``num_blocks / num_shards`` pages addressed by
+    shard-local ids.  Placement (which shard a request lives on) is the
+    scheduler's call; every allocate/release names the shard.
+    """
+
+    def __init__(self, num_blocks: int, block_size: int,
+                 num_shards: int) -> None:
+        if num_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {num_shards}")
+        if num_blocks % num_shards != 0:
+            raise ValueError(
+                f"num_blocks {num_blocks} must divide over "
+                f"{num_shards} shards")
+        self.num_shards = num_shards
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self._shards = [
+            BlockAllocator(num_blocks // num_shards, block_size)
+            for _ in range(num_shards)
+        ]
+
+    @property
+    def num_free(self) -> int:
+        return sum(s.num_free for s in self._shards)
+
+    @property
+    def shard_num_blocks(self) -> int:
+        return self.num_blocks // self.num_shards
+
+    def shard_free(self, shard: int = 0) -> int:
+        return self._shards[shard].num_free
+
+    def free_by_shard(self) -> List[int]:
+        return [s.num_free for s in self._shards]
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return self._shards[0].blocks_for(n_tokens)
+
+    def can_allocate(self, n: int, shard: int = 0) -> bool:
+        return self._shards[shard].can_allocate(n)
+
+    def allocate(self, n: int, shard: int = 0) -> List[int]:
+        """Pop `n` *shard-local* page ids off `shard`'s free list."""
+        return self._shards[shard].allocate(n)
+
+    def release(self, blocks: Iterable[int], shard: int = 0) -> None:
+        self._shards[shard].release(blocks)
+
+    def padded_table(self, blocks: List[int], width: int) -> np.ndarray:
+        return self._shards[0].padded_table(blocks, width)
+
+
+def make_allocator(num_blocks: int, block_size: int,
+                   num_shards: int = 1):
+    """Allocator for an ``num_shards``-way partitioned pool (1 = plain)."""
+    if num_shards <= 1:
+        return BlockAllocator(num_blocks, block_size)
+    return ShardedBlockAllocator(num_blocks, block_size, num_shards)

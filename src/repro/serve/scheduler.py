@@ -21,6 +21,18 @@ Preemption frees the victim's pages copy-free and re-queues it at the
 *front* of the waiting queue.  Already-emitted tokens are never
 retracted (they may have been streamed to a client): on re-admission
 the engine recomputes KV for prompt + emitted tokens and resumes.
+
+**Sharded pools**: with a :class:`~repro.serve.paged_cache.
+ShardedBlockAllocator`, every request is *placed* on one shard at
+admission — all of its pages come from that shard's free list and its
+attention reads only that shard's pool slice.  Placement balances
+**live slots per shard** (fewest running requests wins; ties break to
+the shard with the most free pages) so decode work spreads across the
+mesh instead of piling onto one device.  Pool-pressure preemption is
+shard-local: only a victim on the starved request's own shard frees
+pages that help, so the LIFO victim choice walks that shard's
+admissions.  An unsharded allocator is the one-shard special case of
+the same logic.
 """
 from __future__ import annotations
 
@@ -54,6 +66,9 @@ class Request:
     request_id: int = field(default_factory=lambda: next(_rid_counter))
     state: RequestState = RequestState.WAITING
     slot: Optional[int] = None
+    # Home shard of a placed request: all `blocks` are local ids on this
+    # shard's pool slice (always 0 with an unsharded allocator).
+    shard: Optional[int] = None
     blocks: List[int] = field(default_factory=list)
     # Per emitted token: id, behavior log-prob, producing policy version.
     tokens: List[int] = field(default_factory=list)
@@ -114,11 +129,13 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"request {req.request_id} needs {total} token rows > "
                 f"table capacity {cap}")
-        if self.allocator.blocks_for(total) > self.allocator.num_blocks:
+        # A request lives entirely on one shard, so the bound is the
+        # per-shard slice (= the whole pool when unsharded).
+        if self.allocator.blocks_for(total) > self.allocator.shard_num_blocks:
             raise ValueError(
-                f"request {req.request_id} can never fit the pool "
-                f"({total} rows > {self.allocator.num_blocks} pages x "
-                f"{self.allocator.block_size})")
+                f"request {req.request_id} can never fit one pool shard "
+                f"({total} rows > {self.allocator.shard_num_blocks} pages "
+                f"x {self.allocator.block_size})")
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
@@ -127,8 +144,9 @@ class ContinuousBatchingScheduler:
         req.state = RequestState.FINISHED
         req.finish_reason = reason
         req.finish_time = time.monotonic()
-        self.allocator.release(req.blocks)
+        self.allocator.release(req.blocks, req.shard or 0)
         req.blocks = []
+        req.shard = None
         if req.slot is not None:
             self.slots[req.slot] = None
             req.slot = None
@@ -138,14 +156,41 @@ class ContinuousBatchingScheduler:
     def _preempt(self, victim: Request) -> None:
         self.preemptions += 1
         victim.num_preemptions += 1
-        self.allocator.release(victim.blocks)
+        self.allocator.release(victim.blocks, victim.shard or 0)
         victim.blocks = []
+        victim.shard = None          # re-placed on re-admission
         if victim.slot is not None:
             self.slots[victim.slot] = None
             victim.slot = None
         self._admission_order.remove(victim)
         victim.state = RequestState.WAITING
         self.waiting.appendleft(victim)
+
+    # -- shard placement ------------------------------------------------------
+
+    def _live_slots_by_shard(self) -> List[int]:
+        live = [0] * self.allocator.num_shards
+        for r in self.running:
+            live[r.shard or 0] += 1
+        return live
+
+    def _place(self, need: int) -> Optional[int]:
+        """Home shard for an admission needing `need` pages, or None.
+
+        Fewest live slots wins (decode work balances across the mesh);
+        ties break to the most free pages, then the lowest shard id.
+        Single-shard allocators always place on shard 0, so the
+        unsharded scheduler is unchanged.
+        """
+        live = self._live_slots_by_shard()
+        best = None
+        for s in range(self.allocator.num_shards):
+            if not self.allocator.can_allocate(need, s):
+                continue
+            key = (live[s], -self.allocator.shard_free(s), s)
+            if best is None or key < best[0]:
+                best = (key, s)
+        return None if best is None else best[1]
 
     # -- the per-step decision -----------------------------------------------
 
@@ -171,24 +216,31 @@ class ContinuousBatchingScheduler:
         """
         preempted: List[Request] = []
 
-        # 1. Extend running requests that cross a page boundary.
+        # 1. Extend running requests that cross a page boundary.  Pool
+        # pressure is per-shard: only a victim on the same shard frees
+        # pages the starved request can use, so the LIFO choice walks
+        # that shard's admissions (the whole pool when unsharded).
         for req in list(self._admission_order):
             if req.slot is None:
                 continue
+            shard = req.shard or 0
             need = (
                 self.allocator.blocks_for(self._rows_needed(req, lookahead))
                 - len(req.blocks)
             )
-            while need > 0 and not self.allocator.can_allocate(need):
-                victim = self._admission_order[-1]
+            while need > 0 and not self.allocator.can_allocate(need, shard):
+                victim = next(
+                    r for r in reversed(self._admission_order)
+                    if (r.shard or 0) == shard)
                 self._preempt(victim)
                 preempted.append(victim)
                 if victim is req:
                     need = 0    # preempted itself; nothing to extend
             if need > 0:
-                req.blocks.extend(self.allocator.allocate(need))
+                req.blocks.extend(self.allocator.allocate(need, shard))
 
-        # 2. Admit from the waiting queue into free slots (FIFO).
+        # 2. Admit from the waiting queue into free slots (FIFO), placing
+        # each admission on its home shard.
         admitted: List[Request] = []
         while self.waiting:
             free_slots = [i for i, r in enumerate(self.slots) if r is None]
@@ -197,10 +249,12 @@ class ContinuousBatchingScheduler:
             req = self.waiting[0]
             need = self.allocator.blocks_for(
                 self._rows_needed(req, lookahead))
-            if not self.allocator.can_allocate(need):
+            shard = self._place(need)
+            if shard is None:
                 break
             self.waiting.popleft()
-            req.blocks = self.allocator.allocate(need)
+            req.shard = shard
+            req.blocks = self.allocator.allocate(need, shard)
             req.slot = free_slots[0]
             req.state = RequestState.RUNNING
             self.slots[req.slot] = req

@@ -18,8 +18,10 @@ from repro.distributed.sharding import (
     ShardingPolicy,
     batch_sharding,
     cache_shardings,
+    paged_pool_sharding,
     param_spec,
     params_shardings,
+    shard_paged_pool,
 )
 from repro.launch.mesh import make_debug_mesh
 from repro.models.registry import build
@@ -94,6 +96,17 @@ def test_cache_shardings_seq_vs_batch():
     }
     sh = cache_shardings(long_cache, mesh, shard_seq=True)
     assert sh["k"].spec == P(None, None, "data", None, None)
+
+
+def test_paged_pool_sharding_spec():
+    """The serve pool shards its NB (page) axis over 'data' — the axis
+    PR 2's [L, KV, NB, BS, Dh] layout was chosen to split on."""
+    mesh = _mesh16()
+    assert paged_pool_sharding(mesh).spec == P(
+        None, None, "data", None, None)
+    pool = {"k_pages": jnp.zeros((2, 2, 8, 4, 8)),
+            "v_pages": jnp.zeros((2, 2, 8, 4, 8))}
+    assert shard_paged_pool(pool, None) is pool   # mesh=None: identity
 
 
 # --- HLO collective parser ---------------------------------------------------

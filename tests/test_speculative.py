@@ -276,6 +276,57 @@ def test_spec_engine_token_exact_vs_nonspec_greedy(label, draft, k):
     assert eng.allocator.num_free == eng.allocator.num_blocks
 
 
+@pytest.mark.parametrize("label,draft", [
+    ("accept_all", ("params", PARAMS)),
+    ("adversarial", ("params", ADVERSARIAL_PARAMS)),
+])
+def test_spec_engine_adaptive_k_token_exact_and_adapts(label, draft):
+    """Draft-aware scheduling: adaptive k stays token-exact (the round
+    length never touches correctness) and the chosen-k histogram moves
+    the way the acceptance EMA says it should — pinned at the max for
+    an accept-all draft, collapsing toward 1 for an adversarial one."""
+    from repro.metrics.runtime_metrics import collect_serve_stats
+
+    k_max = 4
+    eng = ServeEngine(
+        BUNDLE, PARAMS, num_blocks=32, block_size=4, max_batch=2,
+        max_seq_len=64, temperature=1e-4, seed=0,
+        speculate_k=k_max, draft=draft, speculate_adaptive=True)
+    reqs = [eng.submit(r, n) for r, n in zip(PROMPTS, BUDGETS)]
+    trajs = {t.request_id: t for t in eng.run(max_steps=400)}
+    for rq, w in zip(reqs, GREEDY_WANT):
+        np.testing.assert_array_equal(trajs[rq.request_id].tokens, w)
+    stats = collect_serve_stats(eng)
+    assert stats["speculate_adaptive"] is True
+    hist = {int(k): v for k, v in stats["chosen_k_histogram"].items()}
+    assert sum(hist.values()) == eng.stats.spec_rounds > 0
+    if label == "accept_all":
+        # Acceptance EMA stays 1.0 -> every round drafts the full k.
+        assert set(hist) == {k_max}
+    else:
+        # Rejections drag the EMA down; later rounds must shrink k.
+        assert min(hist) < k_max
+
+
+def test_adaptive_k_ema_resets_on_admission():
+    """A slot's acceptance EMA belongs to its occupant: once a request
+    retires and a new one is admitted into the slot, the EMA restarts
+    optimistic (k back at the max) instead of inheriting the previous
+    occupant's rejections."""
+    eng = ServeEngine(
+        BUNDLE, PARAMS, num_blocks=32, block_size=4, max_batch=1,
+        max_seq_len=64, temperature=1e-4, seed=0,
+        speculate_k=4, draft=("params", ADVERSARIAL_PARAMS),
+        speculate_adaptive=True)
+    eng.submit(PROMPTS[0], BUDGETS[0])
+    eng.run(max_steps=100)
+    assert eng._accept_ema[0] < 1.0          # adversarial draft rejected
+    before = eng._chosen_k_hist.snapshot().get(4, 0)
+    eng.submit(PROMPTS[1], 4)
+    eng.step()   # admission resets the slot EMA -> this round drafts k=4
+    assert eng._chosen_k_hist.snapshot().get(4, 0) == before + 1
+
+
 def test_spec_engine_rollback_under_preemption_churn():
     """A pool too small for every request forces preemption mid-spec;
     re-prefill + pos-rewind rollback must not change a single token."""
