@@ -79,6 +79,16 @@ SERVE_METRICS = (
     # admissions into one dispatch (both sides measured on this host).
     Metric("burst.admission_speedup", True, True),
     Metric("burst.batched.admission_p50_ms", False, False),
+    # Prefix caching (PR-6 acceptance bar): at best-of N=4, computed
+    # prefill KV rows (prefix-cached vs dense) must drop >= 2x — the
+    # ratio counts token rows, not wall time, so it is deterministic
+    # for the fixed workload and gets a hard floor with no baseline
+    # band.  Token-exactness is the correctness bar: greedy shared
+    # output must equal the unshared engine's, every request.
+    Metric("best_of.prefill_cost_ratio", True, True, hard_min=2.0,
+           cap_only=True),
+    Metric("best_of.token_exact", True, True, hard_min=1.0,
+           cap_only=True),
 )
 
 RUNTIME_METRICS = (

@@ -118,14 +118,16 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None):
         speculate_k=args.speculate, draft=draft,
         batch_prefill=not args.no_batch_prefill,
         mesh=mesh, speculate_adaptive=args.speculate_adaptive,
+        prefix_cache=args.prefix_cache,
     )
     toks_np, prompts, answers = ds.sample_batch(args.requests)
     meta = {}
     for i in range(args.requests):
         row = toks_np[i]
         row = row[row != tok.pad_id]            # ragged: true prompt only
-        req = engine.submit(row, lengths[i % len(lengths)])
-        meta[req.request_id] = (prompts[i], answers[i])
+        for _ in range(max(args.best_of, 1)):
+            req = engine.submit(row, lengths[i % len(lengths)])
+            meta[req.request_id] = (prompts[i], answers[i])
     t0 = time.time()
     trajs = engine.run(max_steps=args.max_steps)
     dt = time.time() - t0
@@ -149,6 +151,20 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None):
         print(f"  sharded over {stats['num_shards']} shards: "
               f"free pages by shard {stats['pool_free_by_shard']}, "
               f"live slots by shard {stats['live_slots_by_shard']}")
+    if stats.get("prefix_cache"):
+        print(f"  prefix cache: hit rate "
+              f"{stats['prefix_hit_rate']:.2f} "
+              f"({stats['prefix_hits']}/{stats['prefix_queries']} "
+              f"admissions), token hit rate "
+              f"{stats['prefix_token_hit_rate']:.2f} "
+              f"({stats['prefix_matched_tokens']} matched / "
+              f"{stats['prefill_tokens']} computed), "
+              f"cow copies {stats['cow_copies']}, "
+              f"cached pages {stats['cached_pages']}, "
+              f"evictions {stats['cache_evictions']}")
+    if "reclaimed_window_pages" in stats:
+        print(f"  window reclamation (W={stats['reclaim_window']}): "
+              f"{stats['reclaimed_window_pages']} pages released")
     if args.speculate:
         dv = stats.get("draft_version")
         dtag = ("oracle/callable" if dv is None and engine.draft is not None
@@ -208,6 +224,15 @@ def main(argv=None) -> int:
                     help="continuous: adapt the per-round draft length "
                          "in [1, --speculate] from each slot's measured "
                          "acceptance-rate EMA")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous: content-address full KV pages and "
+                         "share resident prompt prefixes across requests "
+                         "(refcounted read-only pages + copy-on-write); "
+                         "prefill runs only the unmatched suffix")
+    ap.add_argument("--best-of", type=int, default=1,
+                    help="continuous: submit each prompt N times "
+                         "(best-of-N fan-out — the access pattern "
+                         "--prefix-cache collapses to ~1x prefill)")
     ap.add_argument("--no-batch-prefill", action="store_true",
                     help="continuous: prefill admissions one dispatch "
                          "per request (default stacks same-padded-"

@@ -70,6 +70,12 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
 
     Sharded engines (``mesh``) add per-shard pool and placement
     counters: free pages and live decode slots by shard.
+
+    Prefix-cached engines (``prefix_cache=True``) add the cache's
+    effectiveness counters: admission hit rate, matched vs computed
+    prefill tokens (the token-level hit rate), COW copies, resident
+    zero-ref cached pages and LRU evictions; window-reclaiming engines
+    report pages released behind the sliding window.
     """
     alloc = engine.allocator
     sched = engine.scheduler
@@ -104,6 +110,26 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
         out["num_shards"] = alloc.num_shards
         out["pool_free_by_shard"] = alloc.free_by_shard()
         out["live_slots_by_shard"] = sched._live_slots_by_shard()
+    if getattr(alloc, "prefix_cache", False):
+        matched = sched.prefix_matched_tokens
+        computed = engine.stats.prefill_tokens
+        out.update({
+            "prefix_cache": True,
+            "prefix_queries": sched.prefix_queries,
+            "prefix_hits": sched.prefix_hits,
+            "prefix_hit_rate": (
+                sched.prefix_hits / sched.prefix_queries
+                if sched.prefix_queries else 0.0),
+            "prefix_matched_tokens": matched,
+            "prefix_token_hit_rate": (
+                matched / (matched + computed)
+                if (matched + computed) else 0.0),
+            "cached_pages": alloc.num_cached,
+            "cache_evictions": alloc.evictions,
+        })
+    if getattr(engine, "_reclaim_window", None) is not None:
+        out["reclaim_window"] = engine._reclaim_window
+        out["reclaimed_window_pages"] = sched.reclaimed_pages
     return out
 
 

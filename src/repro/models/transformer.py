@@ -313,7 +313,9 @@ def decode_step_paged(
     The hoisted loop also gives each layer its *static* sliding window
     (``cfg.window_for_layer``), so gemma3-style local:global patterns
     run the paged path natively — the kernels mask reads outside the
-    window; old rows stay resident (pages are not reclaimed early).
+    window; rows behind it are never read, which is what lets the
+    scheduler's window reclamation (all-windowed archs) release whole
+    pages behind the widest window mid-flight.
 
     With ``mesh``/``slot_shard`` the pool is NB-sharded over the mesh's
     ``data`` axis and block tables carry shard-local page ids; the
@@ -596,6 +598,74 @@ def write_prefill_batch_to_pages(
         out_specs=(pool, pool), check_rep=False,
     )(cache_k, cache_v, pages["k_pages"], pages["v_pages"],
       blocks, prompt_lens, home_shard.astype(jnp.int32))
+    return {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def copy_page_rows(
+    pages: Dict,
+    src: jax.Array,           # [N] int32 source page ids (shard-local)
+    dst: jax.Array,           # [N] int32 destination page ids
+    rows: jax.Array,          # [N] int32 leading rows to copy per pair
+    home_shard: Optional[jax.Array] = None,   # [N] int32 (mesh only)
+    *,
+    mesh=None,
+    axis_name: str = "data",
+) -> Dict:
+    """Copy the leading ``rows[i]`` K/V rows of page ``src[i]`` into page
+    ``dst[i]`` across every layer and kv head — the prefix cache's
+    copy-on-write step, run before a divergent suffix appends into a
+    partially-matched shared page.
+
+    Same in-place discipline as the prefill writers: one
+    ``dynamic_slice`` read of the source tile plus one masked
+    read-select-writeback ``dynamic_update_slice`` per pair, so with the
+    pool donated the copy costs O(rows copied), not O(pool).  Rows past
+    ``rows[i]`` keep the destination's old contents.  Under a ``mesh``
+    both pages live on the pair's ``home_shard`` (page sharing is
+    shard-local); foreign shards mask ``rows`` to 0 and write nothing.
+    """
+    from repro.kernels.ref import masked_inplace_update
+
+    n = src.shape[0]
+
+    def copy_all(k_pages, v_pages, src, dst, rows):
+        bs = k_pages.shape[3]
+        zero = jnp.zeros((), jnp.int32)
+        sizes = (k_pages.shape[0], k_pages.shape[1], 1, bs,
+                 k_pages.shape[4])
+        for i in range(n):
+            valid = (jnp.arange(bs, dtype=jnp.int32)
+                     < rows[i])[None, None, None, :, None]
+            at_src = (zero, zero, src[i].astype(jnp.int32), zero, zero)
+            at_dst = (zero, zero, dst[i].astype(jnp.int32), zero, zero)
+            k_tile = jax.lax.dynamic_slice(k_pages, at_src, sizes)
+            v_tile = jax.lax.dynamic_slice(v_pages, at_src, sizes)
+            k_pages = masked_inplace_update(k_pages, k_tile, at_dst, valid)
+            v_pages = masked_inplace_update(v_pages, v_tile, at_dst, valid)
+        return k_pages, v_pages
+
+    from repro.kernels.ops import _sharded
+
+    if not _sharded(mesh, axis_name):
+        k_pages, v_pages = copy_all(
+            pages["k_pages"], pages["v_pages"], src, dst, rows)
+        return {"k_pages": k_pages, "v_pages": v_pages}
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(k_pages, v_pages, src, dst, rows, home):
+        idx = jax.lax.axis_index(axis_name)
+        local_rows = jnp.where(home == idx, rows, 0).astype(jnp.int32)
+        return copy_all(k_pages, v_pages, src, dst, local_rows)
+
+    pool = P(None, None, axis_name, None, None)
+    k_pages, v_pages = shard_map(
+        body, mesh=mesh,
+        in_specs=(pool, pool, P(), P(), P(), P()),
+        out_specs=(pool, pool), check_rep=False,
+    )(pages["k_pages"], pages["v_pages"], src, dst, rows,
+      home_shard.astype(jnp.int32))
     return {"k_pages": k_pages, "v_pages": v_pages}
 
 

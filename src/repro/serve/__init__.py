@@ -5,7 +5,12 @@ system* rather than a fixed-batch ``generate()`` loop:
 
 * ``paged_cache``  — free-list block allocator over a pooled KV cache
                      (fixed-size pages, per-request block tables,
-                     copy-free release on EOS).
+                     copy-free release on EOS).  With
+                     ``prefix_cache=True`` full pages are content-
+                     addressed (hash over token ids + policy version +
+                     arch config) and shared read-only across requests
+                     under refcounts, with copy-on-write for divergent
+                     appends and LRU eviction of zero-ref cached pages.
 * ``scheduler``    — continuous-batching scheduler: admit / preempt /
                      retire requests *between* decode steps so the
                      decode batch stays full instead of draining with
@@ -30,10 +35,15 @@ from repro.serve.engine import (
     ServedTrajectory,
 )
 from repro.serve.paged_cache import (
+    RECLAIMED,
     BlockAllocator,
     OutOfBlocks,
+    PrefixIndex,
+    PrefixKey,
+    PrefixMatch,
     ShardedBlockAllocator,
     make_allocator,
+    prefix_key,
 )
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
@@ -42,11 +52,15 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
+    "RECLAIMED",
     "BlockAllocator",
     "CallableDraft",
     "ContinuousBatchingScheduler",
     "ModelDraft",
     "OutOfBlocks",
+    "PrefixIndex",
+    "PrefixKey",
+    "PrefixMatch",
     "Request",
     "RequestState",
     "ServeEngine",
@@ -54,4 +68,5 @@ __all__ = [
     "ServedTrajectory",
     "ShardedBlockAllocator",
     "make_allocator",
+    "prefix_key",
 ]

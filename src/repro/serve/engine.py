@@ -60,6 +60,20 @@ the single-device engine, speculation and preemption included, and the
 per-shard pool buffers still update in place.  ``mesh=None`` is the
 single-shard special case of the same code path.
 
+**Prefix caching** (``prefix_cache=True``): full KV pages are
+content-addressed (chained hash over token ids, salted with the policy
+version and arch identity) and refcounted; admissions whose committed
+ids extend a resident prefix share those pages read-only and prefill
+only the unmatched suffix through the multi-token paged step — best-of-N
+fan-out pays ~1x prefill instead of Nx.  A match ending mid-page is
+resolved by copy-on-write *at admission prefill* (the matched rows are
+copied into the request's own fresh page before its divergent suffix
+appends), so decode and speculative writes only ever touch exclusively
+owned pages; an in-flight weight swap invalidates stale entries through
+the version salt alone.  Greedy output is token-exact with the unshared
+engine — speculation, preemption and sharding included (matches are
+shard-local; the scheduler prefers the shard with the longest match).
+
 **Adaptive speculation** (``speculate_adaptive=True``): a per-slot EMA
 of the measured draft acceptance rate adapts the per-round draft
 length between 1 and ``speculate_k`` — slots that keep rejecting stop
@@ -81,9 +95,10 @@ from repro.distributed.sharding import replicated, shard_paged_pool
 from repro.kernels.ops import mesh_data_size
 from repro.metrics.runtime_metrics import LagHistogram
 from repro.models.registry import ModelBundle
-from repro.models.transformer import write_prefill_batch_to_pages
+from repro.models.transformer import (copy_page_rows,
+                                      write_prefill_batch_to_pages)
 from repro.rollout.sampler import _top_p_filter, speculative_accept
-from repro.serve.paged_cache import make_allocator
+from repro.serve.paged_cache import PrefixKey, make_allocator, prefix_key
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
     Request,
@@ -139,6 +154,10 @@ class ServeStats:
     spec_rounds: int = 0
     drafted_tokens: int = 0
     accepted_tokens: int = 0
+    # Prefix cache: KV rows actually computed by prefill dispatches
+    # (suffix-only under a prefix hit) and COW page copies performed.
+    prefill_tokens: int = 0
+    cow_copies: int = 0
 
     def as_dict(self) -> Dict[str, Any]:
         d = dict(self.__dict__)
@@ -223,6 +242,8 @@ class ServeEngine:
         batch_prefill: bool = True,
         mesh: Any = None,
         speculate_adaptive: bool = False,
+        prefix_cache: bool = False,
+        window_reclaim: bool = True,
     ) -> None:
         """``speculate_k > 0`` turns on speculative decode; ``draft`` is
         one of ``("version", -n)`` (self-speculation from the store's
@@ -236,6 +257,16 @@ class ServeEngine:
         and must divide by the data-axis size.  ``speculate_adaptive``
         adapts the per-round draft length in ``[1, speculate_k]`` from
         each slot's measured acceptance EMA.
+
+        ``prefix_cache=True`` content-addresses full KV pages (hash over
+        token ids, salted with the policy version and arch identity):
+        admissions whose prompt prefix is already resident share those
+        pages read-only (refcounted) and prefill only the unmatched
+        suffix, with copy-on-write when the match ends mid-page — greedy
+        output stays token-exact with the unshared engine.
+        ``window_reclaim`` (on by default, a no-op unless EVERY layer is
+        windowed) releases pages entirely behind the widest sliding
+        window back to the pool.
         """
         if bundle.decode_step_paged is None:
             from repro.models.transformer import paged_arch_unsupported
@@ -263,11 +294,20 @@ class ServeEngine:
             self.params = jax.device_put(self.params, replicated(mesh))
         self.block_size = block_size
         max_blocks_per_request = -(-max_seq_len // block_size)
+        self.prefix_cache = bool(prefix_cache)
         self.allocator = make_allocator(
-            num_blocks, block_size, self.num_shards)
+            num_blocks, block_size, self.num_shards,
+            prefix_cache=self.prefix_cache)
+        windows = [bundle.cfg.window_for_layer(layer)
+                   for layer in range(bundle.cfg.n_layers)]
+        self._reclaim_window = (
+            max(windows) if window_reclaim and windows
+            and all(w is not None for w in windows) else None)
         self.scheduler = ContinuousBatchingScheduler(
             self.allocator, max_batch=max_batch,
-            max_blocks_per_request=max_blocks_per_request)
+            max_blocks_per_request=max_blocks_per_request,
+            prefix_fn=self._prefix_key if self.prefix_cache else None,
+            reclaim_window=self._reclaim_window)
         self.pages = shard_paged_pool(
             bundle.init_paged_cache(num_blocks, block_size), mesh)
         self.max_batch = max_batch
@@ -349,6 +389,13 @@ class ServeEngine:
         self.batch_prefill = bool(batch_prefill)
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
         self._draft_prefill_fns: Dict[Tuple[int, int], Any] = {}
+        # Prefix-cache dispatches: suffix-only prefills keyed by (padded
+        # suffix length, group size); COW copies keyed by group size
+        # (jit retraces per pool shape, so one cache serves the
+        # verifier and draft pools).
+        self._suffix_fns: Dict[Tuple[int, int], Any] = {}
+        self._draft_suffix_fns: Dict[Tuple[int, int], Any] = {}
+        self._cow_fns: Dict[int, Any] = {}
 
         # -- speculative decode ---------------------------------------------
         self.speculate_k = max(int(speculate_k), 0)
@@ -419,6 +466,40 @@ class ServeEngine:
             self.params, self.version = params, version
             self.stats.swaps += 1
             self._refresh_draft()
+
+    # -- prefix cache ---------------------------------------------------------
+
+    @staticmethod
+    def _committed_ids(req: Request) -> np.ndarray:
+        """prompt + all emitted tokens except the pending one — exactly
+        the rows a (re)prefill must make resident."""
+        if not req.tokens:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+
+    def _prefix_key(self, req: Request) -> PrefixKey:
+        """Version-salted content address of `req`'s committed ids.
+
+        The salt folds in the policy version and arch identity, so an
+        in-flight weight swap invalidates every stale entry without a
+        flush — KV rows are a function of (token ids, params, arch).
+        Cached per (version, length): recomputed only after a swap or
+        when emitted tokens extend the committed ids (re-admission).
+        """
+        ids = self._committed_ids(req)
+        cached = getattr(req, "_pkey", None)
+        if cached is not None and cached[0] == (self.version, len(ids)):
+            return cached[1]
+        cfg = self.bundle.cfg
+        salt = (
+            f"{cfg.name}|{cfg.arch_type}|L{cfg.n_layers}|d{cfg.d_model}"
+            f"|h{cfg.n_heads}x{cfg.n_kv_heads}|w{cfg.sliding_window}"
+            f"/{cfg.global_every}|v{self.version}|bs{self.block_size}"
+        ).encode()
+        key = prefix_key(ids, self.block_size, salt)
+        req._pkey = ((self.version, len(ids)), key)
+        return key
 
     # -- speculative draft slot ----------------------------------------------
 
@@ -542,14 +623,28 @@ class ServeEngine:
     def _prefill_admitted(self, admitted: List[Request],
                           finished: List[ServedTrajectory]) -> None:
         """(Re)compute KV rows for every admitted request; same-padded-
-        length admissions share one prefill dispatch (batch_prefill)."""
+        length admissions share one prefill dispatch (batch_prefill).
+
+        Prefix-cache hits take the *suffix* path instead: their matched
+        rows are already resident in shared pages, so only the unmatched
+        tail runs (plus a COW copy when the match ends mid-page).  Dense
+        (unmatched) prefills dispatch first and suffix prefills follow
+        in admission order — an admission can only match pages indexed
+        by *earlier* admissions, so every page a suffix dispatch reads
+        was written by an earlier dispatch of this round or a previous
+        round.
+        """
         if not admitted:
             return
-        groups: Dict[int, List] = {}
+        dense: List = []
+        shared: List = []
         for req in admitted:
-            ids = req.prompt if not req.tokens else np.concatenate(
-                [req.prompt, np.asarray(req.tokens[:-1], np.int32)])
+            ids = self._committed_ids(req)
             plen = int(ids.shape[0])
+            item = (req, ids, plen)
+            (shared if req.num_matched > 0 else dense).append(item)
+        groups: Dict[int, List] = {}
+        for req, ids, plen in dense:
             padded = -(-plen // self.block_size) * self.block_size
             groups.setdefault(padded, []).append((req, ids, plen))
         for padded in sorted(groups):
@@ -557,6 +652,140 @@ class ServeEngine:
             size = len(items) if self.batch_prefill else 1
             for lo in range(0, len(items), size):
                 self._prefill_group(padded, items[lo:lo + size], finished)
+        # Only runs of requests sharing exactly the same source pages
+        # (best-of-N siblings) batch into one suffix dispatch — such
+        # requests cannot depend on each other's writes.
+        i = 0
+        while i < len(shared):
+            j = i + 1
+            if self.batch_prefill:
+                while j < len(shared) and \
+                        self._suffix_compatible(shared[i], shared[j]):
+                    j += 1
+            self._suffix_group(shared[i:j], finished)
+            i = j
+
+    @staticmethod
+    def _suffix_compatible(a, b) -> bool:
+        ra, _, pa = a
+        rb, _, pb = b
+        nsf = ra.num_shared_full
+        return (pa == pb and ra.num_matched == rb.num_matched
+                and ra.shard == rb.shard and nsf == rb.num_shared_full
+                and ra.blocks[:nsf] == rb.blocks[:nsf]
+                and ra.cow_src == rb.cow_src)
+
+    def _cow_fn(self, n: int):
+        fn = self._cow_fns.get(n)
+        if fn is None:
+            mesh = self.mesh
+
+            def _cow(pages, src, dst, rows, home):
+                return copy_page_rows(pages, src, dst, rows, home,
+                                      mesh=mesh)
+
+            fn = self._cow_fns[n] = jax.jit(_cow, donate_argnums=(0,))
+        return fn
+
+    def _suffix_group(self, items: List,
+                      finished: List[ServedTrajectory]) -> None:
+        """COW copies + suffix-only prefill for one compatible group."""
+        n = len(items)
+        req0, _, plen0 = items[0]
+        m = req0.num_matched
+        t = plen0 - m                      # unmatched suffix length
+        t_pad = -(-t // 4) * 4             # pad for jit-cache reuse
+        width = self._tables.shape[1]
+        toks = np.full((n, t_pad), PAD, np.int32)
+        tables = np.zeros((n, width), np.int32)
+        pos = np.full((n,), m, np.int32)
+        cap = np.zeros((n,), np.int32)
+        home = np.zeros((n,), np.int32)
+        for i, (req, ids, plen) in enumerate(items):
+            toks[i, :t] = ids[m:]
+            tables[i] = self.allocator.padded_table(req.blocks, width)
+            cap[i] = plen
+            home[i] = req.shard or 0
+        if req0.cow_src is not None:
+            # The match ends mid-page: copy the matched rows of the
+            # shared source page into each request's own fresh page
+            # (the table already points there), then drop the source
+            # ref the scheduler reserved.
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)
+            rows = np.zeros((n,), np.int32)
+            for i, (req, ids, plen) in enumerate(items):
+                src[i], rows[i] = req.cow_src
+                dst[i] = req.blocks[req.num_shared_full]
+            fn = self._cow_fn(n)
+            args = (jnp.asarray(src), jnp.asarray(dst),
+                    jnp.asarray(rows), jnp.asarray(home))
+            self.pages = fn(self.pages, *args)
+            if isinstance(self.draft, ModelDraft):
+                self.draft.pages = fn(self.draft.pages, *args)
+            for req, _, _ in items:
+                self.allocator.release([req.cow_src[0]], req.shard or 0)
+                req.cow_src = None
+            self.stats.cow_copies += n
+        key = (t_pad, n)
+        fn = self._suffix_fns.get(key)
+        if fn is None:
+            fn = self._suffix_fns[key] = self._make_suffix()
+        toks_d = jnp.asarray(toks)
+        tables_d = jnp.asarray(tables)
+        pos_d = jnp.asarray(pos)
+        cap_d = jnp.asarray(cap)
+        home_d = jnp.asarray(home)
+        tlast = jnp.full((n,), t - 1, jnp.int32)
+        tok, lp, self.pages = fn(
+            self.params, toks_d, self.pages, tables_d, pos_d, cap_d,
+            home_d, tlast, self._next_key())
+        self.stats.prefills += n
+        self.stats.prefill_dispatches += 1
+        self.stats.prefill_tokens += n * t
+        if isinstance(self.draft, ModelDraft):
+            dfn = self._draft_suffix_fns.get(key)
+            if dfn is None:
+                dfn = self._draft_suffix_fns[key] = \
+                    self._make_suffix(draft=True)
+            self.draft.pages = dfn(
+                self.draft.params, toks_d, self.draft.pages, tables_d,
+                pos_d, cap_d, home_d)
+        tok_np, lp_np = np.asarray(tok), np.asarray(lp)
+        for i, (req, ids, plen) in enumerate(items):
+            slot = req.slot
+            self._tables[slot] = tables[i]
+            self._pos[slot] = plen
+            if req.tokens:                     # resume after preemption
+                self._last_tok[slot] = req.tokens[-1]
+            else:
+                self._record(req, int(tok_np[i]), float(lp_np[i]),
+                             finished)
+
+    def _make_suffix(self, draft: bool = False):
+        """Suffix-only prefill: T unmatched tokens through the
+        multi-token paged step (writes their rows, attends over the
+        shared prefix), sampling from the last true suffix position.
+        The draft variant fills the draft pool and discards logits."""
+        bundle = self.draft.bundle if draft else self.bundle
+        sample = self._sample
+        kernel_mode = self._kernel_mode
+        mesh = self.mesh
+
+        def _suffix(params, tokens, pages, tables, pos, cap, home,
+                    tlast=None, key=None):
+            ones = jnp.ones((tokens.shape[0],), bool)
+            out, pages = bundle.decode_step_paged_multi(
+                params, tokens, pages, tables, pos, ones, cap,
+                kernel_mode=kernel_mode, mesh=mesh, slot_shard=home)
+            if draft:
+                return pages
+            last = jnp.take_along_axis(
+                out.logits, tlast[:, None, None], axis=1)[:, 0]
+            tok, lp = sample(last, key)
+            return tok, lp, pages
+
+        return jax.jit(_suffix, donate_argnums=(2,))
 
     def _prefill_group(self, padded: int, items: List,
                        finished: List[ServedTrajectory]) -> None:
@@ -583,6 +812,7 @@ class ServeEngine:
             self.pages, self._next_key())
         self.stats.prefills += n
         self.stats.prefill_dispatches += 1
+        self.stats.prefill_tokens += int(plens.sum())
         if isinstance(self.draft, ModelDraft):
             dfn = self._draft_prefill_fns.get(key)
             if dfn is None:
@@ -715,6 +945,8 @@ class ServeEngine:
                 self._tables[slot] = self.allocator.padded_table(
                     req.blocks, self._tables.shape[1])
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
+        if self.prefix_cache:
+            self._assert_write_pages_private()
         if not self._active.any():
             return finished
         if self.speculate_k:
@@ -740,6 +972,25 @@ class ServeEngine:
                 self._record(req, int(toks_np[t, slot]),
                              float(lps_np[t, slot]), finished)
         return finished
+
+    def _assert_write_pages_private(self) -> None:
+        """Invariant guard: the page a slot's next decode write lands in
+        must be exclusively owned (ref 1).  Shared pages are read-only;
+        matched full pages sit strictly below the write position and a
+        mid-page match was COW'd at prefill — a violation here means a
+        refcount/COW bug, caught before it corrupts another request."""
+        for req in self.scheduler.running:
+            idx = int(self._pos[req.slot]) // self.block_size
+            if idx >= len(req.blocks):
+                continue
+            page = req.blocks[idx]
+            if page >= 0:
+                refs = self.allocator.ref(page, req.shard or 0)
+                if refs != 1:
+                    raise RuntimeError(
+                        f"request {req.request_id}: decode write page "
+                        f"{page} has refcount {refs} (expected 1) — "
+                        f"copy-on-write invariant violated")
 
     def _choose_k(self) -> int:
         """Per-round draft length.

@@ -41,11 +41,12 @@ import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.paged_cache import BlockAllocator
+from repro.serve.paged_cache import (BlockAllocator, PrefixKey, PrefixMatch,
+                                     RECLAIMED)
 
 
 class RequestState(enum.Enum):
@@ -79,6 +80,15 @@ class Request:
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
     num_preemptions: int = 0
+    # Prefix-cache bookkeeping, set at admission: how many leading
+    # token rows are already resident (shared pages), and — when the
+    # match ends mid-page — the source page whose leading `cow_rows`
+    # rows the engine must copy into `blocks[num_shared_full]` before
+    # its suffix prefill (copy-on-write; the source ref is held until
+    # the copy lands).
+    num_matched: int = 0
+    num_shared_full: int = 0
+    cow_src: Optional[Tuple[int, int]] = None   # (page, rows)
 
     @property
     def prompt_len(self) -> int:
@@ -100,14 +110,27 @@ class ContinuousBatchingScheduler:
         *,
         max_batch: int,
         max_blocks_per_request: int,
+        prefix_fn: Optional[Callable[[Request], PrefixKey]] = None,
+        reclaim_window: Optional[int] = None,
     ) -> None:
         self.allocator = allocator
         self.max_batch = max_batch
         self.max_blocks_per_request = max_blocks_per_request
+        # Content address of a request's committed ids (engine-provided,
+        # version-salted).  None disables prefix matching at admission.
+        self.prefix_fn = prefix_fn
+        # Widest attention window across layers when EVERY layer is
+        # windowed: pages entirely behind it are released back to the
+        # pool each round.  None keeps all pages resident.
+        self.reclaim_window = reclaim_window
         self.waiting: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._admission_order: List[Request] = []   # oldest first
         self.preemptions = 0
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefix_matched_tokens = 0
+        self.reclaimed_pages = 0
 
     # -- introspection -------------------------------------------------------
 
@@ -139,14 +162,32 @@ class ContinuousBatchingScheduler:
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
+    def _release_all(self, req: Request) -> None:
+        """Drop every page reference `req` holds (RECLAIMED sentinels
+        were already released; a pending COW source ref too)."""
+        shard = req.shard or 0
+        self.allocator.release(
+            [b for b in req.blocks if b != RECLAIMED], shard)
+        if req.cow_src is not None:
+            self.allocator.release([req.cow_src[0]], shard)
+            req.cow_src = None
+        req.blocks = []
+        req.shard = None
+        req.num_matched = 0
+        req.num_shared_full = 0
+
     def retire(self, req: Request, reason: str) -> None:
-        """Finish a request: release its pages copy-free, free the slot."""
+        """Finish a request: release its pages copy-free, free the slot.
+
+        With prefix caching on, "release" only drops this request's
+        references — pages other live block tables point at stay put,
+        and registered pages park on the evictable LRU for future
+        matches instead of returning to the free list outright.
+        """
         req.state = RequestState.FINISHED
         req.finish_reason = reason
         req.finish_time = time.monotonic()
-        self.allocator.release(req.blocks, req.shard or 0)
-        req.blocks = []
-        req.shard = None
+        self._release_all(req)
         if req.slot is not None:
             self.slots[req.slot] = None
             req.slot = None
@@ -156,9 +197,7 @@ class ContinuousBatchingScheduler:
     def _preempt(self, victim: Request) -> None:
         self.preemptions += 1
         victim.num_preemptions += 1
-        self.allocator.release(victim.blocks, victim.shard or 0)
-        victim.blocks = []
-        victim.shard = None          # re-placed on re-admission
+        self._release_all(victim)
         if victim.slot is not None:
             self.slots[victim.slot] = None
             victim.slot = None
@@ -174,20 +213,36 @@ class ContinuousBatchingScheduler:
             live[r.shard or 0] += 1
         return live
 
-    def _place(self, need: int) -> Optional[int]:
-        """Home shard for an admission needing `need` pages, or None.
+    def _place(self, total: int,
+               matches: Optional[List[PrefixMatch]] = None
+               ) -> Optional[int]:
+        """Home shard for an admission needing `total` pages, or None.
 
-        Fewest live slots wins (decode work balances across the mesh);
-        ties break to the most free pages, then the lowest shard id.
-        Single-shard allocators always place on shard 0, so the
+        The shard holding the **longest resident prefix match** wins
+        (page ids are shard-local, so a match is only usable on its own
+        shard); then fewest live slots (decode work balances across the
+        mesh); ties break to the most free pages, then the lowest shard
+        id.  Single-shard allocators always place on shard 0, so the
         unsharded scheduler is unchanged.
         """
         live = self._live_slots_by_shard()
         best = None
         for s in range(self.allocator.num_shards):
+            m = matches[s] if matches else PrefixMatch()
+            # Fresh pages to pop, plus revivals: sharing a zero-ref
+            # cached page pulls it off the evictable LRU, shrinking
+            # allocatable capacity by one just like a fresh pop.
+            need = total - len(m.full_pages)
+            for p in m.full_pages:
+                if self.allocator.ref(p, s) == 0:
+                    need += 1
+            if m.cow_page is not None and \
+                    self.allocator.ref(m.cow_page, s) == 0:
+                need += 1
             if not self.allocator.can_allocate(need, s):
                 continue
-            key = (live[s], -self.allocator.shard_free(s), s)
+            key = (-m.matched_tokens, live[s],
+                   -self.allocator.shard_free(s), s)
             if best is None or key < best[0]:
                 best = (key, s)
         return None if best is None else best[1]
@@ -216,6 +271,26 @@ class ContinuousBatchingScheduler:
         """
         preempted: List[Request] = []
 
+        # 0. Window reclamation: when every layer's attention is
+        # windowed, KV rows at positions <= q - W are masked for all
+        # future queries q' >= q, so pages entirely behind the widest
+        # window can go back to the pool.  The table entry becomes a
+        # RECLAIMED sentinel (later pages keep their positional slots;
+        # padded_table maps it to page 0, whose garbage the window mask
+        # hides).
+        if self.reclaim_window is not None:
+            bs = self.allocator.block_size
+            for req in self.running:
+                horizon = req.num_cached - self.reclaim_window
+                for j, b in enumerate(req.blocks):
+                    if (j + 1) * bs - 1 > horizon:
+                        break
+                    if b == RECLAIMED:
+                        continue
+                    self.allocator.release([b], req.shard or 0)
+                    req.blocks[j] = RECLAIMED
+                    self.reclaimed_pages += 1
+
         # 1. Extend running requests that cross a page boundary.  Pool
         # pressure is per-shard: only a victim on the same shard frees
         # pages the starved request can use, so the LIFO choice walks
@@ -240,24 +315,72 @@ class ContinuousBatchingScheduler:
                 req.blocks.extend(self.allocator.allocate(need, shard))
 
         # 2. Admit from the waiting queue into free slots (FIFO), placing
-        # each admission on its home shard.
+        # each admission on its home shard — preferring the shard that
+        # holds the longest resident prefix of its committed ids, whose
+        # pages it then shares (refcount bump) instead of recomputing.
         admitted: List[Request] = []
         while self.waiting:
             free_slots = [i for i, r in enumerate(self.slots) if r is None]
             if not free_slots:
                 break
             req = self.waiting[0]
-            need = self.allocator.blocks_for(
+            total = self.allocator.blocks_for(
                 self._rows_needed(req, lookahead))
-            shard = self._place(need)
+            key, matches = self._match(req)
+            shard = self._place(total, matches)
             if shard is None:
                 break
             self.waiting.popleft()
             req.shard = shard
-            req.blocks = self.allocator.allocate(need, shard)
+            self._commit_match(req, key,
+                               matches[shard] if matches else None,
+                               total, shard)
             req.slot = free_slots[0]
             req.state = RequestState.RUNNING
             self.slots[req.slot] = req
             self._admission_order.append(req)
             admitted.append(req)
         return admitted, preempted
+
+    # -- prefix matching at admission -----------------------------------------
+
+    def _match(self, req: Request
+               ) -> Tuple[Optional[PrefixKey],
+                          Optional[List[PrefixMatch]]]:
+        """Per-shard resident-prefix matches for `req`, or (None, None)
+        when prefix caching is off.  At least one token is always left
+        to compute — the admission must produce a logit to sample."""
+        if self.prefix_fn is None or \
+                not getattr(self.allocator, "prefix_cache", False):
+            return None, None
+        key = self.prefix_fn(req)
+        limit = req.num_cached - 1
+        self.prefix_queries += 1
+        return key, [self.allocator.lookup(key, limit, s)
+                     for s in range(self.allocator.num_shards)]
+
+    def _commit_match(self, req: Request, key: Optional[PrefixKey],
+                      match: Optional[PrefixMatch], total: int,
+                      shard: int) -> None:
+        """Build `req.blocks`: shared matched pages first (pinned before
+        any allocation can evict them), then fresh pages; reserve the
+        COW source and index the fresh pages for future admissions."""
+        if match is None:
+            req.blocks = self.allocator.allocate(total, shard)
+            return
+        for p in match.full_pages:
+            self.allocator.share(p, shard)
+        if match.cow_page is not None and match.cow_rows > 0:
+            self.allocator.share(match.cow_page, shard)
+            req.cow_src = (match.cow_page, match.cow_rows)
+        fresh = self.allocator.allocate(
+            total - len(match.full_pages), shard)
+        req.blocks = list(match.full_pages) + fresh
+        req.num_shared_full = len(match.full_pages)
+        req.num_matched = match.matched_tokens
+        if match.matched_tokens > 0:
+            self.prefix_hits += 1
+            self.prefix_matched_tokens += match.matched_tokens
+        if key is not None:
+            self.allocator.register(key, req.blocks,
+                                    len(match.full_pages), shard)

@@ -1,0 +1,295 @@
+"""Prefix sharing in the paged KV cache: hardened release, refcount
+lifecycle + LRU eviction of zero-ref cached pages, chain-hash
+content addressing, best-of-N token-exactness vs the unshared engine
+(greedy, speculative, sharded), COW on mid-page divergence, preemption
+churn, version-salt invalidation on in-flight weight swaps, and
+sliding-window page reclamation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import get_tokenizer
+from repro.models.registry import build
+from repro.runtime import PolicyStore
+from repro.serve import (
+    BlockAllocator,
+    OutOfBlocks,
+    ServeEngine,
+    ShardedBlockAllocator,
+    prefix_key,
+)
+
+TOK = get_tokenizer()
+CFG = ModelConfig(
+    name="prefix-test", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=TOK.vocab_size,
+)
+BUNDLE = build(CFG)
+PARAMS = BUNDLE.init(jax.random.PRNGKey(0))
+
+PROMPTS = [np.asarray(TOK.encode(p), np.int32)
+           for p in ("12+345=?#", "998-76=?#")]
+
+
+def _engine(prefix, **kw):
+    defaults = dict(num_blocks=64, block_size=4, max_batch=4,
+                    max_seq_len=64, temperature=1e-4, seed=0)
+    defaults.update(kw)
+    return ServeEngine(BUNDLE, kw.pop("params", PARAMS),
+                       prefix_cache=prefix, **defaults)
+
+
+def _serve_best_of(eng, n=4, budget=8, prompts=PROMPTS):
+    """Each prompt submitted `n` times; greedy -> identical siblings."""
+    rid = 0
+    for p in prompts:
+        for _ in range(n):
+            eng.submit(p, budget, request_id=f"r{rid}")
+            rid += 1
+    return {t.request_id: np.asarray(t.tokens)
+            for t in eng.run(max_steps=600)}
+
+
+# --- hardened release (satellite 1) -----------------------------------------
+
+
+@pytest.mark.parametrize("sharded", [False, True])
+def test_release_rejects_double_free_and_out_of_range(sharded):
+    if sharded:
+        a = ShardedBlockAllocator(8, 4, num_shards=2)
+    else:
+        a = BlockAllocator(8, 4)
+    blocks = a.allocate(2)
+    a.release(blocks)
+    with pytest.raises(ValueError, match="double free"):
+        a.release(blocks[:1])
+    with pytest.raises(ValueError, match="out of range"):
+        a.release([a.shard_num_blocks])
+    with pytest.raises(ValueError, match="out of range"):
+        a.release([-2])
+    # the failed releases corrupted nothing
+    assert a.num_free == a.num_blocks if not sharded else True
+    got = a.allocate(a.shard_num_blocks)
+    assert len(set(got)) == a.shard_num_blocks
+
+
+def test_release_double_free_detected_for_shared_pages():
+    a = BlockAllocator(4, 4, prefix_cache=True)
+    (b,) = a.allocate(1)
+    a.share(b)                       # ref 2
+    a.release([b]), a.release([b])   # both owners drop
+    with pytest.raises(ValueError, match="double free"):
+        a.release([b])
+
+
+# --- refcount lifecycle + evictable LRU -------------------------------------
+
+
+def _key_for(ids, bs=4, salt=b"s"):
+    return prefix_key(np.asarray(ids, np.int32), bs, salt)
+
+
+def test_refcount_lifecycle_and_lru_eviction():
+    a = BlockAllocator(4, 4, prefix_cache=True)
+    key = _key_for(list(range(8)))           # 2 full pages
+    blocks = a.allocate(2)
+    a.register(key, blocks, 0)
+    assert a.num_indexed > 0
+
+    # release -> pages park on the evictable LRU, still matchable
+    a.release(blocks)
+    assert a.num_cached == 2 and a.num_free == 4
+    m = a.lookup(key, limit=7)
+    assert m.full_pages == blocks[:1]        # limit 7 caps at 1 full page
+    m = a.lookup(key, limit=8)
+    assert m.full_pages == blocks and m.matched_tokens == 8
+
+    # share revives from the LRU: ref 0 -> 1, no longer evictable
+    a.share(blocks[0])
+    assert a.ref(blocks[0]) == 1 and a.num_cached == 1
+    with pytest.raises(ValueError, match="cannot share"):
+        a.share(a.allocate(2)[0] if False else 3)  # page 3 is free
+
+    # pool pressure: free pages go first, then the LRU evicts the
+    # remaining parked page and drops its index entries
+    a.allocate(3)
+    assert a.evictions == 1 and a.num_cached == 0
+    # the evicted page's entries are gone; the pinned (live) page 0 is
+    # still indexed and matchable
+    m = a.lookup(key, limit=8)
+    assert m.full_pages == blocks[:1] and m.matched_tokens == 4
+    with pytest.raises(OutOfBlocks):
+        a.allocate(1)                        # pinned share is not evictable
+
+
+def test_flush_returns_cached_pages_to_free_list():
+    a = BlockAllocator(4, 4, prefix_cache=True)
+    key = _key_for(list(range(8)))
+    blocks = a.allocate(2)
+    a.register(key, blocks, 0)
+    a.release(blocks)
+    a.flush()
+    assert a.num_cached == 0 and a.num_indexed == 0
+    assert a.num_free == 4
+    assert a.lookup(key, limit=8).matched_tokens == 0
+
+
+# --- content addressing ------------------------------------------------------
+
+
+def test_prefix_key_chain_and_salt():
+    ids = list(range(10))
+    k1 = _key_for(ids, bs=4, salt=b"v0")
+    assert len(k1.chain) == 2 and k1.tail == (8, 9)
+    # chain hash j certifies pages 0..j: a change in page 0 moves BOTH
+    k2 = _key_for([99] + ids[1:], bs=4, salt=b"v0")
+    assert k1.chain[0] != k2.chain[0] and k1.chain[1] != k2.chain[1]
+    # same ids, different salt (policy version / arch) -> disjoint keys
+    k3 = _key_for(ids, bs=4, salt=b"v1")
+    assert k1.chain[0] != k3.chain[0] and k1.root != k3.root
+
+
+def test_lookup_mid_page_divergence_yields_cow():
+    a = BlockAllocator(8, 4, prefix_cache=True)
+    key = _key_for([0, 1, 2, 3, 4, 5, 6, 7])
+    blocks = a.allocate(2)
+    a.register(key, blocks, 0)
+    # diverges inside page 1 (two common rows) -> COW source match
+    other = _key_for([0, 1, 2, 3, 4, 5, 99, 98])
+    m = a.lookup(other, limit=7)
+    assert m.full_pages == blocks[:1]
+    assert m.cow_page == blocks[1] and m.cow_rows == 2
+    assert m.matched_tokens == 6
+    # a fully matching tail page is shared outright (no COW)
+    m = a.lookup(key, limit=8)
+    assert m.full_pages == blocks and m.cow_page is None
+
+
+# --- engine: best-of-N exactness + prefill savings (tentpole) ---------------
+
+
+@pytest.mark.parametrize("speculate", [0, 3])
+def test_best_of_token_exact_and_prefill_savings(speculate):
+    kw = {}
+    if speculate:
+        kw = dict(speculate_k=speculate, draft=("params", PARAMS))
+    want = _serve_best_of(_engine(False, **kw))
+    eng = _engine(True, **kw)
+    got = _serve_best_of(eng)
+    assert set(want) == set(got)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    # N=4 dense prefills collapsed to ~1 per prompt + cheap suffixes
+    assert eng.stats.prefill_tokens < sum(len(p) for p in PROMPTS) * 2
+    assert eng.scheduler.prefix_hits > 0
+    assert eng.stats.cow_copies > 0          # prompts diverge mid-page
+    # every reference dropped on retire; evictable pages still count free
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_preemption_churn_token_exact():
+    """A pool too small for the stream forces preempt/re-admit cycles;
+    re-prefill through the cache (and eviction under pressure) must not
+    change a single greedy token."""
+    kw = dict(num_blocks=10, block_size=4, max_batch=3, max_seq_len=48)
+    want = _serve_best_of(_engine(False, **kw), n=3, budget=10)
+    eng = _engine(True, **kw)
+    got = _serve_best_of(eng, n=3, budget=10)
+    assert eng.stats.preemptions > 0
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+# --- version salt: in-flight weight swap invalidates ------------------------
+
+
+def test_version_salt_invalidates_after_swap():
+    store = PolicyStore(PARAMS, capacity=4)
+    eng = ServeEngine(BUNDLE, store=store, num_blocks=64, block_size=4,
+                      max_batch=2, max_seq_len=64, temperature=1e-4,
+                      seed=0, prefix_cache=True)
+    eng.submit(PROMPTS[0], 6, request_id="warm")
+    eng.run(max_steps=200)
+    hits_before = eng.scheduler.prefix_hits
+
+    p2 = jax.tree.map(lambda x: x + 0.01, PARAMS)
+    store.publish(p2)
+    eng.submit(PROMPTS[0], 6, request_id="postswap")
+    (traj,) = eng.run(max_steps=200)
+    # v0-salted entries are unreachable under v1: no stale-KV sharing
+    assert eng.scheduler.prefix_hits == hits_before
+
+    fresh = ServeEngine(BUNDLE, p2, num_blocks=64, block_size=4,
+                        max_batch=2, max_seq_len=64, temperature=1e-4,
+                        seed=0)
+    fresh.submit(PROMPTS[0], 6, request_id="postswap")
+    (want,) = fresh.run(max_steps=200)
+    np.testing.assert_array_equal(traj.tokens, want.tokens)
+
+
+# --- sliding-window page reclamation (satellite 2) --------------------------
+
+
+WIN_CFG = CFG.replace(name="prefix-window-test", sliding_window=6,
+                      global_every=5)    # both layers windowed
+WIN_BUNDLE = build(WIN_CFG)
+WIN_PARAMS = WIN_BUNDLE.init(jax.random.PRNGKey(1))
+
+
+def test_window_reclamation_token_exact():
+    """All-windowed arch: pages entirely behind the widest window are
+    released mid-flight; emitted tokens must match the non-reclaiming
+    engine exactly (the freed rows were mask-invisible)."""
+    def _run(reclaim):
+        eng = ServeEngine(
+            WIN_BUNDLE, WIN_PARAMS, num_blocks=32, block_size=4,
+            max_batch=2, max_seq_len=64, temperature=1e-4, seed=0,
+            window_reclaim=reclaim)
+        for i, p in enumerate(PROMPTS):
+            eng.submit(p, 14, request_id=f"w{i}")
+        out = {t.request_id: np.asarray(t.tokens)
+               for t in eng.run(max_steps=400)}
+        return out, eng
+
+    want, base = _run(False)
+    got, eng = _run(True)
+    assert base._reclaim_window is None and eng._reclaim_window == 6
+    assert eng.scheduler.reclaimed_pages > 0
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    # mixed local:global archs must NOT reclaim (global layers need all)
+    mixed = ServeEngine(build(CFG.replace(name="mix", sliding_window=4,
+                                          global_every=2)),
+                        WIN_PARAMS, num_blocks=8, block_size=4,
+                        max_batch=1, max_seq_len=32)
+    assert mixed._reclaim_window is None
+
+
+# --- sharded placement (CI: 8 fake CPU devices) -----------------------------
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (set XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+@pytest.mark.parametrize("speculate", [0, 2])
+def test_sharded_best_of_token_exact(speculate):
+    from repro.launch.mesh import make_debug_mesh
+
+    data = min(len(jax.devices()), 8)
+    mesh = make_debug_mesh(data=data)
+    kw = dict(num_blocks=8 * data, block_size=4, max_batch=4,
+              max_seq_len=48)
+    if speculate:
+        kw.update(speculate_k=speculate, draft=("params", PARAMS))
+    want = _serve_best_of(_engine(False, **kw), budget=6)
+    eng = _engine(True, mesh=mesh, **kw)
+    got = _serve_best_of(eng, budget=6)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    # best-of siblings landed on the match's home shard and shared pages
+    assert eng.scheduler.prefix_hits > 0
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    assert all(s.num_free == s.num_blocks for s in eng.allocator._shards)
