@@ -71,7 +71,18 @@ def run(
             t0 = time.perf_counter()
             res = run_async_rl(cfg)
             dt = time.perf_counter() - t0
-            env_steps = len(res.returns) * n_actors * rollout_steps
+            # Consumed items come from the queue's own counters (the
+            # same snapshot live telemetry reports): `admitted` counts
+            # gate-passing pops, i.e. exactly the items the learner
+            # stepped on (a threaded producer may leave extras buffered
+            # in `depth`; those did no learner work).
+            qs = res.runtime_stats["queue"]
+            consumed = qs["admitted"]
+            if consumed != len(res.returns):
+                print(f"warning: queue says {consumed} consumed items, "
+                      f"learner logged {len(res.returns)} phases")
+                consumed = len(res.returns)
+            env_steps = consumed * n_actors * rollout_steps
             out[regime] = env_steps / dt
     out["threaded_speedup"] = (
         out["threaded"] / out["backward_mixture"]

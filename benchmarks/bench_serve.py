@@ -51,6 +51,10 @@ def run(
     from repro.configs import reduced_config
     from repro.data.mathgen import MathTaskDataset
     from repro.data.tokenizer import get_tokenizer
+    from repro.metrics.runtime_metrics import (
+        serve_latency_counts,
+        serve_latency_stats,
+    )
     from repro.models.registry import build
     from repro.rollout.sampler import generate
     from repro.serve import ServeEngine
@@ -103,19 +107,29 @@ def run(
 
     def _run_continuous() -> Dict:
         # The engine (and its jit caches) is reused across repeats, so
-        # every stat must be a per-run delta of its cumulative counter.
+        # every stat must be a per-run delta of its cumulative counter —
+        # including the latency columns, which come from the engine's
+        # own registry histograms via a windowed read (same numbers the
+        # live telemetry reports; benchmarks can't disagree with it).
         before = dict(engine.stats.__dict__)
+        starts = serve_latency_counts(engine.metrics)
         t0 = time.perf_counter()
         for i in range(n_requests):
             row = toks_np[i]
             engine.submit(row[row != tok.pad_id], budgets[i])
-        trajs = engine.run()
+        engine.run()
         wall = time.perf_counter() - t0
         d = {k: engine.stats.__dict__[k] - v for k, v in before.items()}
+        lat = serve_latency_stats(engine.metrics, starts)
         return {
             "wall_s": wall,
             "useful_tokens": float(d["tokens_out"]),
-            "latencies_s": [t.latency_s for t in trajs],
+            "latency_p50_ms": lat["request_latency_p50_ms"],
+            "latency_p99_ms": lat["request_latency_p99_ms"],
+            "ttft_p50_ms": lat["ttft_p50_ms"],
+            "ttft_p99_ms": lat["ttft_p99_ms"],
+            "inter_token_p50_ms": lat["inter_token_p50_ms"],
+            "queue_wait_p50_ms": lat["queue_wait_p50_ms"],
             "mean_occupancy": (
                 d["occupancy_sum"] / d["decode_steps"]
                 if d["decode_steps"] else 0.0
@@ -124,15 +138,18 @@ def run(
         }
 
     def _summarize(raw: Dict) -> Dict:
-        lat = np.asarray(raw["latencies_s"]) * 1e3
         out = {
             "tokens_per_s": raw["useful_tokens"] / raw["wall_s"],
             "useful_tokens": raw["useful_tokens"],
             "wall_s": raw["wall_s"],
-            "latency_p50_ms": float(np.percentile(lat, 50)),
-            "latency_p99_ms": float(np.percentile(lat, 99)),
         }
-        for k in ("mean_occupancy", "preemptions"):
+        if "latencies_s" in raw:    # phase-locked: no engine registry
+            lat = np.asarray(raw["latencies_s"]) * 1e3
+            out["latency_p50_ms"] = float(np.percentile(lat, 50))
+            out["latency_p99_ms"] = float(np.percentile(lat, 99))
+        for k in ("latency_p50_ms", "latency_p99_ms", "ttft_p50_ms",
+                  "ttft_p99_ms", "inter_token_p50_ms",
+                  "queue_wait_p50_ms", "mean_occupancy", "preemptions"):
             if k in raw:
                 out[k] = raw[k]
         return out
@@ -439,8 +456,9 @@ def run_burst(
     All ``burst`` requests arrive at once with identical (padded) prompt
     length — the regime where per-request prefill dispatches hurt most.
     Reported per mode (batched vs per-request prefill): **admission
-    latency** p50/p99 (submit -> first emitted token, queueing included)
-    and prefill dispatch counts.  ``admission_speedup`` (unbatched p50 /
+    latency** p50/p99 (submit -> first emitted token, queueing included
+    — the engine registry's TTFT histogram, read windowed) and prefill
+    dispatch counts.  ``admission_speedup`` (unbatched p50 /
     batched p50) is machine-normalized: both sides ran on this host.
     """
     import jax
@@ -448,6 +466,10 @@ def run_burst(
     from repro.configs import reduced_config
     from repro.data.mathgen import MathTaskDataset
     from repro.data.tokenizer import get_tokenizer
+    from repro.metrics.runtime_metrics import (
+        serve_latency_counts,
+        serve_latency_stats,
+    )
     from repro.models.registry import build
     from repro.serve import ServeEngine
 
@@ -463,18 +485,21 @@ def run_burst(
 
     def _run(engine) -> Dict:
         before = dict(engine.stats.__dict__)
+        starts = serve_latency_counts(engine.metrics)
         t0 = time.monotonic()
-        reqs = [engine.submit(r, budget) for r in rows]
+        for r in rows:
+            engine.submit(r, budget)
         engine.run()
         wall = time.monotonic() - t0
         d = {key: engine.stats.__dict__[key] - v
              for key, v in before.items()}
-        lat = np.asarray(
-            [r.first_token_time - t0 for r in reqs]) * 1e3
+        # Admission latency == submit -> first token == the engine's
+        # own TTFT histogram, windowed to this run.
+        lat = serve_latency_stats(engine.metrics, starts)
         return {
             "wall_s": wall,
-            "admission_p50_ms": float(np.percentile(lat, 50)),
-            "admission_p99_ms": float(np.percentile(lat, 99)),
+            "admission_p50_ms": lat["ttft_p50_ms"],
+            "admission_p99_ms": lat["ttft_p99_ms"],
             "prefill_dispatches": d["prefill_dispatches"],
             "prefills": d["prefills"],
         }
@@ -502,6 +527,109 @@ def run_burst(
         if out["batched"]["admission_p50_ms"] else 0.0
     )
     return out
+
+
+def run_tracing(
+    *,
+    n_requests: int = 12,
+    max_batch: int = 4,
+    lengths: tuple = (2, 4, 8, 48),
+    block_size: int = 8,
+    num_blocks: int = 48,
+    prompt_len: int = 32,
+    decode_chunk: int = 8,
+    arch: str = "qwen2.5-0.5b",
+    seed: int = 0,
+    repeats: int = 3,
+) -> Dict:
+    """Span-tracing overhead: tokens/s with the tracer on vs off.
+
+    The same request stream is served by two engines — one carrying a
+    live ``obs.Tracer`` at ``spans`` detail (lifecycle + dispatch spans
+    + counter tracks) and one at the ``--trace-detail off`` default
+    (``NULL_TRACER``; the zero-cost path every production run without
+    ``--trace`` takes).  ``overhead_ratio`` is the MEDIAN of paired
+    per-repeat tokens/s ratios (traced / untraced), so host drift lands
+    on both arms; ~1.0 means tracing is effectively free at serve
+    granularity, and the CI gate puts a generous hard floor under it so
+    only a pathological hot-path regression (e.g. tracing work no
+    longer gated on ``tracer.enabled``) trips.  ``full``-detail adds a
+    per-emitted-token instant and is reported for color, ungated.
+    """
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+    from repro.obs.tracer import Tracer
+    from repro.serve import ServeEngine
+    from repro.models.registry import build
+
+    tok = get_tokenizer()
+    cfg = reduced_config(arch, vocab=tok.vocab_size)
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(seed))
+    ds = MathTaskDataset(prompt_len=prompt_len, level=0, seed=seed + 1)
+    toks_np, _, _ = ds.sample_batch(n_requests)
+    prompts = [row[row != tok.pad_id] for row in toks_np]
+    budgets = [lengths[i % len(lengths)] for i in range(n_requests)]
+    max_seq_len = prompt_len + max(lengths) + block_size
+
+    def _mk(tracer):
+        return ServeEngine(
+            bundle, params, num_blocks=num_blocks, block_size=block_size,
+            max_batch=max_batch, max_seq_len=max_seq_len,
+            decode_chunk=decode_chunk, temperature=1.0, seed=seed + 2,
+            tracer=tracer)
+
+    def _run(engine, tracer=None) -> Dict:
+        if tracer is not None:
+            tracer.clear()
+        before = engine.stats.tokens_out
+        t0 = time.perf_counter()
+        for p, b in zip(prompts, budgets):
+            engine.submit(p, b)
+        engine.run()
+        wall = time.perf_counter() - t0
+        return {"wall_s": wall,
+                "tokens": engine.stats.tokens_out - before,
+                "events": len(tracer) if tracer is not None else 0}
+
+    off = _mk(None)
+    spans_tracer = Tracer(detail="spans")
+    spans = _mk(spans_tracer)
+    full_tracer = Tracer(detail="full")
+    full = _mk(full_tracer)
+    _run(off), _run(spans, spans_tracer), _run(full, full_tracer)  # warm
+    # Paired per-repeat ratios (median): drift hits all arms equally.
+    triples = [(_run(off), _run(spans, spans_tracer),
+                _run(full, full_tracer))
+               for _ in range(max(repeats, 1))]
+    spans_ratios = [
+        (s["tokens"] / s["wall_s"]) / (o["tokens"] / o["wall_s"])
+        for o, s, _ in triples
+    ]
+    full_ratios = [
+        (f["tokens"] / f["wall_s"]) / (o["tokens"] / o["wall_s"])
+        for o, _, f in triples
+    ]
+    o_best = min((o for o, _, _ in triples), key=lambda r: r["wall_s"])
+    s_best = min((s for _, s, _ in triples), key=lambda r: r["wall_s"])
+    return {
+        "config": {
+            "arch": arch, "n_requests": n_requests,
+            "max_batch": max_batch, "lengths": list(lengths),
+            "block_size": block_size, "num_blocks": num_blocks,
+            "prompt_len": prompt_len, "decode_chunk": decode_chunk,
+            "seed": seed,
+        },
+        "tokens_per_s_off": o_best["tokens"] / o_best["wall_s"],
+        "tokens_per_s_spans": s_best["tokens"] / s_best["wall_s"],
+        "overhead_ratio": float(np.median(spans_ratios)),
+        "overhead_ratio_full": float(np.median(full_ratios)),
+        "events_per_run": int(triples[-1][1]["events"]),
+        "token_events_per_run": int(triples[-1][2]["events"]),
+    }
 
 
 def run_sharded(
@@ -756,6 +884,9 @@ def main() -> None:
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N): records sharded-vs-single tokens/s "
                          "and greedy token-exactness")
+    ap.add_argument("--tracing", type=int, default=1,
+                    help="tracing-overhead bench: paired tokens/s with "
+                         "a spans-detail tracer vs off (0 disables)")
     ap.add_argument("--out", default="results/bench/BENCH_serve.json")
     args = ap.parse_args()
     res = run(
@@ -819,6 +950,14 @@ def main() -> None:
               f"N={args.best_of}, cow {bo['cow_copies']}, "
               f"token_exact={int(bo['token_exact'])}, "
               f"tok/s {bo['speedup_vs_unshared']:.2f}x)")
+    if args.tracing:
+        tr = run_tracing(arch=args.arch, seed=args.seed)
+        res["tracing"] = tr
+        print(f"{'tracing':13s} {tr['tokens_per_s_spans']:8.1f} tok/s "
+              f"spans vs {tr['tokens_per_s_off']:8.1f} off "
+              f"({tr['overhead_ratio']:.2f}x, full "
+              f"{tr['overhead_ratio_full']:.2f}x, "
+              f"{tr['events_per_run']} events/run)")
     if args.burst:
         burst = run_burst(burst=args.burst, arch=args.arch,
                           seed=args.seed)

@@ -1,0 +1,198 @@
+"""Offline lag-attribution report over a serve/runtime trace.
+
+Reads a trace written by ``--trace`` (either the Perfetto ``.json`` or
+the flat ``.jsonl`` form — ``repro.obs.perfetto.load_trace_events``
+auto-detects) and prints where each request's wall-clock went and how
+stale the tokens it emitted were:
+
+* **time-in-state per request** — waiting vs running milliseconds from
+  the async ``b``/``e`` lifecycle spans (a preempted request re-enters
+  ``waiting``, so its waiting column shows the cost of every eviction);
+* **lag-at-emission histogram** — per emitted token, how many publishes
+  the engine's weights lagged the store (needs ``--trace-detail full``,
+  which stamps one ``token`` instant per emission);
+* **swap-to-first-stale-token** — for every in-flight weight swap, the
+  latency until the first token actually sampled from the new version.
+
+``--check`` validates the trace instead: the file must load, every
+sync ``B`` must close with a matching ``E`` (well-nested per track),
+and every async ``b`` must close with its ``e``.  Exit status is
+nonzero on any imbalance — CI runs this against a fresh
+``launch.serve --trace`` artifact.
+
+  PYTHONPATH=src python benchmarks/trace_report.py out.json
+  PYTHONPATH=src python benchmarks/trace_report.py out.json --check
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List, Tuple
+
+sys.path.insert(0, "src")
+
+from repro.obs.perfetto import load_trace_events  # noqa: E402
+
+
+def check_balance(events: List[Dict[str, Any]]) -> List[str]:
+    """Return a list of imbalance descriptions (empty = balanced)."""
+    errors: List[str] = []
+    stacks: Dict[Tuple[Any, Any], List[str]] = defaultdict(list)
+    open_async: Dict[Tuple[str, Any], int] = defaultdict(int)
+    for ev in events:
+        ph = ev.get("ph")
+        name = ev.get("name", "?")
+        if ph == "B":
+            stacks[(ev.get("pid"), ev.get("tid"))].append(name)
+        elif ph == "E":
+            stack = stacks[(ev.get("pid"), ev.get("tid"))]
+            if not stack:
+                errors.append(f"E {name!r} with no open span on track "
+                              f"({ev.get('pid')}, {ev.get('tid')})")
+            elif stack[-1] != name:
+                errors.append(f"E {name!r} closes {stack[-1]!r} "
+                              f"(bad nesting)")
+                stack.pop()
+            else:
+                stack.pop()
+        elif ph == "b":
+            open_async[(name, ev.get("id"))] += 1
+        elif ph == "e":
+            key = (name, ev.get("id"))
+            if open_async[key] <= 0:
+                errors.append(f"e {name!r} id={ev.get('id')} never opened")
+            else:
+                open_async[key] -= 1
+    for (pid, tid), stack in stacks.items():
+        for name in stack:
+            errors.append(f"B {name!r} on ({pid}, {tid}) never closed")
+    for (name, aid), n in open_async.items():
+        if n:
+            errors.append(f"b {name!r} id={aid} left open ({n}x)")
+    return errors
+
+
+def _lifecycle_durations(events: List[Dict[str, Any]]
+                         ) -> Dict[int, Dict[str, float]]:
+    """Per-request {state: total µs} from the async waiting/running spans."""
+    acc: Dict[int, Dict[str, float]] = defaultdict(
+        lambda: defaultdict(float))
+    opened: Dict[Tuple[str, int], float] = {}
+    for ev in events:
+        name = ev.get("name")
+        if name not in ("waiting", "running"):
+            continue
+        key = (name, ev.get("id"))
+        if ev.get("ph") == "b":
+            opened[key] = ev["ts"]
+        elif ev.get("ph") == "e" and key in opened:
+            acc[ev.get("id")][name] += ev["ts"] - opened.pop(key)
+    return {rid: dict(states) for rid, states in acc.items()}
+
+
+def _preemptions(events: List[Dict[str, Any]]) -> Dict[int, int]:
+    out: Dict[int, int] = defaultdict(int)
+    for ev in events:
+        if ev.get("ph") == "i" and ev.get("name") == "preempt":
+            rid = (ev.get("args") or {}).get("rid")
+            if rid is not None:
+                out[rid] += 1
+    return out
+
+
+def _token_instants(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    return [ev for ev in events
+            if ev.get("ph") == "i" and ev.get("name") == "token"]
+
+
+def report(events: List[Dict[str, Any]]) -> None:
+    durations = _lifecycle_durations(events)
+    preempts = _preemptions(events)
+    tokens = _token_instants(events)
+    tokens_by_rid: Dict[int, int] = defaultdict(int)
+    for ev in tokens:
+        tokens_by_rid[(ev.get("args") or {}).get("rid")] += 1
+
+    print("time in state per request (ms):")
+    print(f"  {'rid':>4} {'waiting':>9} {'running':>9} {'total':>9} "
+          f"{'preempts':>8} {'tokens':>7}")
+    for rid in sorted(durations):
+        states = durations[rid]
+        wait = states.get("waiting", 0.0) / 1e3
+        run = states.get("running", 0.0) / 1e3
+        tok = tokens_by_rid.get(rid, 0)
+        print(f"  {rid:>4} {wait:>9.1f} {run:>9.1f} {wait + run:>9.1f} "
+              f"{preempts.get(rid, 0):>8} "
+              f"{tok if tok else '-':>7}")
+    if not durations:
+        print("  (no request lifecycle spans in trace)")
+
+    if tokens:
+        hist: Dict[int, int] = defaultdict(int)
+        for ev in tokens:
+            hist[int((ev.get("args") or {}).get("lag", 0))] += 1
+        total = sum(hist.values())
+        print(f"lag at emission ({total} tokens):")
+        for lag in sorted(hist):
+            n = hist[lag]
+            bar = "#" * max(1, round(40 * n / total))
+            print(f"  lag {lag:>3}: {n:>6} ({n / total:>6.1%}) {bar}")
+    else:
+        print("lag at emission: no per-token events "
+              "(re-run with --trace-detail full)")
+
+    swaps = [ev for ev in events
+             if ev.get("ph") == "i" and ev.get("name") == "swap"]
+    if swaps:
+        print("swap -> first token from the new version:")
+        for sw in swaps:
+            new_v = (sw.get("args") or {}).get("new")
+            first = next(
+                (t for t in tokens
+                 if t["ts"] >= sw["ts"]
+                 and (t.get("args") or {}).get("v") == new_v), None)
+            if first is None:
+                print(f"  v{(sw.get('args') or {}).get('old')}->v{new_v}: "
+                      f"no token from v{new_v} in trace")
+            else:
+                dt = (first["ts"] - sw["ts"]) / 1e3
+                print(f"  v{(sw.get('args') or {}).get('old')}->v{new_v}: "
+                      f"{dt:.1f} ms (rid "
+                      f"{(first.get('args') or {}).get('rid')})")
+    else:
+        print("swaps: none in trace")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace file (.json Perfetto or .jsonl)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate only: file loads and all spans are "
+                         "balanced; nonzero exit on any imbalance")
+    args = ap.parse_args(argv)
+
+    try:
+        events = load_trace_events(args.trace)
+    except Exception as e:                      # malformed file: fail loud
+        print(f"FAIL: cannot load {args.trace}: {e}")
+        return 2
+    errors = check_balance(events)
+    if args.check:
+        if errors:
+            print(f"FAIL: {len(errors)} span imbalance(s) in "
+                  f"{args.trace}:")
+            for err in errors[:20]:
+                print(f"  {err}")
+            return 1
+        print(f"OK: {args.trace}: {len(events)} events, spans balanced")
+        return 0
+    if errors:
+        print(f"warning: {len(errors)} span imbalance(s) — "
+              "partial trace? (ring eviction or truncated run)")
+    report(events)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,7 +99,8 @@ def _parse_draft(spec: str, args, bundle, params, tok):
                      "or self")
 
 
-def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None):
+def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None,
+                      tracer=None):
     from repro.data.mathgen import verify
     from repro.serve import ServeEngine
 
@@ -119,6 +120,7 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None):
         batch_prefill=not args.no_batch_prefill,
         mesh=mesh, speculate_adaptive=args.speculate_adaptive,
         prefix_cache=args.prefix_cache,
+        tracer=tracer, annotate=args.profiler_annotations,
     )
     toks_np, prompts, answers = ds.sample_batch(args.requests)
     meta = {}
@@ -138,15 +140,20 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None):
     print(f"continuous decode: {n_tok} tokens / {len(trajs)} requests in "
           f"{dt*1e3:.1f} ms ({n_tok/dt:.0f} tok/s on this host)")
     lat_tag = "latency n/a (nothing retired; raise --max-steps)"
-    if trajs:
-        lat = np.asarray([t.latency_s for t in trajs]) * 1e3
-        lat_tag = (f"latency p50 {np.percentile(lat, 50):.1f} ms "
-                   f"p99 {np.percentile(lat, 99):.1f} ms")
+    if stats["request_latency_count"]:
+        lat_tag = (f"latency p50 {stats['request_latency_p50_ms']:.1f} ms "
+                   f"p99 {stats['request_latency_p99_ms']:.1f} ms")
     print(f"  occupancy {stats['mean_occupancy']:.2f}/{args.max_batch}, "
           f"prefills {stats['prefills']} "
           f"({stats['prefill_dispatches']} dispatches), "
           f"preemptions {stats['preemptions']}, swaps {stats['swaps']}, "
           f"{lat_tag}")
+    if stats["ttft_count"]:
+        print(f"  ttft p50 {stats['ttft_p50_ms']:.1f} ms "
+              f"p99 {stats['ttft_p99_ms']:.1f} ms, inter-token p50 "
+              f"{stats['inter_token_p50_ms']:.2f} ms p99 "
+              f"{stats['inter_token_p99_ms']:.2f} ms, queue-wait p50 "
+              f"{stats['queue_wait_p50_ms']:.1f} ms")
     if stats.get("num_shards", 1) > 1:
         print(f"  sharded over {stats['num_shards']} shards: "
               f"free pages by shard {stats['pool_free_by_shard']}, "
@@ -243,6 +250,21 @@ def main(argv=None) -> int:
                          "axis, requests are placed per shard (CPU "
                          "hosts: set XLA_FLAGS=--xla_force_host_"
                          "platform_device_count=N first)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write an execution trace of the run: .json -> "
+                         "Chrome/Perfetto trace_event format (load in "
+                         "ui.perfetto.dev), .jsonl -> flat event lines; "
+                         "either feeds benchmarks/trace_report.py")
+    ap.add_argument("--trace-detail", default="spans",
+                    choices=["off", "spans", "full"],
+                    help="off: no tracer (zero overhead); spans: request "
+                         "lifecycle + dispatch spans + counter tracks; "
+                         "full: adds a per-emitted-token instant with "
+                         "version/lag provenance")
+    ap.add_argument("--profiler-annotations", action="store_true",
+                    help="wrap engine dispatches in jax.profiler."
+                         "TraceAnnotation (names show up on the device "
+                         "timeline of a jax.profiler.trace() capture)")
     ap.add_argument("--swap-interval", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -257,6 +279,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.requests is None:
         args.requests = args.batch
+
+    from repro.obs.tracer import make_tracer
+
+    tracer = make_tracer(args.trace_detail if args.trace else "off")
 
     from repro.configs import reduced_config
     from repro.data.mathgen import MathTaskDataset
@@ -302,7 +328,8 @@ def main(argv=None) -> int:
             sharding = replicated(mesh)
         # v0 is the true random init; the checkpoint (if any) becomes v1.
         store = PolicyStore(init_params, capacity=2,
-                            meta={"source": "init"}, sharding=sharding)
+                            meta={"source": "init"}, sharding=sharding,
+                            tracer=tracer)
         if args.checkpoint:
             store.publish(params, source="checkpoint",
                           checkpoint=args.checkpoint)
@@ -310,10 +337,21 @@ def main(argv=None) -> int:
     ds = MathTaskDataset(prompt_len=32, level=args.level,
                          seed=args.seed + 1)
     if args.engine == "continuous":
-        _serve_continuous(args, bundle, params, store, tok, ds, mesh=mesh)
+        _serve_continuous(args, bundle, params, store, tok, ds, mesh=mesh,
+                          tracer=tracer)
     else:
         toks_np, prompts, answers = ds.sample_batch(args.batch)
         _serve_static(args, bundle, params, store, tok, toks_np, answers)
+    if args.trace:
+        from repro.obs.perfetto import export_perfetto, export_trace_jsonl
+
+        if args.trace.endswith(".jsonl"):
+            n = export_trace_jsonl(tracer, args.trace)
+        else:
+            n = export_perfetto(tracer, args.trace)
+        print(f"trace: {n} events -> {args.trace} "
+              f"(detail={args.trace_detail}, "
+              f"ring-dropped={tracer.dropped})")
     return 0
 
 

@@ -47,6 +47,14 @@ def _add_runtime_args(p, *, regimes, default_regime,
                    help="tv_gate*: drop over-threshold items or downweight")
     p.add_argument("--queue-maxsize", type=int, default=4,
                    help="bounded queue size (threaded backpressure)")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="write an execution trace (produce spans, "
+                        "queue put/pop/drop, publish/pin, learner "
+                        "steps): .json -> Perfetto, .jsonl -> flat "
+                        "event lines for benchmarks/trace_report.py")
+    p.add_argument("--trace-detail", default="spans",
+                   choices=["off", "spans", "full"],
+                   help="trace verbosity (off disables the tracer)")
 
 
 def main(argv=None) -> int:
@@ -93,6 +101,23 @@ def main(argv=None) -> int:
 
     args = ap.parse_args(argv)
 
+    from repro.obs.tracer import make_tracer
+
+    tracer = make_tracer(args.trace_detail if args.trace else "off")
+
+    def _export_trace() -> None:
+        if not args.trace:
+            return
+        from repro.obs.perfetto import export_perfetto, export_trace_jsonl
+
+        if args.trace.endswith(".jsonl"):
+            n = export_trace_jsonl(tracer, args.trace)
+        else:
+            n = export_perfetto(tracer, args.trace)
+        print(f"trace: {n} events -> {args.trace} "
+              f"(detail={args.trace_detail}, "
+              f"ring-dropped={tracer.dropped})")
+
     if args.mode == "rl":
         from repro.train.runner_rl import AsyncRLRunConfig, run_async_rl
         from repro.train.trainer_rl import RLHyperparams
@@ -107,6 +132,7 @@ def main(argv=None) -> int:
             queue_maxsize=args.queue_maxsize,
             admission=args.admission, max_lag=args.max_lag,
             admission_mode=args.admission_mode,
+            tracer=tracer if args.trace else None,
         ))
         print(json.dumps({
             "runtime": args.runtime,
@@ -114,6 +140,7 @@ def main(argv=None) -> int:
             "final_tv": res.final_tv,
             "runtime_stats": res.runtime_stats,
         }, indent=1))
+        _export_trace()
         return 0
 
     # rlvr
@@ -135,10 +162,11 @@ def main(argv=None) -> int:
         admission=args.admission, max_lag=args.max_lag,
         admission_mode=args.admission_mode,
     )
-    trainer = RLVRTrainer(bundle, ds, hp, seed=args.seed)
+    trainer = RLVRTrainer(bundle, ds, hp, seed=args.seed, tracer=tracer)
     wl = trainer.warmup()
     print(f"[warmup] loss={wl:.4f} acc={trainer.evaluate(128):.3f}")
     res = trainer.train(args.phases, eval_every=max(args.phases // 4, 1))
+    step_summary = trainer.metrics.histogram("train_step_s").summary()
     print(json.dumps({
         "arch": cfg.name,
         "algorithm": args.algorithm,
@@ -147,7 +175,14 @@ def main(argv=None) -> int:
         "eval_accuracy": res.eval_accuracy,
         "final_tv": res.phase_logs[-1].tv if res.phase_logs else None,
         "runtime_stats": res.runtime_stats,
+        "train_step_ms": {
+            "count": step_summary["count"],
+            "mean": step_summary["mean"] * 1e3,
+            "p50": step_summary["p50"] * 1e3,
+            "p99": step_summary["p99"] * 1e3,
+        },
     }, indent=1))
+    _export_trace()
     if args.checkpoint_dir:
         path = save_checkpoint(
             args.checkpoint_dir, args.phases, trainer.state.params,

@@ -7,10 +7,14 @@ from repro.metrics.aggregate import (
     stratified_bootstrap_ci,
     minmax_normalize,
 )
+from repro.metrics.logging import MetricLogger, read_jsonl
 from repro.metrics.runtime_metrics import (
     LagHistogram,
     RuntimeQueueStats,
     collect_runtime_stats,
+    collect_serve_stats,
+    serve_latency_counts,
+    serve_latency_stats,
 )
 
 __all__ = [
@@ -22,6 +26,11 @@ __all__ = [
     "stratified_bootstrap_ci",
     "minmax_normalize",
     "LagHistogram",
+    "MetricLogger",
     "RuntimeQueueStats",
     "collect_runtime_stats",
+    "collect_serve_stats",
+    "read_jsonl",
+    "serve_latency_counts",
+    "serve_latency_stats",
 ]

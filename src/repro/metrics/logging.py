@@ -2,6 +2,16 @@
 
 No tensorboard/wandb offline — trainers append JSONL rows; benchmarks
 read them back for curves.  Kept deliberately tiny and dependency-free.
+
+Rows are written **atomically**: the full line is encoded first and
+handed to an unbuffered binary handle as one ``write()``, so a trainer
+crash mid-row never leaves a truncated JSONL line for the reader to
+choke on.  The logger is a context manager and also closes on GC.
+
+With ``registry=`` (an ``obs.MetricsRegistry``), :meth:`log_registry`
+appends the registry's full ``snapshot()`` as one row — the logger is
+then just a thin sink on the unified metrics path instead of a fourth
+ad-hoc dict shape.
 """
 from __future__ import annotations
 
@@ -12,15 +22,39 @@ from typing import Any, Dict, Optional
 
 
 class MetricLogger:
-    def __init__(self, path: Optional[str] = None, echo: bool = False):
+    def __init__(self, path: Optional[str] = None, echo: bool = False,
+                 registry: Any = None):
         self.path = path
         self.echo = echo
+        self.registry = registry
         self._start = time.time()
         if path:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-            self._fh = open(path, "a")
+            # Unbuffered binary appends: each row is one write syscall,
+            # atomic from the reader's point of view.
+            self._fh = open(path, "ab", buffering=0)
         else:
             self._fh = None
+
+    # -- context manager / GC hygiene ----------------------------------------
+
+    def __enter__(self) -> "MetricLogger":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def __del__(self) -> None:
+        try:
+            self.close()
+        except Exception:
+            pass    # interpreter teardown: file may already be gone
+
+    # -- writes ---------------------------------------------------------------
+
+    def _write_row(self, row: Dict[str, Any]) -> None:
+        if self._fh:
+            self._fh.write((json.dumps(row) + "\n").encode("utf-8"))
 
     def log(self, step: int, **metrics: Any) -> None:
         row: Dict[str, Any] = {
@@ -32,9 +66,7 @@ class MetricLogger:
                 row[k] = float(v)
             except (TypeError, ValueError):
                 row[k] = v
-        if self._fh:
-            self._fh.write(json.dumps(row) + "\n")
-            self._fh.flush()
+        self._write_row(row)
         if self.echo:
             pretty = " ".join(
                 f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
@@ -42,9 +74,23 @@ class MetricLogger:
             )
             print(pretty, flush=True)
 
+    def log_registry(self, step: int, **extra: Any) -> Dict[str, Any]:
+        """One row = the attached registry's full snapshot (+extras)."""
+        if self.registry is None:
+            raise ValueError("MetricLogger has no registry attached")
+        row: Dict[str, Any] = {
+            "step": step,
+            "wall": round(time.time() - self._start, 3),
+        }
+        row.update(self.registry.snapshot())
+        row.update(extra)
+        self._write_row(row)
+        return row
+
     def close(self) -> None:
-        if self._fh:
-            self._fh.close()
+        fh, self._fh = self._fh, None
+        if fh:
+            fh.close()
 
 
 def read_jsonl(path: str):

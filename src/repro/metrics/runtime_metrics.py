@@ -76,6 +76,16 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
     prefill tokens (the token-level hit rate), COW copies, resident
     zero-ref cached pages and LRU evictions; window-reclaiming engines
     report pages released behind the sliding window.
+
+    Engines carrying an ``obs.MetricsRegistry`` (all of them, since
+    the engine creates one by default) additionally report serve-time
+    latency percentiles straight from the registry's histograms —
+    TTFT (submit -> first token), inter-token gap, admission
+    queue-wait, end-to-end request latency and swap-to-first-stale-
+    token — as ``{ttft,inter_token,queue_wait,request_latency,
+    swap_to_stale}_{count,mean_ms,p50_ms,p99_ms}``.  Benchmarks source
+    their timing columns from the same histograms, so benchmark
+    numbers and live telemetry cannot disagree.
     """
     alloc = engine.allocator
     sched = engine.scheduler
@@ -130,7 +140,47 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
     if getattr(engine, "_reclaim_window", None) is not None:
         out["reclaim_window"] = engine._reclaim_window
         out["reclaimed_window_pages"] = sched.reclaimed_pages
+    metrics = getattr(engine, "metrics", None)
+    if metrics is not None:
+        out.update(serve_latency_stats(metrics))
     return out
+
+
+# Registry histogram name -> flat-key prefix in collect_serve_stats.
+SERVE_LATENCY_HISTOGRAMS = (
+    ("serve_ttft_s", "ttft"),
+    ("serve_inter_token_s", "inter_token"),
+    ("serve_queue_wait_s", "queue_wait"),
+    ("serve_request_latency_s", "request_latency"),
+    ("serve_swap_to_stale_s", "swap_to_stale"),
+)
+
+
+def serve_latency_stats(metrics: Any,
+                        starts: Any = None) -> Dict[str, Any]:
+    """Flat latency keys (ms) from a registry's serve histograms.
+
+    ``starts`` (a ``{hist_name: count}`` dict, e.g. captured before a
+    benchmark run) restricts each histogram to observations made after
+    that count — the windowed read benchmarks use on a registry shared
+    across repeats.
+    """
+    out: Dict[str, Any] = {}
+    for name, key in SERVE_LATENCY_HISTOGRAMS:
+        h = metrics.histogram(name)
+        s = h.summary(start=None if starts is None else starts.get(name))
+        out[f"{key}_count"] = int(s["count"])
+        out[f"{key}_mean_ms"] = s["mean"] * 1e3
+        out[f"{key}_p50_ms"] = s["p50"] * 1e3
+        out[f"{key}_p99_ms"] = s["p99"] * 1e3
+    return out
+
+
+def serve_latency_counts(metrics: Any) -> Dict[str, int]:
+    """Current observation counts per serve histogram — pass back to
+    :func:`serve_latency_stats` as ``starts`` for a windowed read."""
+    return {name: metrics.histogram(name).count
+            for name, _ in SERVE_LATENCY_HISTOGRAMS}
 
 
 def collect_runtime_stats(store: Any, queue: Any) -> Dict[str, Any]:

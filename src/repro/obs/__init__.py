@@ -1,0 +1,57 @@
+"""Observability: span tracer, unified metrics registry, exporters.
+
+The lag the paper studies is born somewhere concrete — admission wait,
+prefill stall, a speculation rollback, an in-flight weight swap.  This
+package makes that visible on a live run:
+
+* ``tracer``   — ring-buffered span/instant/counter collector with
+                 monotonic clocks; ``NULL_TRACER`` makes every
+                 instrumentation point free when tracing is off.
+* ``registry`` — one ``MetricsRegistry`` that ``ServeStats``,
+                 ``RuntimeQueueStats`` and the trainers register into;
+                 one ``snapshot()`` feeds telemetry, launchers and
+                 benchmarks alike.
+* ``perfetto`` — Chrome/Perfetto ``trace_event`` JSON + JSONL export,
+                 and optional ``jax.profiler`` trace annotations.
+
+``benchmarks/trace_report.py`` turns an exported trace into the
+lag-attribution report (time-in-state per request, lag-at-emission
+histogram, swap-to-first-stale-token latency).
+"""
+from repro.obs.perfetto import (
+    events_to_trace_json,
+    export_perfetto,
+    export_trace_jsonl,
+    load_trace_events,
+    trace_annotation,
+)
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.tracer import (
+    NULL_TRACER,
+    Span,
+    TraceEvent,
+    Tracer,
+    make_tracer,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "Span",
+    "TraceEvent",
+    "Tracer",
+    "events_to_trace_json",
+    "export_perfetto",
+    "export_trace_jsonl",
+    "load_trace_events",
+    "make_tracer",
+    "trace_annotation",
+]

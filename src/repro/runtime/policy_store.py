@@ -35,6 +35,7 @@ from repro.core.policy_lag import (
     buffer_push,
     buffer_sample,
 )
+from repro.obs.tracer import NULL_TRACER, Tracer
 
 
 @dataclass(frozen=True)
@@ -59,6 +60,7 @@ class PolicyStore:
         capacity: int,
         meta: Optional[Dict[str, Any]] = None,
         sharding: Any = None,
+        tracer: Tracer = NULL_TRACER,
     ) -> None:
         """``sharding`` (a ``NamedSharding``, typically
         ``distributed.sharding.replicated(mesh)``) places every
@@ -69,6 +71,7 @@ class PolicyStore:
         (eager jnp ops follow their operands' shardings)."""
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.tracer = tracer
         self._lock = threading.Lock()
         self._sharding = sharding
         if sharding is not None:
@@ -101,7 +104,14 @@ class PolicyStore:
             self._history[self._version] = SnapshotMeta(
                 self._version, time.time(), dict(meta)
             )
-            return self._version
+            version = self._version
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("publish", pid="runtime", tid="store",
+                       version=version)
+            tr.counter("policy_version", pid="runtime",
+                       version=float(version))
+        return version
 
     # -- reads ---------------------------------------------------------------
 
@@ -181,13 +191,21 @@ class PolicyStore:
         with self._lock:
             if version in self._pinned:
                 self._pinned[version][1] += 1
+                self._trace_pin(version)
                 return self._pinned[version][0]
             params = self._resident_locked(version)
             if params is not None:
                 self._pinned[version] = [params, 1]
+                self._trace_pin(version)
                 return params
         # Out of the lock: reuse get()'s error taxonomy.
         return self.get(version)
+
+    def _trace_pin(self, version: int) -> None:
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("pin", pid="runtime", tid="store",
+                       version=version, lag=self._version - version)
 
     def release(self, version: int) -> None:
         """Drop one pin on `version`; params free once refcount hits 0
@@ -249,11 +267,13 @@ class PolicyStore:
             version = self._resolve_lagged_locked(offset)
             if version in self._pinned:
                 self._pinned[version][1] += 1
+                self._trace_pin(version)
                 return self._pinned[version][0], version
             params = self._resident_locked(version)
             # Resolution only returns resident versions and the lock is
             # still held, so params cannot be None here.
             self._pinned[version] = [params, 1]
+            self._trace_pin(version)
             return params, version
 
     def meta(self, version: int) -> SnapshotMeta:

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional
 
 from repro.metrics.runtime_metrics import LagHistogram, RuntimeQueueStats
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.runtime.admission import AdmissionPolicy, PassThrough
 
 
@@ -56,9 +57,20 @@ class TrajectoryQueue:
         self,
         maxsize: int = 0,
         admission: Optional[AdmissionPolicy] = None,
+        tracer: Tracer = NULL_TRACER,
+        registry: Any = None,
     ) -> None:
+        """``tracer`` gets put/pop/drop instants (with the TV verdict
+        and lag at decision time) plus a queue-depth counter track;
+        ``registry`` (an ``obs.MetricsRegistry``) gets this queue's
+        stats as the ``"queue"`` producer so one ``snapshot()`` covers
+        serve and runtime alike."""
         self.maxsize = maxsize
         self.admission = admission or PassThrough()
+        self.tracer = tracer
+        if registry is not None:
+            registry.register_producer(
+                "queue", lambda: self.stats().as_dict())
         self._dq: collections.deque = collections.deque()
         self._cond = threading.Condition()
         self._closed = False
@@ -98,7 +110,14 @@ class TrajectoryQueue:
                 raise QueueClosed("put() on a closed TrajectoryQueue")
             self._dq.append(item)
             self._puts += 1
+            depth = len(self._dq)
             self._cond.notify_all()
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("queue_put", pid="runtime", tid="queue",
+                       behavior_version=item.behavior_version,
+                       lag=item.lag)
+            tr.counter("queue_depth", pid="runtime", depth=float(depth))
         return item
 
     def close(self) -> None:
@@ -144,6 +163,7 @@ class TrajectoryQueue:
             # forward pass and must not stall the producer.
             item.learner_version_at_consume = int(learner_version)
             decision = self.admission.admit(item)
+            tr = self.tracer
             with self._cond:
                 if not decision.admit:
                     self._dropped += 1
@@ -151,6 +171,15 @@ class TrajectoryQueue:
                     self._drops_by_reason[reason] = (
                         self._drops_by_reason.get(reason, 0) + 1
                     )
+                    depth = len(self._dq)
+                    if tr.enabled:
+                        tr.instant(
+                            "queue_drop", pid="runtime", tid="queue",
+                            reason=reason, lag=item.lag,
+                            tv=item.tv if item.tv is not None
+                            else decision.tv)
+                        tr.counter("queue_depth", pid="runtime",
+                                   depth=float(depth))
                     continue
                 item.weight = float(decision.weight)
                 item.tv = decision.tv
@@ -158,6 +187,13 @@ class TrajectoryQueue:
                     self._downweighted += 1
                 self._admitted += 1
                 self._lag_histogram.record(item.lag)
+                depth = len(self._dq)
+            if tr.enabled:
+                tr.instant("queue_pop", pid="runtime", tid="queue",
+                           lag=item.lag, weight=item.weight,
+                           tv=item.tv)
+                tr.counter("queue_depth", pid="runtime",
+                           depth=float(depth))
             return item
 
     # -- introspection -------------------------------------------------------

@@ -164,6 +164,12 @@ class LagRegime:
         self.store = store
         self.queue = queue
 
+    @property
+    def tracer(self):
+        """The queue's tracer — one trace covers production, queueing
+        and consumption without extra plumbing."""
+        return self.queue.tracer
+
     def start(self) -> None:  # pragma: no cover - trivial
         pass
 
@@ -224,7 +230,8 @@ class BackwardMixtureRegime(LagRegime):
 
     def fill(self) -> None:
         buffer, slot_versions, learner_version = self.store.snapshot_state()
-        payload, slots = self.producer(buffer)
+        with self.tracer.span("produce", pid="runtime", tid="producer"):
+            payload, slots = self.producer(buffer)
         versions = slot_versions[np.asarray(slots)]
         # A mixture item's representative version is its *oldest* policy
         # (conservative for max-lag admission); the full per-actor version
@@ -255,8 +262,11 @@ class ForwardNRegime(LagRegime):
     def fill(self) -> None:
         params, version = self.store.latest()
         for _ in range(self.n_items):
+            with self.tracer.span("produce", pid="runtime",
+                                  tid="producer", version=version):
+                payload = _stamp_versions(self.producer(params), version)
             self.queue.put(
-                _stamp_versions(self.producer(params), version),
+                payload,
                 behavior_version=version,
                 learner_version=version,
             )
@@ -297,7 +307,10 @@ class ThreadedRegime(LagRegime):
                 self.max_items is None or self.produced < self.max_items
             ):
                 params, version = self.store.latest()
-                payload = _stamp_versions(self.producer(params), version)
+                with self.tracer.span("produce", pid="runtime",
+                                      tid="producer", version=version):
+                    payload = _stamp_versions(
+                        self.producer(params), version)
                 try:
                     self.queue.put(
                         payload,

@@ -82,6 +82,7 @@ paying for long drafts; the chosen-k histogram lands in
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -93,8 +94,11 @@ import numpy as np
 from repro.data.tokenizer import EOS, PAD
 from repro.distributed.sharding import replicated, shard_paged_pool
 from repro.kernels.ops import mesh_data_size
-from repro.metrics.runtime_metrics import LagHistogram
+from repro.metrics.runtime_metrics import LagHistogram, collect_serve_stats
 from repro.models.registry import ModelBundle
+from repro.obs.perfetto import trace_annotation
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.models.transformer import (copy_page_rows,
                                       write_prefill_batch_to_pages)
 from repro.rollout.sampler import _top_p_filter, speculative_accept
@@ -244,6 +248,9 @@ class ServeEngine:
         speculate_adaptive: bool = False,
         prefix_cache: bool = False,
         window_reclaim: bool = True,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        annotate: bool = False,
     ) -> None:
         """``speculate_k > 0`` turns on speculative decode; ``draft`` is
         one of ``("version", -n)`` (self-speculation from the store's
@@ -267,6 +274,15 @@ class ServeEngine:
         ``window_reclaim`` (on by default, a no-op unless EVERY layer is
         windowed) releases pages entirely behind the widest sliding
         window back to the pool.
+
+        ``tracer`` (an ``obs.Tracer``; default: the zero-cost
+        ``NULL_TRACER``) records the request lifecycle and dispatch
+        spans; ``metrics`` (an ``obs.MetricsRegistry``; default: a
+        fresh one) receives the engine's serve-time histograms (TTFT,
+        inter-token, queue-wait, request latency) and the ``"serve"``
+        snapshot producer.  ``annotate=True`` wraps jitted dispatches
+        in ``jax.profiler`` trace annotations so device-side profiler
+        captures show the engine's phase names.
         """
         if bundle.decode_step_paged is None:
             from repro.models.transformer import paged_arch_unsupported
@@ -277,6 +293,20 @@ class ServeEngine:
             raise ValueError("need params or a PolicyStore")
         self.bundle = bundle
         self.store = store
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.metrics.register_producer(
+            "serve", lambda: collect_serve_stats(self))
+        # Serve-time latency histograms: observed always (raw-sample
+        # reservoirs are cheap), reported via collect_serve_stats.
+        self._h_ttft = self.metrics.histogram("serve_ttft_s")
+        self._h_inter_token = self.metrics.histogram("serve_inter_token_s")
+        self._h_queue_wait = self.metrics.histogram("serve_queue_wait_s")
+        self._h_latency = self.metrics.histogram("serve_request_latency_s")
+        self._h_swap_stale = self.metrics.histogram("serve_swap_to_stale_s")
+        self._swap_mono: Optional[float] = None   # last in-flight swap
+        self._ann = (trace_annotation if annotate
+                     else (lambda name: contextlib.nullcontext()))
         self.swap_interval = max(int(swap_interval), 1)
         if store is not None:
             self.params, self.version = store.latest()
@@ -297,7 +327,7 @@ class ServeEngine:
         self.prefix_cache = bool(prefix_cache)
         self.allocator = make_allocator(
             num_blocks, block_size, self.num_shards,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache, tracer=self.tracer)
         windows = [bundle.cfg.window_for_layer(layer)
                    for layer in range(bundle.cfg.n_layers)]
         self._reclaim_window = (
@@ -307,7 +337,8 @@ class ServeEngine:
             self.allocator, max_batch=max_batch,
             max_blocks_per_request=max_blocks_per_request,
             prefix_fn=self._prefix_key if self.prefix_cache else None,
-            reclaim_window=self._reclaim_window)
+            reclaim_window=self._reclaim_window,
+            tracer=self.tracer)
         self.pages = shard_paged_pool(
             bundle.init_paged_cache(num_blocks, block_size), mesh)
         self.max_batch = max_batch
@@ -461,10 +492,17 @@ class ServeEngine:
             return
         params, version = self.store.latest()
         if version != self.version:
+            old = self.version
             if self.mesh is not None:
                 params = jax.device_put(params, replicated(self.mesh))
             self.params, self.version = params, version
             self.stats.swaps += 1
+            # Swap-to-first-stale-token latency: armed here, observed by
+            # the next _record (whose token carries the new version).
+            self._swap_mono = time.monotonic()
+            tr = self.tracer
+            if tr.enabled:
+                tr.instant("swap", tid="engine", old=old, new=version)
             self._refresh_draft()
 
     # -- prefix cache ---------------------------------------------------------
@@ -727,6 +765,8 @@ class ServeEngine:
                 self.allocator.release([req.cow_src[0]], req.shard or 0)
                 req.cow_src = None
             self.stats.cow_copies += n
+            if self.tracer.enabled:
+                self.tracer.instant("cow_copy", tid="engine", n=n)
         key = (t_pad, n)
         fn = self._suffix_fns.get(key)
         if fn is None:
@@ -737,9 +777,12 @@ class ServeEngine:
         cap_d = jnp.asarray(cap)
         home_d = jnp.asarray(home)
         tlast = jnp.full((n,), t - 1, jnp.int32)
-        tok, lp, self.pages = fn(
-            self.params, toks_d, self.pages, tables_d, pos_d, cap_d,
-            home_d, tlast, self._next_key())
+        with self.tracer.span("suffix_prefill", tid="engine", n=n,
+                              suffix=t), \
+                self._ann("serve.suffix_prefill"):
+            tok, lp, self.pages = fn(
+                self.params, toks_d, self.pages, tables_d, pos_d, cap_d,
+                home_d, tlast, self._next_key())
         self.stats.prefills += n
         self.stats.prefill_dispatches += 1
         self.stats.prefill_tokens += n * t
@@ -806,10 +849,13 @@ class ServeEngine:
         fn = self._prefill_fns.get(key)
         if fn is None:
             fn = self._prefill_fns[key] = self._make_prefill(padded, n)
-        toks, lps, self.pages = fn(
-            self.params, jnp.asarray(rows), jnp.asarray(kv_valid),
-            jnp.asarray(tables), jnp.asarray(plens), jnp.asarray(home),
-            self.pages, self._next_key())
+        with self.tracer.span("prefill", tid="engine", n=n,
+                              padded=padded), \
+                self._ann("serve.prefill"):
+            toks, lps, self.pages = fn(
+                self.params, jnp.asarray(rows), jnp.asarray(kv_valid),
+                jnp.asarray(tables), jnp.asarray(plens),
+                jnp.asarray(home), self.pages, self._next_key())
         self.stats.prefills += n
         self.stats.prefill_dispatches += 1
         self.stats.prefill_tokens += int(plens.sum())
@@ -874,12 +920,30 @@ class ServeEngine:
     def _record(self, req: Request, tok: int, lp: float,
                 finished: List[ServedTrajectory]) -> None:
         """Book one emitted token; retire the request when done."""
+        now = time.monotonic()
         if req.first_token_time is None:
-            req.first_token_time = time.monotonic()
+            req.first_token_time = now
+            self._h_ttft.observe(now - req.submit_time)
+        else:
+            self._h_inter_token.observe(now - req.last_emit_time)
+        req.last_emit_time = now
+        if self._swap_mono is not None:
+            # First token after an in-flight swap: how long until the
+            # new policy's first served token reached a client.
+            self._h_swap_stale.observe(now - self._swap_mono)
+            self._swap_mono = None
         req.tokens.append(tok)
         req.log_beta.append(lp)
         req.versions.append(self.version)
         self.stats.tokens_out += 1
+        tr = self.tracer
+        if tr.full:
+            # Per-token provenance stream: trace_report builds the
+            # lag-at-emission histogram from exactly these events.
+            lag = (self.store.version - self.version
+                   if self.store is not None else 0)
+            tr.instant("token", tid="tokens", rid=req.request_id,
+                       v=self.version, lag=lag, tok=tok)
         if tok == EOS:
             self._finish(req, "eos", finished)
         elif len(req.tokens) >= req.max_new_tokens:
@@ -893,6 +957,7 @@ class ServeEngine:
         self.scheduler.retire(req, reason)
         self._clear_slot(slot)
         self.stats.finished += 1
+        self._h_latency.observe(req.finish_time - req.submit_time)
         n = len(req.tokens)
         finished.append(ServedTrajectory(
             request_id=req.request_id,
@@ -920,11 +985,17 @@ class ServeEngine:
         """One scheduling round + decode chunk (or speculative round);
         returns newly finished trajectories."""
         finished: List[ServedTrajectory] = []
+        tr = self.tracer
         self._maybe_swap()
         self.stats.steps += 1
         lookahead = self.speculate_k or self.decode_chunk
-        admitted, _ = self.scheduler.schedule(lookahead=lookahead)
+        with tr.span("schedule", tid="engine"):
+            admitted, _ = self.scheduler.schedule(lookahead=lookahead)
         self.stats.preemptions = self.scheduler.preemptions
+        if admitted:
+            now = time.monotonic()
+            for req in admitted:
+                self._h_queue_wait.observe(now - req.queued_time)
         for req in admitted:
             # Fresh occupant: the acceptance EMA of whoever held this
             # slot before says nothing about the new request.
@@ -947,20 +1018,40 @@ class ServeEngine:
                 remaining[slot] = req.max_new_tokens - len(req.tokens)
         if self.prefix_cache:
             self._assert_write_pages_private()
+        if tr.enabled:
+            # Counter tracks: load, pool occupancy (per shard), live
+            # policy lag (publishes the engine hasn't swapped in yet).
+            sched = self.scheduler
+            tr.counter("serve_load", waiting=float(len(sched.waiting)),
+                       running=float(len(sched.running)))
+            alloc = self.allocator
+            if getattr(alloc, "num_shards", 1) > 1:
+                tr.counter("pool_free", **{
+                    f"shard{s}": float(f)
+                    for s, f in enumerate(alloc.free_by_shard())})
+            else:
+                tr.counter("pool_free", free=float(alloc.num_free))
+            if self.store is not None:
+                tr.counter("policy_lag",
+                           lag=float(self.store.version - self.version))
         if not self._active.any():
             return finished
         if self.speculate_k:
-            self._spec_round(finished)
+            with tr.span("spec_round", tid="engine"):
+                self._spec_round(finished)
             return finished
-        toks, lps, masks, self.pages = self._decode(
-            self.params, jnp.asarray(self._last_tok), self.pages,
-            self._dev("tables", self._tables), jnp.asarray(self._pos),
-            self._dev("active", self._active),
-            self._dev("remaining", remaining),
-            self._dev("slot_shard", self._slot_shard), self._next_key())
-        toks_np = np.asarray(toks)       # [chunk, B]
-        lps_np = np.asarray(lps)
-        masks_np = np.asarray(masks)
+        with tr.span("decode", tid="engine", chunk=self.decode_chunk), \
+                self._ann("serve.decode"):
+            toks, lps, masks, self.pages = self._decode(
+                self.params, jnp.asarray(self._last_tok), self.pages,
+                self._dev("tables", self._tables), jnp.asarray(self._pos),
+                self._dev("active", self._active),
+                self._dev("remaining", remaining),
+                self._dev("slot_shard", self._slot_shard),
+                self._next_key())
+            toks_np = np.asarray(toks)       # [chunk, B]
+            lps_np = np.asarray(lps)
+            masks_np = np.asarray(masks)
         self.stats.occupancy_sum += float(masks_np.sum())
         self.stats.decode_steps += self.decode_chunk
         for req in list(self.scheduler.running):
@@ -1016,19 +1107,25 @@ class ServeEngine:
     def _spec_round(self, finished: List[ServedTrajectory]) -> None:
         """One draft-then-verify round: k cheap draft steps, one
         multi-token verifier dispatch, accept/rollback by pos rewind."""
+        tr = self.tracer
         k = self._choose_k()
         self._chosen_k_hist.record(k)
         cap = np.zeros((self.max_batch,), np.int32)
         for req in self.scheduler.running:
             cap[req.slot] = len(req.blocks) * self.block_size
         if isinstance(self.draft, ModelDraft):
-            draft_toks, draft_logits, self.draft.pages = self._draft_fn(k)(
-                self.draft.params, jnp.asarray(self._last_tok),
-                self.draft.pages, self._dev("tables", self._tables),
-                jnp.asarray(self._pos), self._dev("active", self._active),
-                self._dev("cap", cap),
-                self._dev("slot_shard", self._slot_shard),
-                self._next_key())
+            with tr.span("draft", tid="engine", k=k), \
+                    self._ann("serve.draft"):
+                draft_toks, draft_logits, self.draft.pages = \
+                    self._draft_fn(k)(
+                        self.draft.params, jnp.asarray(self._last_tok),
+                        self.draft.pages,
+                        self._dev("tables", self._tables),
+                        jnp.asarray(self._pos),
+                        self._dev("active", self._active),
+                        self._dev("cap", cap),
+                        self._dev("slot_shard", self._slot_shard),
+                        self._next_key())
         else:
             prop_np = np.zeros((self.max_batch, k), np.int32)
             for req in self.scheduler.running:
@@ -1042,21 +1139,30 @@ class ServeEngine:
             oh = np.full((self.max_batch, k, vocab), -1e9, np.float32)
             np.put_along_axis(oh, prop_np[..., None], 0.0, axis=-1)
             draft_logits = jnp.asarray(oh)
-        toks, lps, n_acc, n_emit, self.pages = self._verify_fn(k)(
-            self.params, jnp.asarray(self._last_tok), draft_toks,
-            draft_logits, self.pages, self._dev("tables", self._tables),
-            jnp.asarray(self._pos), self._dev("active", self._active),
-            self._dev("cap", cap),
-            self._dev("slot_shard", self._slot_shard),
-            self._next_key())
-        toks_np, lps_np, n_acc_np, n_emit_np = jax.device_get(
-            (toks, lps, n_acc, n_emit))
+        with tr.span("verify", tid="engine", k=k), \
+                self._ann("serve.verify"):
+            toks, lps, n_acc, n_emit, self.pages = self._verify_fn(k)(
+                self.params, jnp.asarray(self._last_tok), draft_toks,
+                draft_logits, self.pages,
+                self._dev("tables", self._tables),
+                jnp.asarray(self._pos), self._dev("active", self._active),
+                self._dev("cap", cap),
+                self._dev("slot_shard", self._slot_shard),
+                self._next_key())
+            toks_np, lps_np, n_acc_np, n_emit_np = jax.device_get(
+                (toks, lps, n_acc, n_emit))
         n_active = int(self._active.sum())
         self.stats.decode_steps += 1
         self.stats.occupancy_sum += float(n_active)
         self.stats.spec_rounds += 1
         self.stats.drafted_tokens += k * n_active
-        self.stats.accepted_tokens += int(n_acc_np[self._active].sum())
+        accepted = int(n_acc_np[self._active].sum())
+        self.stats.accepted_tokens += accepted
+        if tr.enabled:
+            rejected = k * n_active - accepted
+            if rejected:
+                tr.instant("rollback", tid="engine", k=k,
+                           rejected=rejected)
         if self.speculate_adaptive:
             # Acceptance EMA feeds the next round's adaptive k choice.
             a = self._accept_ema_alpha

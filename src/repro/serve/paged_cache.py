@@ -60,6 +60,8 @@ from typing import (Deque, Dict, Iterable, List, Optional, Sequence, Tuple)
 
 import numpy as np
 
+from repro.obs.tracer import NULL_TRACER, Tracer
+
 # Block-table sentinel: a page released early (window reclamation) but
 # whose table position must survive so later pages keep their offsets.
 RECLAIMED = -1
@@ -203,13 +205,17 @@ class BlockAllocator:
     num_shards = 1
 
     def __init__(self, num_blocks: int, block_size: int, *,
-                 prefix_cache: bool = False) -> None:
+                 prefix_cache: bool = False,
+                 tracer: Tracer = NULL_TRACER,
+                 shard_id: int = 0) -> None:
         if num_blocks < 1 or block_size < 1:
             raise ValueError(
                 f"need positive pool, got {num_blocks}x{block_size}")
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.tracer = tracer
+        self.shard_id = shard_id
         # FIFO reuse spreads writes across the pool, which keeps stale
         # rows cold and makes use-after-free bugs loud in tests.
         self._free: Deque[int] = deque(range(num_blocks))
@@ -272,6 +278,10 @@ class BlockAllocator:
                 if self._index is not None:
                     self._index.drop_page(b)
                 self.evictions += 1
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "cache_evict", tid="pool", page=b,
+                        shard=self.shard_id)
             self._refs[b] = 1
             out.append(b)
         return out
@@ -407,7 +417,8 @@ class ShardedBlockAllocator:
     """
 
     def __init__(self, num_blocks: int, block_size: int,
-                 num_shards: int, *, prefix_cache: bool = False) -> None:
+                 num_shards: int, *, prefix_cache: bool = False,
+                 tracer: Tracer = NULL_TRACER) -> None:
         if num_shards < 1:
             raise ValueError(f"need >= 1 shard, got {num_shards}")
         if num_blocks % num_shards != 0:
@@ -418,10 +429,12 @@ class ShardedBlockAllocator:
         self.num_blocks = num_blocks
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.tracer = tracer
         self._shards = [
             BlockAllocator(num_blocks // num_shards, block_size,
-                           prefix_cache=prefix_cache)
-            for _ in range(num_shards)
+                           prefix_cache=prefix_cache, tracer=tracer,
+                           shard_id=s)
+            for s in range(num_shards)
         ]
 
     @property
@@ -483,10 +496,11 @@ class ShardedBlockAllocator:
 
 
 def make_allocator(num_blocks: int, block_size: int,
-                   num_shards: int = 1, *, prefix_cache: bool = False):
+                   num_shards: int = 1, *, prefix_cache: bool = False,
+                   tracer: Tracer = NULL_TRACER):
     """Allocator for an ``num_shards``-way partitioned pool (1 = plain)."""
     if num_shards <= 1:
         return BlockAllocator(num_blocks, block_size,
-                              prefix_cache=prefix_cache)
+                              prefix_cache=prefix_cache, tracer=tracer)
     return ShardedBlockAllocator(num_blocks, block_size, num_shards,
-                                 prefix_cache=prefix_cache)
+                                 prefix_cache=prefix_cache, tracer=tracer)

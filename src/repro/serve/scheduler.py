@@ -45,6 +45,7 @@ from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.serve.paged_cache import (BlockAllocator, PrefixKey, PrefixMatch,
                                      RECLAIMED)
 
@@ -76,7 +77,12 @@ class Request:
     log_beta: List[float] = field(default_factory=list)
     versions: List[int] = field(default_factory=list)
     submit_time: float = field(default_factory=time.monotonic)
+    # When the request last entered the waiting queue (submit or
+    # preemption re-queue): admission queue-wait is measured from here,
+    # NOT from submit_time (which anchors TTFT).
+    queued_time: float = field(default_factory=time.monotonic)
     first_token_time: Optional[float] = None   # admission latency probe
+    last_emit_time: Optional[float] = None     # inter-token latency probe
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
     num_preemptions: int = 0
@@ -112,8 +118,10 @@ class ContinuousBatchingScheduler:
         max_blocks_per_request: int,
         prefix_fn: Optional[Callable[[Request], PrefixKey]] = None,
         reclaim_window: Optional[int] = None,
+        tracer: Tracer = NULL_TRACER,
     ) -> None:
         self.allocator = allocator
+        self.tracer = tracer
         self.max_batch = max_batch
         self.max_blocks_per_request = max_blocks_per_request
         # Content address of a request's committed ids (engine-provided,
@@ -160,7 +168,14 @@ class ContinuousBatchingScheduler:
                 f"({total} rows > {self.allocator.shard_num_blocks} pages "
                 f"x {self.allocator.block_size})")
         req.state = RequestState.WAITING
+        req.queued_time = time.monotonic()
         self.waiting.append(req)
+        tr = self.tracer
+        if tr.enabled:
+            tr.instant("submit", tid="scheduler", rid=req.request_id,
+                       prompt_len=req.prompt_len,
+                       max_new=req.max_new_tokens)
+            tr.async_begin("waiting", req.request_id)
 
     def _release_all(self, req: Request) -> None:
         """Drop every page reference `req` holds (RECLAIMED sentinels
@@ -184,9 +199,19 @@ class ContinuousBatchingScheduler:
         and registered pages park on the evictable LRU for future
         matches instead of returning to the free list outright.
         """
+        was_running = req.state is RequestState.RUNNING
         req.state = RequestState.FINISHED
         req.finish_reason = reason
         req.finish_time = time.monotonic()
+        tr = self.tracer
+        if tr.enabled:
+            if was_running:
+                tr.async_end("running", req.request_id)
+            else:
+                tr.async_end("waiting", req.request_id)
+            tr.instant("retire", tid="scheduler", rid=req.request_id,
+                       reason=reason, tokens=len(req.tokens),
+                       preemptions=req.num_preemptions)
         self._release_all(req)
         if req.slot is not None:
             self.slots[req.slot] = None
@@ -197,12 +222,20 @@ class ContinuousBatchingScheduler:
     def _preempt(self, victim: Request) -> None:
         self.preemptions += 1
         victim.num_preemptions += 1
+        tr = self.tracer
+        if tr.enabled:
+            tr.async_end("running", victim.request_id)
+            tr.instant("preempt", tid="scheduler",
+                       rid=victim.request_id, shard=victim.shard or 0,
+                       tokens=len(victim.tokens))
+            tr.async_begin("waiting", victim.request_id)
         self._release_all(victim)
         if victim.slot is not None:
             self.slots[victim.slot] = None
             victim.slot = None
         self._admission_order.remove(victim)
         victim.state = RequestState.WAITING
+        victim.queued_time = time.monotonic()
         self.waiting.appendleft(victim)
 
     # -- shard placement ------------------------------------------------------
@@ -340,6 +373,12 @@ class ContinuousBatchingScheduler:
             self.slots[req.slot] = req
             self._admission_order.append(req)
             admitted.append(req)
+            tr = self.tracer
+            if tr.enabled:
+                tr.async_end("waiting", req.request_id)
+                tr.async_begin("running", req.request_id,
+                               slot=req.slot, shard=shard,
+                               matched=req.num_matched)
         return admitted, preempted
 
     # -- prefix matching at admission -----------------------------------------

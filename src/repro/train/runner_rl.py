@@ -69,6 +69,7 @@ class AsyncRLRunConfig:
     admission_delta: Optional[float] = None  # tv_gate delta (default hp.delta)
     admission_mode: str = "drop"       # tv_gate: drop|downweight
     get_timeout: float = 120.0         # learner wait per item (threaded)
+    tracer: Any = None                 # obs.Tracer (None = no tracing)
 
 
 @dataclass
@@ -109,7 +110,11 @@ def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
     train_phase = make_train_phase(hp)
 
     # --- runtime assembly ---------------------------------------------------
-    store = PolicyStore(params, capacity=cfg.buffer_capacity)
+    from repro.obs.tracer import NULL_TRACER
+
+    tracer = cfg.tracer if cfg.tracer is not None else NULL_TRACER
+    store = PolicyStore(params, capacity=cfg.buffer_capacity,
+                        tracer=tracer)
     admission = make_admission(
         cfg.admission,
         max_lag=cfg.max_lag,
@@ -121,6 +126,7 @@ def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
     queue = TrajectoryQueue(
         maxsize=cfg.queue_maxsize if cfg.runtime == "threaded" else 0,
         admission=admission,
+        tracer=tracer,
     )
     if cfg.runtime == "backward_mixture":
         producer = MixtureRolloutProducer(
@@ -160,10 +166,13 @@ def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
             if item is None:
                 break  # producer exhausted / everything dropped
             key, k_train, k_eval = jax.random.split(key, 3)
-            state, metrics = train_phase(
-                state, item.payload, k_train,
-                weight=jnp.float32(item.weight),
-            )
+            with tracer.span("learner_step", pid="train", tid="learner",
+                             lag=item.lag, weight=float(item.weight)):
+                state, metrics = train_phase(
+                    state, item.payload, k_train,
+                    weight=jnp.float32(item.weight),
+                )
+                metrics = jax.device_get(metrics)
             store.publish(state.params)
             ret = float(eval_fn(state.params, k_eval))
             returns.append(ret)

@@ -23,6 +23,7 @@ each phase — no backward lag), matching App. C.2.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -35,6 +36,8 @@ from repro.core.tv_filter import tv_estimate
 from repro.data.mathgen import MathTaskDataset
 from repro.metrics.runtime_metrics import collect_runtime_stats
 from repro.models.registry import ModelBundle
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.optim import (
     AdamWConfig,
     AdamWState,
@@ -174,10 +177,17 @@ class RLVRTrainer:
         dataset: MathTaskDataset,
         hp: RLVRHyperparams,
         seed: int = 0,
+        tracer: Optional[Tracer] = None,
+        metrics: Optional[MetricsRegistry] = None,
     ) -> None:
         self.bundle = bundle
         self.dataset = dataset
         self.hp = hp
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._h_step = self.metrics.histogram("train_step_s")
+        self.metrics.register_producer(
+            "train", lambda: collect_runtime_stats(self.store, self.queue))
         key = jax.random.PRNGKey(seed)
         params = bundle.init(key)
         self.state = RLVRTrainState(
@@ -198,7 +208,8 @@ class RLVRTrainer:
         self._warmup = make_warmup_step(bundle, hp)
 
         # --- runtime assembly ------------------------------------------------
-        self.store = PolicyStore(params, capacity=hp.store_capacity)
+        self.store = PolicyStore(params, capacity=hp.store_capacity,
+                                 tracer=self.tracer)
         tv_fn = None
         if hp.admission == "tv_gate":
             tv_fn = self._make_tv_fn()
@@ -213,6 +224,7 @@ class RLVRTrainer:
                 tv_fn=tv_fn,
                 mode=hp.admission_mode,
             ),
+            tracer=self.tracer,
         )
         self.regime = make_regime(
             hp.runtime, self.store, self.queue,
@@ -310,9 +322,14 @@ class RLVRTrainer:
             adv = group_advantages(
                 mb.rewards, hp.completions_per_prompt)
             adv = adv * jnp.float32(item.weight)
-            self.state, aux = self._update(
-                self.state, mb.gen.tokens, mb.gen.log_beta, mb.gen.mask,
-                adv)
+            t0 = time.monotonic()
+            with self.tracer.span("learner_step", pid="train", tid="learner",
+                                  lag=item.lag, weight=float(item.weight)):
+                self.state, aux = self._update(
+                    self.state, mb.gen.tokens, mb.gen.log_beta, mb.gen.mask,
+                    adv)
+                aux = {k: jax.device_get(v) for k, v in aux.items()}
+            self._h_step.observe(time.monotonic() - t0)
             self.store.publish(self.state.params)
             frac = aux.get("frac_filtered", aux.get("clip_frac", 0.0))
             logs.append(RLVRPhaseLog(

@@ -360,3 +360,155 @@ def test_threaded_engine_regime_requires_shared_store():
     with pytest.raises(ValueError, match="share"):
         make_regime("threaded_engine", store, TrajectoryQueue(),
                     lambda: None, engine=eng)
+
+
+# --- tracing provenance (acceptance: trace == ServeStats, spans balance) ----
+
+
+from repro.metrics.runtime_metrics import collect_serve_stats  # noqa: E402
+from repro.obs import Tracer  # noqa: E402
+
+
+def _assert_balanced(events):
+    """Every sync B nests and closes; every async b gets its e."""
+    stacks = {}
+    opens = {}
+    for ev in events:
+        key = (ev.pid, ev.tid)
+        if ev.ph == "B":
+            stacks.setdefault(key, []).append(ev.name)
+        elif ev.ph == "E":
+            assert stacks.get(key), f"E {ev.name} on empty track {key}"
+            assert stacks[key][-1] == ev.name, (
+                f"E {ev.name} closes {stacks[key][-1]}")
+            stacks[key].pop()
+        elif ev.ph == "b":
+            opens[(ev.name, ev.id)] = opens.get((ev.name, ev.id), 0) + 1
+        elif ev.ph == "e":
+            assert opens.get((ev.name, ev.id), 0) > 0, (
+                f"e {ev.name} id={ev.id} never opened")
+            opens[(ev.name, ev.id)] -= 1
+    assert all(not s for s in stacks.values()), f"left open: {stacks}"
+    assert all(n == 0 for n in opens.values()), f"async open: {opens}"
+
+
+def _token_events(tr):
+    return [e for e in tr.events() if e.ph == "i" and e.name == "token"]
+
+
+def test_tracing_matches_stats_under_preemption_churn():
+    """Full-detail trace of the preemption-churn config: spans balance,
+    and the per-token event stream reproduces every request's tokens,
+    versions, and the engine's aggregate counters exactly."""
+    tr = Tracer(detail="full")
+    eng = ServeEngine(BUNDLE, PARAMS, num_blocks=7, block_size=4,
+                      max_batch=3, max_seq_len=64, temperature=1e-4,
+                      seed=0, tracer=tr)
+    reqs = [eng.submit(r, n) for r, n in zip(PROMPTS, BUDGETS)]
+    trajs = {t.request_id: t for t in eng.run(max_steps=400)}
+    assert eng.stats.preemptions > 0
+    evs = tr.events()
+    _assert_balanced(evs)
+
+    toks = _token_events(tr)
+    assert len(toks) == eng.stats.tokens_out == sum(BUDGETS)
+    by_rid = {}
+    for ev in toks:
+        by_rid.setdefault(ev.args["rid"], []).append(ev)
+    assert set(by_rid) == {r.request_id for r in reqs}
+    for rid, seq in by_rid.items():
+        np.testing.assert_array_equal(
+            [e.args["tok"] for e in seq], trajs[rid].tokens)
+        np.testing.assert_array_equal(
+            [e.args["v"] for e in seq], trajs[rid].versions)
+
+    preempts = [e for e in evs if e.ph == "i" and e.name == "preempt"]
+    assert len(preempts) == eng.stats.preemptions
+    retires = [e for e in evs if e.ph == "i" and e.name == "retire"]
+    assert len(retires) == len(reqs)
+    assert {e.args["rid"] for e in retires} == set(by_rid)
+
+    # Latency histograms saw every emission: one TTFT per request, one
+    # inter-token gap per remaining token (preemption gaps included).
+    stats = collect_serve_stats(eng)
+    assert stats["ttft_count"] == len(reqs)
+    assert stats["inter_token_count"] == eng.stats.tokens_out - len(reqs)
+    assert stats["request_latency_count"] == len(reqs)
+    assert stats["queue_wait_count"] >= len(reqs) + eng.stats.preemptions
+
+
+def test_tracing_swap_provenance_matches_versions():
+    """In-flight swap: the trace's swap instant and per-token version
+    stream agree with the trajectory's recorded provenance, and the
+    swap-to-first-stale-token histogram fires exactly once."""
+    tr = Tracer(detail="full")
+    store = PolicyStore(PARAMS, capacity=4)
+    eng = ServeEngine(BUNDLE, store=store, num_blocks=32, block_size=4,
+                      max_batch=2, max_seq_len=64, temperature=1.0,
+                      seed=3, tracer=tr)
+    eng.submit(PROMPTS[0], 12)
+    for _ in range(5):
+        assert not eng.step()
+    store.publish(jax.tree.map(lambda x: x + 0.01, PARAMS))
+    traj = eng.run(max_steps=200)[0]
+    _assert_balanced(tr.events())
+
+    swaps = [e for e in tr.events() if e.ph == "i" and e.name == "swap"]
+    assert len(swaps) == 1 == eng.stats.swaps
+    assert swaps[0].args == {"old": 0, "new": 1}
+    toks = _token_events(tr)
+    np.testing.assert_array_equal(
+        [e.args["v"] for e in toks], traj.versions)
+    assert traj.versions[0] == 0 and traj.versions[-1] == 1
+    # every post-swap token was emitted after the swap instant
+    first_new = next(e for e in toks if e.args["v"] == 1)
+    assert first_new.ts >= swaps[0].ts
+    assert collect_serve_stats(eng)["swap_to_stale_count"] == 1
+
+
+def test_tracing_speculative_rollback_accounting():
+    """Adversarial draft: rollback instants account for exactly the
+    drafted-minus-accepted tokens ServeStats reports."""
+    tr = Tracer(detail="full")
+    bad_draft = lambda req, k: np.zeros((k,), np.int32)  # noqa: E731
+    eng = ServeEngine(BUNDLE, PARAMS, num_blocks=32, block_size=4,
+                      max_batch=2, max_seq_len=64, temperature=1e-4,
+                      seed=0, speculate_k=3, draft=bad_draft, tracer=tr)
+    for r in PROMPTS[:2]:
+        eng.submit(r, 8)
+    eng.run(max_steps=400)
+    _assert_balanced(tr.events())
+    assert eng.stats.drafted_tokens > 0
+    rejected = sum(
+        e.args["rejected"] for e in tr.events()
+        if e.ph == "i" and e.name == "rollback")
+    assert rejected == eng.stats.drafted_tokens - eng.stats.accepted_tokens
+    assert rejected > 0
+    # host-callable drafts don't dispatch a model, so no "draft" span —
+    # but every speculative round runs the fused verify.
+    verifies = [e for e in tr.events()
+                if e.ph == "B" and e.name == "verify"]
+    assert len(verifies) > 0
+
+
+def test_tracing_off_emits_nothing_and_matches_traced_run():
+    """NULL_TRACER (the default) records nothing, and tracing does not
+    perturb generation: greedy outputs are identical with and without
+    a full-detail tracer attached."""
+    from repro.obs import NULL_TRACER
+
+    def _run(tracer):
+        eng = ServeEngine(BUNDLE, PARAMS, num_blocks=7, block_size=4,
+                          max_batch=3, max_seq_len=64, temperature=1e-4,
+                          seed=0, tracer=tracer)
+        reqs = [eng.submit(r, n) for r, n in zip(PROMPTS, BUDGETS)]
+        trajs = {t.request_id: t for t in eng.run(max_steps=400)}
+        return [trajs[r.request_id].tokens for r in reqs]
+
+    before = len(NULL_TRACER)
+    plain = _run(None)
+    assert len(NULL_TRACER) == before == 0
+    tr = Tracer(detail="full")
+    traced = _run(tr)
+    for a, b in zip(plain, traced):
+        np.testing.assert_array_equal(a, b)
