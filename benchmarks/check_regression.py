@@ -110,6 +110,24 @@ RUNTIME_METRICS = (
     Metric("env_steps_per_s.backward_mixture", True, False),
     Metric("env_steps_per_s.threaded", True, False),
     Metric("env_steps_per_s.threaded_speedup", True, True),
+    # Lag-controller sweep (PR-8 acceptance bars), all cap-only: the
+    # sweep is deterministic at fixed seed (phase-locked serve producer,
+    # greedy eval), so the direction bands are the whole test and a
+    # baseline-relative band would only add flakes.
+    #
+    # The Eq. 8 TV gate must not *lose* final reward vs ungated
+    # consumption of the same max-lag stream — the paper's claim, as a
+    # floor at 0 (measured margin at the smoke config: ~ +0.16).
+    Metric("lag_sweep.tv_gate_advantage_at_max_lag", True, True,
+           hard_min=0.0, cap_only=True),
+    # Sanity bands on the sweep's extreme columns: pass_through must
+    # never drop, and a lag-2 eviction gate must drop the entire
+    # forced-lag-3 stream (the pre-ramped store makes staleness exact
+    # from the first minibatch).
+    Metric("lag_sweep.drop_rate_at_max_lag.pass_through", False, True,
+           hard_max=0.0, cap_only=True),
+    Metric("lag_sweep.drop_rate_at_max_lag.max_lag", True, True,
+           hard_min=0.99, cap_only=True),
 )
 
 # Sharded-serve job (forced multi-device CPU).  CPU sharding is a

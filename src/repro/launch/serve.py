@@ -99,6 +99,75 @@ def _parse_draft(spec: str, args, bundle, params, tok):
                      "or self")
 
 
+def _shadow_admission(args, engine, store, bundle, trajs):
+    """Replay retired trajectories through a lag controller's admission
+    hook — verdict-only (nothing is removed from the serve output), so
+    operators can preview what a trainer-side ``--controller`` would do
+    to this traffic before wiring it into a training run.
+
+    tv_gate scores each request's completion against the *latest*
+    policy (the store head under ``--runtime versioned``, else the
+    engine's params); tv_gate_tokenwise additionally segments by the
+    request's own per-token version record, so mid-swap requests get
+    the per-segment Eq. 8 treatment.  Verdicts land on the engine's
+    metrics registry as
+    ``serve_shadow_admission_total{controller,outcome,reason}``.
+    """
+    from repro.core.tv_filter import tv_estimate
+    from repro.rollout.sampler import score_tokens
+    from repro.runtime import make_controller, parse_controller_spec
+    from repro.runtime.queue import TrajectoryItem
+
+    spec = parse_controller_spec(args.controller)
+    ref_version = store.version if store is not None else engine.version
+
+    def _score(traj):
+        params = store.latest()[0] if store is not None else engine.params
+        prompt = np.asarray(traj.prompt)
+        row = np.concatenate([prompt, np.asarray(traj.tokens)])
+        log_pi, _, _ = score_tokens(
+            bundle, params, jnp.asarray(row)[None, :], len(prompt))
+        return log_pi
+
+    def tv_fn(traj):
+        log_pi = _score(traj)
+        return float(tv_estimate(
+            log_pi - jnp.asarray(traj.log_beta)[None, :],
+            jnp.asarray(traj.mask)[None, :]))
+
+    def token_tv_fn(traj):
+        log_pi = np.asarray(_score(traj))[0]
+        tv = 0.5 * np.abs(np.exp(log_pi - np.asarray(traj.log_beta)) - 1.0)
+        valid = np.asarray(traj.mask) > 0
+        return tv[valid], np.asarray(traj.versions)[valid]
+
+    controller = make_controller(spec, tv_fn=tv_fn,
+                                 token_tv_fn=token_tv_fn)
+    counts = {}
+    for t in trajs:
+        versions = np.asarray(t.versions)
+        oldest = int(versions.min()) if versions.size else ref_version
+        newest = int(versions.max()) if versions.size else ref_version
+        item = TrajectoryItem(
+            payload=t, behavior_version=oldest,
+            enqueue_learner_version=ref_version,
+            behavior_version_newest=newest,
+        )
+        item.learner_version_at_consume = ref_version
+        d = controller.admit(item)
+        outcome = ("drop" if not d.admit
+                   else "admit" if d.weight == 1.0 else "downweight")
+        counts[(outcome, d.reason)] = counts.get((outcome, d.reason), 0) + 1
+        engine.metrics.counter(
+            "serve_shadow_admission_total", controller=controller.name,
+            outcome=outcome, reason=d.reason).inc()
+    total = len(trajs)
+    print(f"  shadow controller {spec.canonical()!r} over {total} "
+          f"retired requests (verdict-only, nothing dropped):")
+    for (outcome, reason), n in sorted(counts.items()):
+        print(f"    {outcome:<10} reason={reason:<24} {n}/{total}")
+
+
 def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None,
                       tracer=None):
     from repro.data.mathgen import verify
@@ -193,6 +262,8 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None,
                 else f" [policy {_version_tag(t.versions)}]")
         print(f"  [{t.request_id}] -> {text!r} ({t.num_tokens} tok, "
               f"{t.finish_reason}, gold {ans}, reward {r}){vtag}")
+    if args.controller:
+        _shadow_admission(args, engine, store, bundle, trajs)
 
 
 def main(argv=None) -> int:
@@ -276,9 +347,17 @@ def main(argv=None) -> int:
                     help="versioned: serve through the PolicyStore "
                          "(staleness-taggable actor side of the runtime; "
                          "continuous engine swaps in-flight)")
+    ap.add_argument("--controller", default=None, metavar="SPEC",
+                    help="continuous: shadow-evaluate a lag controller "
+                         "('name:key=val,...', same grammar as the "
+                         "training launcher) over the retired requests "
+                         "— verdicts and reasons only, nothing dropped")
     args = ap.parse_args(argv)
     if args.requests is None:
         args.requests = args.batch
+    if args.controller and args.engine != "continuous":
+        raise SystemExit("--controller needs --engine continuous "
+                         "(shadow admission runs over retired requests)")
 
     from repro.obs.tracer import make_tracer
 

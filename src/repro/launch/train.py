@@ -2,7 +2,9 @@
 
 Two modes, matching the paper's two experimental regimes, both running on
 the unified async actor-learner runtime (``--runtime`` selects the lag
-regime, ``--admission`` the queue's data-admission policy):
+regime, ``--controller`` the queue's lag controller as a
+``"name:key=val,..."`` spec; the old ``--admission`` flags survive as
+deprecation shims):
 
   # classic RL (simulated-async MuJoCo-analog, §5.1)
   PYTHONPATH=src python -m repro.launch.train rl \\
@@ -12,12 +14,18 @@ regime, ``--admission`` the queue's data-admission policy):
   # genuinely concurrent producer thread + TV-gated admission
   PYTHONPATH=src python -m repro.launch.train rl \\
       --env pendulum --algorithm vaco --runtime threaded \\
-      --admission tv_gate --phases 30
+      --controller "tv_gate:delta=0.2,mode=downweight" --phases 30
 
   # RLVR (forward-lag GRPO/VACO, §5.2) on a reduced assigned arch
   PYTHONPATH=src python -m repro.launch.train rlvr \\
       --arch qwen2.5-0.5b --algorithm grpo_vaco --n-minibatches 8 \\
       --phases 20 --runtime forward_n
+
+  # RLVR with the ServeEngine as the rollout producer: real per-token
+  # {version, log_beta} provenance under a scripted 2-back lag
+  PYTHONPATH=src python -m repro.launch.train rlvr \\
+      --producer serve --forced-lag 2 \\
+      --controller "tv_gate:delta=0.05,mode=downweight" --phases 10
 
 On a real TPU cluster the same entry point runs under
 ``jax.distributed.initialize()`` with the production mesh from
@@ -37,14 +45,22 @@ def _add_runtime_args(p, *, regimes, default_regime,
                       ) -> None:
     p.add_argument("--runtime", default=default_regime, choices=regimes,
                    help="lag regime driving the actor-learner runtime")
-    p.add_argument("--admission", default="pass_through",
+    p.add_argument("--controller", default=None, metavar="SPEC",
+                   help="lag controller spec 'name:key=val,...' — e.g. "
+                        "'tv_gate:delta=0.2,mode=downweight', "
+                        "'stable_async:c_max=2.0'; see "
+                        "repro.runtime.available_controllers()")
+    # Deprecated string-keyed admission flags; kept as shims over
+    # --controller (explicit use warns and maps to the equivalent spec).
+    p.add_argument("--admission", default=None,
                    choices=list(admissions),
-                   help="trajectory-queue admission policy")
-    p.add_argument("--max-lag", type=int, default=4,
-                   help="max_lag admission: drop items older than this")
-    p.add_argument("--admission-mode", default="drop",
+                   help="DEPRECATED: use --controller 'name:...'")
+    p.add_argument("--max-lag", type=int, default=None,
+                   help="DEPRECATED: use --controller 'max_lag:max_lag=N'")
+    p.add_argument("--admission-mode", default=None,
                    choices=["drop", "downweight"],
-                   help="tv_gate*: drop over-threshold items or downweight")
+                   help="DEPRECATED: use --controller "
+                        "'tv_gate:delta=...,mode=...'")
     p.add_argument("--queue-maxsize", type=int, default=4,
                    help="bounded queue size (threaded backpressure)")
     p.add_argument("--trace", default=None, metavar="PATH",
@@ -55,6 +71,33 @@ def _add_runtime_args(p, *, regimes, default_regime,
     p.add_argument("--trace-detail", default="spans",
                    choices=["off", "spans", "full"],
                    help="trace verbosity (off disables the tracer)")
+
+
+def _resolve_controller(args, *, delta):
+    """Controller spec text from --controller or the deprecated
+    --admission/--max-lag/--admission-mode flags (explicit legacy use
+    warns and maps to the equivalent spec).  None = config default."""
+    legacy_used = (args.admission is not None
+                   or args.max_lag is not None
+                   or args.admission_mode is not None)
+    if args.controller is not None:
+        if legacy_used:
+            raise SystemExit(
+                "--controller conflicts with the deprecated --admission/"
+                "--max-lag/--admission-mode flags; pass one or the other")
+        return args.controller
+    if not legacy_used:
+        return None
+    from repro.runtime import spec_from_legacy
+
+    spec = spec_from_legacy(
+        args.admission or "pass_through",
+        max_lag=args.max_lag if args.max_lag is not None else 4,
+        delta=delta,
+        mode=args.admission_mode or "drop",
+        warn=True,
+    )
+    return spec.canonical()
 
 
 def main(argv=None) -> int:
@@ -90,6 +133,18 @@ def main(argv=None) -> int:
     rv.add_argument("--seed", type=int, default=0)
     rv.add_argument("--delta", type=float, default=0.05)
     rv.add_argument("--checkpoint-dir", default=None)
+    rv.add_argument("--producer", default="legacy",
+                    choices=["legacy", "serve"],
+                    help="rollout producer: the synthetic forward-lag "
+                         "generator, or the continuous-batching "
+                         "ServeEngine (real per-token provenance)")
+    rv.add_argument("--forced-lag", type=int, default=None,
+                    help="serve producer: generate from the learner's "
+                         "k-back snapshot (scripted lag)")
+    rv.add_argument("--max-new-tokens", type=int, default=None,
+                    help="completion length (default: hp default)")
+    rv.add_argument("--engine-max-batch", type=int, default=8,
+                    help="serve producer: engine decode batch size")
     # tv_gate_tokenwise: Eq. 8 per producing-version segment, scored by
     # a tv_fn closed over the PolicyStore (ROADMAP item).  RLVR-only:
     # classic-RL rollout payloads carry no per-token version record.
@@ -130,8 +185,7 @@ def main(argv=None) -> int:
             hp=RLHyperparams(delta=args.delta),
             runtime=args.runtime, forward_n=args.forward_n,
             queue_maxsize=args.queue_maxsize,
-            admission=args.admission, max_lag=args.max_lag,
-            admission_mode=args.admission_mode,
+            controller=_resolve_controller(args, delta=args.delta),
             tracer=tracer if args.trace else None,
         ))
         print(json.dumps({
@@ -155,13 +209,17 @@ def main(argv=None) -> int:
     cfg = reduced_config(args.arch, vocab=tok.vocab_size)
     bundle = build(cfg)
     ds = MathTaskDataset(prompt_len=32, level=args.level)
-    hp = RLVRHyperparams(
+    hp_kwargs = dict(
         algorithm=args.algorithm, n_minibatches=args.n_minibatches,
         warmup_steps=args.warmup_steps, delta=args.delta,
         runtime=args.runtime, queue_maxsize=args.queue_maxsize,
-        admission=args.admission, max_lag=args.max_lag,
-        admission_mode=args.admission_mode,
+        controller=_resolve_controller(args, delta=args.delta),
+        producer=args.producer, forced_lag=args.forced_lag,
+        engine_max_batch=args.engine_max_batch,
     )
+    if args.max_new_tokens is not None:
+        hp_kwargs["max_new_tokens"] = args.max_new_tokens
+    hp = RLVRHyperparams(**hp_kwargs)
     trainer = RLVRTrainer(bundle, ds, hp, seed=args.seed, tracer=tracer)
     wl = trainer.warmup()
     print(f"[warmup] loss={wl:.4f} acc={trainer.evaluate(128):.3f}")

@@ -37,6 +37,8 @@ class RuntimeQueueStats:
     admission_drop_rate: float
     drops_by_reason: Dict[str, int] = field(default_factory=dict)
     lag_histogram: Dict[int, int] = field(default_factory=dict)
+    controller: str = ""
+    downweights_by_reason: Dict[str, int] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, Any]:
         return {
@@ -50,6 +52,8 @@ class RuntimeQueueStats:
             "lag_histogram": {
                 str(k): v for k, v in self.lag_histogram.items()
             },
+            "controller": self.controller,
+            "downweights_by_reason": dict(self.downweights_by_reason),
         }
 
 
@@ -191,10 +195,22 @@ def collect_runtime_stats(store: Any, queue: Any) -> Dict[str, Any]:
     mean_lag = (
         sum(k * v for k, v in hist.items()) / total if total else 0.0
     )
-    return {
+    out = {
         "policy_version": store.version,
         "retained_versions": store.retained_versions(),
         "queue": stats.as_dict(),
         "mean_lag": mean_lag,
         "max_lag": max(hist) if hist else 0,
+        # The labelled-counter view of the same decisions, keyed by the
+        # active controller (satisfies dashboards that join on the
+        # queue_admission_total{controller,outcome,reason} counters).
+        "admission": {
+            "controller": stats.controller,
+            "drops_by_reason": dict(stats.drops_by_reason),
+            "downweights_by_reason": dict(stats.downweights_by_reason),
+        },
     }
+    counters_fn = getattr(queue, "admission_counters", None)
+    if counters_fn is not None:
+        out["admission"]["counters"] = counters_fn()
+    return out

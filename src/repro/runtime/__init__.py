@@ -3,17 +3,38 @@
 One subsystem behind both of the paper's experimental regimes (and a
 genuinely concurrent third): a versioned :class:`PolicyStore` that
 learners publish to and actors sample from, a staleness-tagged
-:class:`TrajectoryQueue` with pluggable admission control at the queue
-boundary, and three interchangeable lag regimes driving the same API.
+:class:`TrajectoryQueue` with pluggable lag control at the queue
+boundary (and beyond: per-token loss weighting and gradient feedback
+via the :class:`LagController` protocol), and interchangeable lag
+regimes — including the serve-backed :class:`ServeRolloutProducer` —
+driving the same API.
+
+Controllers are built from ``"name:key=val,..."`` specs
+(:func:`parse_controller_spec` / :func:`make_controller`); the
+string-keyed :func:`make_admission` factory survives as a deprecation
+shim.
 """
 from repro.runtime.admission import (
     AdmissionDecision,
     AdmissionPolicy,
+    LagController,
     MaxLagEviction,
     PassThrough,
     TokenwiseTVGate,
     TVGatedAdmission,
     make_admission,
+)
+from repro.runtime.controllers import (
+    AsymPOController,
+    ControllerContext,
+    ControllerSpec,
+    GradientAlignmentController,
+    StableAsyncController,
+    available_controllers,
+    make_controller,
+    parse_controller_spec,
+    register_controller,
+    spec_from_legacy,
 )
 from repro.runtime.policy_store import (
     PolicyStore,
@@ -32,15 +53,27 @@ from repro.runtime.regimes import (
     ThreadedRegime,
     make_regime,
 )
+from repro.runtime.serve_producer import ServeRolloutProducer
 
 __all__ = [
     "AdmissionDecision",
     "AdmissionPolicy",
+    "LagController",
     "MaxLagEviction",
     "PassThrough",
     "TokenwiseTVGate",
     "TVGatedAdmission",
     "make_admission",
+    "AsymPOController",
+    "ControllerContext",
+    "ControllerSpec",
+    "GradientAlignmentController",
+    "StableAsyncController",
+    "available_controllers",
+    "make_controller",
+    "parse_controller_spec",
+    "register_controller",
+    "spec_from_legacy",
     "PolicyStore",
     "SnapshotMeta",
     "StaleVersionError",
@@ -56,4 +89,5 @@ __all__ = [
     "MixtureRolloutProducer",
     "ThreadedRegime",
     "make_regime",
+    "ServeRolloutProducer",
 ]

@@ -1,20 +1,53 @@
-"""Admission policies for the trajectory queue (§4.2 at the queue boundary).
+"""Lag controllers at the trajectory-queue boundary (§4.2 and beyond).
 
 The paper applies its TV gate per minibatch inside the loss (Alg. 1 /
 ``core.tv_filter``).  Here the same estimator guards the *queue boundary*:
 whole trajectories whose measured TV against the current policy already
 exceeds delta/2 are dropped (or downweighted) before they ever reach the
 learner — staleness as a queue/controller property rather than a per-loss
-afterthought (GAC; Stable Asynchrony).
+afterthought.
 
-Policies are evaluated at *consume* time, when the learner's version — and
-hence the item's true lag — is known.
+The base class is the :class:`LagController` protocol, which spans the
+three decision points the related work needs:
+
+* **consume-time admission** (``admit``): drop / downweight / pass a
+  whole item before the learner sees it — the paper's Eq. 8 gate and
+  plain max-lag eviction live here;
+* **per-token loss weighting** (``loss_weights``): scale the advantage
+  of individual tokens, optionally against the learner's *current*
+  log-probs (``needs_log_pi``) — variance-controlled truncated
+  importance correction (Stable Asynchrony) and behavior-free
+  asymmetric scaling (ASymPO) live here;
+* **gradient / learner-step feedback** (``transform_gradients`` /
+  ``on_learner_step``): act on the minibatch gradient itself
+  (``needs_gradients``) — gradient-alignment control (GAC) lives here.
+
+Controllers are evaluated at *consume* time, when the learner's
+version — and hence the item's true lag — is known.  Every decision
+must carry a non-empty ``reason`` (the queue enforces this); reasons
+feed the labelled ``queue_admission_total{controller,outcome,reason}``
+counters in the metrics registry.
+
+Construction goes through :mod:`repro.runtime.controllers`
+(``--controller "tv_gate:delta=0.2,mode=downweight"`` specs); the
+string-keyed :func:`make_admission` factory is kept as a deprecation
+shim.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, TYPE_CHECKING
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    NamedTuple,
+    Optional,
+    Tuple,
+    TYPE_CHECKING,
+)
 
 if TYPE_CHECKING:  # pragma: no cover
+    import numpy as np
+
     from repro.runtime.queue import TrajectoryItem
 
 
@@ -22,39 +55,97 @@ class AdmissionDecision(NamedTuple):
     admit: bool
     weight: float = 1.0          # importance downweight applied if admitted
     tv: Optional[float] = None   # measured TV when the policy computed one
-    reason: str = ""             # drop/downweight reason for metrics
+    reason: str = ""             # mandatory; the queue rejects empty reasons
 
 
-class AdmissionPolicy:
-    """Decide whether a consumed trajectory reaches the learner."""
+class LagController:
+    """Full lag-mitigation protocol: admission + loss + gradient hooks.
+
+    Subclasses override only the decision points they use; the defaults
+    are pass-through at every hook, so an admission-only policy is still
+    a complete controller.
+    """
 
     name = "base"
+    #: ``loss_weights`` wants the learner's current per-token log-probs.
+    needs_log_pi = False
+    #: ``transform_gradients`` must see (and may rescale) raw gradients,
+    #: forcing the trainer onto the split grad/apply update path.
+    needs_gradients = False
+
+    # -- consume-time admission ---------------------------------------------
 
     def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
-        raise NotImplementedError
+        return AdmissionDecision(admit=True, reason="admit")
+
+    # -- per-token loss weighting -------------------------------------------
+
+    def loss_weights(
+        self,
+        item: "TrajectoryItem",
+        *,
+        advantages: "np.ndarray",       # [B] sequence-level advantages
+        log_beta: "np.ndarray",         # [B, S] behavior log-probs
+        mask: "np.ndarray",             # [B, S] valid-token mask
+        log_pi: Optional["np.ndarray"] = None,  # [B, S] current log-probs
+    ) -> Optional["np.ndarray"]:
+        """Per-token multiplier [B, S] on the advantage, or None (no-op).
+
+        ``log_pi`` is only provided when ``needs_log_pi`` is True (it
+        costs a scoring forward pass).
+        """
+        return None
+
+    # -- gradient / learner-step feedback -----------------------------------
+
+    def transform_gradients(
+        self, item: "TrajectoryItem", grads: Any
+    ) -> Tuple[Any, Dict[str, float]]:
+        """Rescale/replace the minibatch gradient pytree; returns
+        (grads, info) where ``info`` is merged into the step's aux
+        metrics.  Only called when ``needs_gradients`` is True."""
+        return grads, {}
+
+    def on_learner_step(
+        self, item: "TrajectoryItem", aux: Dict[str, Any]
+    ) -> None:
+        """Observe the completed learner step (aux metrics included)."""
 
 
-class PassThrough(AdmissionPolicy):
+#: Back-compat alias — admission policies *are* (admission-only)
+#: lag controllers.
+AdmissionPolicy = LagController
+
+
+class PassThrough(LagController):
     """Admit everything at full weight (the phase-locked baseline)."""
 
     name = "pass_through"
 
     def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
-        return AdmissionDecision(admit=True)
+        return AdmissionDecision(admit=True, reason="admit")
 
 
-class MaxLagEviction(AdmissionPolicy):
-    """Drop items older (in learner updates) than `max_lag` versions.
+class MaxLagEviction(LagController):
+    """Drop items older (in learner updates) than ``max_lag`` versions.
 
-    Note on mixture items (backward_mixture regime): the item's
-    representative ``behavior_version`` is the *oldest* snapshot any
-    actor sampled, so with a snapshot ring deeper than `max_lag` most
-    mixtures contain at least one over-age policy and get dropped —
-    choose max_lag >= buffer capacity (or use tv_gate) for that regime,
-    or expect heavy drop rates in ``drops_by_reason``.
+    Mixture items (backward_mixture regime, mid-swap served
+    trajectories) span a *range* of behavior versions; the item's
+    ``lag_oldest``/``lag_newest`` give the explicit span.  The gate is:
+
+    * ``lag_newest > max_lag``: even the freshest token is over-age —
+      drop (reason ``max_lag``);
+    * ``lag_oldest <= max_lag``: everything is in-age — admit at full
+      weight;
+    * span straddles the cutoff: admit downweighted by the in-age
+      fraction (per-snapshot when ``meta["behavior_versions"]`` is
+      present, linear in the lag span otherwise; reason
+      ``max_lag_span``), so a mostly-fresh mixture is no longer
+      dropped for its single oldest snapshot.
     """
 
     name = "max_lag"
+    min_weight = 1e-3
 
     def __init__(self, max_lag: int) -> None:
         if max_lag < 0:
@@ -62,12 +153,25 @@ class MaxLagEviction(AdmissionPolicy):
         self.max_lag = max_lag
 
     def admit(self, item: "TrajectoryItem") -> AdmissionDecision:
-        if item.lag > self.max_lag:
+        if item.lag_newest > self.max_lag:
             return AdmissionDecision(admit=False, reason="max_lag")
-        return AdmissionDecision(admit=True)
+        if item.lag_oldest <= self.max_lag:
+            return AdmissionDecision(admit=True, reason="admit")
+        versions = item.meta.get("behavior_versions")
+        ref = item.behavior_version + item.lag_oldest
+        if versions:
+            lags = [ref - int(v) for v in versions]
+            frac = sum(1 for l in lags if l <= self.max_lag) / len(lags)
+        else:
+            span = item.lag_oldest - item.lag_newest + 1
+            frac = (self.max_lag - item.lag_newest + 1) / span
+        if not frac >= self.min_weight:
+            return AdmissionDecision(admit=False, reason="max_lag")
+        return AdmissionDecision(
+            admit=True, weight=float(frac), reason="max_lag_span")
 
 
-class TVGatedAdmission(AdmissionPolicy):
+class TVGatedAdmission(LagController):
     """Gate on the sampled TV estimate (Eq. 8) against the current policy.
 
     ``tv_fn(payload) -> float`` measures the expected total variation
@@ -102,7 +206,7 @@ class TVGatedAdmission(AdmissionPolicy):
         tv = float(self.tv_fn(item.payload))
         threshold = self.delta / 2.0
         if tv <= threshold:
-            return AdmissionDecision(admit=True, tv=tv)
+            return AdmissionDecision(admit=True, tv=tv, reason="admit")
         if self.mode == "downweight":
             weight = threshold / tv if tv > 0 else 0.0
             if not weight >= self.min_weight:   # catches 0.0 and nan
@@ -115,7 +219,7 @@ class TVGatedAdmission(AdmissionPolicy):
         return AdmissionDecision(admit=False, tv=tv, reason="tv_gate")
 
 
-class TokenwiseTVGate(AdmissionPolicy):
+class TokenwiseTVGate(LagController):
     """Eq. 8 applied per *version segment* of a served trajectory.
 
     The continuous-batching serve engine swaps weights in-flight, so a
@@ -161,7 +265,7 @@ class TokenwiseTVGate(AdmissionPolicy):
             raise ValueError(
                 f"tv/versions length mismatch: {n} vs {versions.shape[0]}")
         if n == 0:
-            return AdmissionDecision(admit=True, tv=0.0)
+            return AdmissionDecision(admit=True, tv=0.0, reason="admit")
         threshold = self.delta / 2.0
         # Segment boundaries where the producing policy version changes.
         cuts = [0] + (
@@ -189,7 +293,7 @@ class TokenwiseTVGate(AdmissionPolicy):
         if not weight >= self.min_weight:
             return AdmissionDecision(
                 admit=False, tv=tv, reason="tv_gate_tokenwise")
-        reason = "tv_tokenwise_downweight" if weight < 1.0 else ""
+        reason = "tv_tokenwise_downweight" if weight < 1.0 else "admit"
         return AdmissionDecision(
             admit=True, weight=weight, tv=tv, reason=reason)
 
@@ -201,20 +305,20 @@ def make_admission(
     delta: float = 0.2,
     tv_fn: Optional[Callable[[Any], float]] = None,
     mode: str = "drop",
-) -> AdmissionPolicy:
-    """Factory used by launchers/runners (`--admission` flag)."""
-    if name == "pass_through":
-        return PassThrough()
-    if name == "max_lag":
-        return MaxLagEviction(max_lag)
-    if name == "tv_gate":
-        if tv_fn is None:
-            raise ValueError("tv_gate admission requires a tv_fn")
-        return TVGatedAdmission(delta, tv_fn, mode=mode)
-    if name == "tv_gate_tokenwise":
-        if tv_fn is None:
-            raise ValueError(
-                "tv_gate_tokenwise admission requires a tv_fn returning "
-                "(tv_tokens, versions)")
-        return TokenwiseTVGate(delta, tv_fn, mode=mode)
-    raise ValueError(f"unknown admission policy {name!r}")
+) -> LagController:
+    """Deprecated string-keyed factory (the legacy ``--admission`` path).
+
+    Thin shim over :func:`repro.runtime.controllers.make_controller`;
+    new call sites should build a :class:`ControllerSpec` instead.
+    """
+    import warnings
+
+    from repro.runtime.controllers import make_controller, spec_from_legacy
+
+    warnings.warn(
+        "make_admission() is deprecated; use "
+        "repro.runtime.controllers.make_controller(parse_controller_spec"
+        "(...)) — e.g. --controller 'tv_gate:delta=0.2,mode=downweight'",
+        DeprecationWarning, stacklevel=2)
+    spec = spec_from_legacy(name, max_lag=max_lag, delta=delta, mode=mode)
+    return make_controller(spec, tv_fn=tv_fn, token_tv_fn=tv_fn)

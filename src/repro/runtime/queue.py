@@ -34,16 +34,40 @@ class TrajectoryItem:
     weight: float = 1.0
     tv: Optional[float] = None
     meta: Dict[str, Any] = field(default_factory=dict)
+    # Mixture items (backward_mixture, mid-swap served trajectories) span
+    # a range of behavior versions; `behavior_version` is the oldest (the
+    # conservative representative), `behavior_version_newest` the newest.
+    # None means a single-version item (newest == oldest).
+    behavior_version_newest: Optional[int] = None
 
     @property
-    def lag(self) -> int:
-        """Learner updates between behavior policy and (consume) use."""
-        ref = (
+    def _ref_version(self) -> int:
+        return (
             self.learner_version_at_consume
             if self.learner_version_at_consume is not None
             else self.enqueue_learner_version
         )
-        return ref - self.behavior_version
+
+    @property
+    def lag(self) -> int:
+        """Learner updates between the *oldest* behavior policy any token
+        was sampled from and (consume) use."""
+        return self._ref_version - self.behavior_version
+
+    @property
+    def lag_oldest(self) -> int:
+        """Alias of :attr:`lag`: the item's worst-case staleness."""
+        return self.lag
+
+    @property
+    def lag_newest(self) -> int:
+        """Staleness of the freshest behavior version in the item."""
+        newest = (
+            self.behavior_version_newest
+            if self.behavior_version_newest is not None
+            else self.behavior_version
+        )
+        return self._ref_version - newest
 
 
 class QueueClosed(RuntimeError):
@@ -68,9 +92,14 @@ class TrajectoryQueue:
         self.maxsize = maxsize
         self.admission = admission or PassThrough()
         self.tracer = tracer
-        if registry is not None:
+        if registry is None:
+            from repro.obs.registry import MetricsRegistry
+
+            registry = MetricsRegistry()
+        else:
             registry.register_producer(
                 "queue", lambda: self.stats().as_dict())
+        self.registry = registry
         self._dq: collections.deque = collections.deque()
         self._cond = threading.Condition()
         self._closed = False
@@ -79,8 +108,44 @@ class TrajectoryQueue:
         self._admitted = 0
         self._dropped = 0
         self._downweighted = 0
-        self._drops_by_reason: Dict[str, int] = {}
+        # Labelled registry counters, keyed (outcome, reason).  The
+        # per-reason dicts in stats() are derived views of these — one
+        # source of truth, visible in registry.snapshot() as
+        # queue_admission_total{controller=...,outcome=...,reason=...}.
+        self._decision_counters: Dict[tuple, Any] = {}
         self._lag_histogram = LagHistogram()
+
+    def _count_decision(self, outcome: str, reason: str) -> None:
+        """Bump queue_admission_total{controller,outcome,reason} (must be
+        called with ``_cond`` held)."""
+        key = (outcome, reason)
+        counter = self._decision_counters.get(key)
+        if counter is None:
+            counter = self.registry.counter(
+                "queue_admission_total",
+                controller=self.admission.name,
+                outcome=outcome, reason=reason)
+            self._decision_counters[key] = counter
+        counter.inc()
+
+    def _by_reason(self, outcome: str) -> Dict[str, int]:
+        return {
+            reason: int(c.value)
+            for (o, reason), c in self._decision_counters.items()
+            if o == outcome
+        }
+
+    def admission_counters(self) -> Dict[str, int]:
+        """The labelled-counter view, rendered Prometheus-style — the
+        same strings ``registry.snapshot()['counters']`` shows, readable
+        without re-entering the registry's snapshot producers."""
+        name = self.admission.name
+        with self._cond:
+            return {
+                f"queue_admission_total{{controller={name},"
+                f"outcome={o},reason={r}}}": int(c.value)
+                for (o, r), c in self._decision_counters.items()
+            }
 
     # -- producer side -------------------------------------------------------
 
@@ -90,6 +155,7 @@ class TrajectoryQueue:
         *,
         behavior_version: int,
         learner_version: int,
+        behavior_version_newest: Optional[int] = None,
         **meta: Any,
     ) -> TrajectoryItem:
         """Enqueue; blocks when bounded and full (producer backpressure)."""
@@ -97,6 +163,9 @@ class TrajectoryQueue:
             payload=payload,
             behavior_version=int(behavior_version),
             enqueue_learner_version=int(learner_version),
+            behavior_version_newest=(
+                None if behavior_version_newest is None
+                else int(behavior_version_newest)),
             meta=dict(meta),
         )
         with self._cond:
@@ -163,14 +232,20 @@ class TrajectoryQueue:
             # forward pass and must not stall the producer.
             item.learner_version_at_consume = int(learner_version)
             decision = self.admission.admit(item)
+            # A decision must say *why* — reasons label the registry
+            # counters, so an empty one would silently merge outcomes.
+            reason = decision.reason
+            if not reason:
+                raise ValueError(
+                    f"{type(self.admission).__name__} "
+                    f"({self.admission.name!r}) returned an "
+                    "AdmissionDecision with an empty reason; reasons "
+                    "are mandatory (use e.g. 'admit')")
             tr = self.tracer
             with self._cond:
                 if not decision.admit:
                     self._dropped += 1
-                    reason = decision.reason or self.admission.name
-                    self._drops_by_reason[reason] = (
-                        self._drops_by_reason.get(reason, 0) + 1
-                    )
+                    self._count_decision("drop", reason)
                     depth = len(self._dq)
                     if tr.enabled:
                         tr.instant(
@@ -185,6 +260,9 @@ class TrajectoryQueue:
                 item.tv = decision.tv
                 if decision.weight != 1.0:
                     self._downweighted += 1
+                    self._count_decision("downweight", reason)
+                else:
+                    self._count_decision("admit", reason)
                 self._admitted += 1
                 self._lag_histogram.record(item.lag)
                 depth = len(self._dq)
@@ -214,6 +292,8 @@ class TrajectoryQueue:
                 admission_drop_rate=(
                     self._dropped / consumed if consumed else 0.0
                 ),
-                drops_by_reason=dict(self._drops_by_reason),
+                drops_by_reason=self._by_reason("drop"),
                 lag_histogram=self._lag_histogram.snapshot(),
+                controller=self.admission.name,
+                downweights_by_reason=self._by_reason("downweight"),
             )

@@ -240,6 +240,7 @@ class BackwardMixtureRegime(LagRegime):
             payload,
             behavior_version=int(versions.min()),
             learner_version=learner_version,
+            behavior_version_newest=int(versions.max()),
             behavior_versions=versions.tolist(),
         )
 
@@ -413,6 +414,9 @@ class EngineThreadedRegime(ThreadedRegime):
                             traj,
                             behavior_version=traj.behavior_version,
                             learner_version=self.store.version,
+                            behavior_version_newest=int(
+                                traj.versions.max()
+                            ) if traj.versions.size else None,
                             versions=traj.versions.tolist(),
                             request_id=traj.request_id,
                             finish_reason=traj.finish_reason,

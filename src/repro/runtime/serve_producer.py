@@ -1,0 +1,236 @@
+"""ServeRolloutProducer: the ServeEngine as the RLVR trainer's producer.
+
+Closes the loop the paper opens: instead of the synthetic
+``ForwardLagGenerator``, rollout generation goes through the real serve
+path — continuous batching over a paged KV cache, optional prefix
+sharing and speculative decode, and in-flight weight swaps — and the
+engine's exact per-token ``{version, log_beta}`` provenance flows
+straight into the trajectory queue, where the lag controllers consume
+it.
+
+One produced item is one :class:`~repro.rollout.async_engine.RLVRMinibatch`
+(the same payload the legacy generator emits, so the whole trainer/
+controller stack is producer-agnostic): ``prompts_per_minibatch``
+problems are sampled, each submitted ``completions_per_prompt`` times
+(contiguous GRPO groups), the engine is stepped until every request
+retires, and the retired trajectories are re-assembled into the
+fixed-shape ``[B, P+N]`` batch the jitted update consumes.
+
+**Padding discipline (correctness-critical):** the engine is handed the
+*full left-padded* prompt row, exactly as ``sampler.generate`` sees it —
+pad tokens are attended in the causal mask, so stripping them (as the
+serving launcher does) would make the engine's ``log_beta`` disagree
+with ``score_tokens``'s ``log_pi`` on identical weights.  With the
+padded prompt the realignment ratio is exactly 1 for fresh data, which
+is what the TV gate's calibration assumes.
+
+Two modes:
+
+* **phase-locked** (default): ``fill()`` produces one minibatch
+  synchronously — deterministic at fixed seed, which the direction
+  tests and the lag-sweep bench rely on.  ``version_offset=k`` forces
+  the engine to generate from the learner's ``k``-back snapshot
+  (resident-ring clamped), giving an exact, scripted lag with real
+  engine provenance.
+* **threaded**: a producer thread keeps generating from the freshest
+  swapped-in weights while the learner consumes concurrently — lag now
+  arises from real timing, as in production.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, TYPE_CHECKING
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import PAD
+from repro.runtime.policy_store import PolicyStore
+from repro.runtime.queue import QueueClosed, TrajectoryQueue
+from repro.runtime.regimes import LagRegime
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.rollout.async_engine import RLVRMinibatch
+
+
+class ServeRolloutProducer(LagRegime):
+    """Drive RLVR generation through a continuous-batching ServeEngine."""
+
+    name = "serve"
+
+    def __init__(
+        self,
+        store: PolicyStore,
+        queue: TrajectoryQueue,
+        engine: Any,              # serve.ServeEngine bound to `store`
+        dataset: Any,             # data.mathgen.MathTaskDataset
+        *,
+        prompts_per_minibatch: int,
+        completions_per_prompt: int,
+        max_new_tokens: int,
+        version_offset: Optional[int] = None,
+        threaded: bool = False,
+        max_items: Optional[int] = None,
+    ) -> None:
+        if engine.store is not store:
+            raise ValueError(
+                "engine must share the producer's PolicyStore (weight "
+                "swaps are how learner publishes reach generation)")
+        super().__init__(store, queue)
+        self.engine = engine
+        self.dataset = dataset
+        self.prompts_per_minibatch = prompts_per_minibatch
+        self.group_size = completions_per_prompt
+        self.max_new_tokens = max_new_tokens
+        self.version_offset = version_offset
+        self.phase_locked = not threaded
+        self.max_items = max_items
+        self.produced = 0
+        self.error: Optional[BaseException] = None
+        self._stop_event = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if version_offset is not None:
+            if version_offset < 0:
+                raise ValueError(
+                    f"version_offset must be >= 0, got {version_offset}")
+            # Forced lag owns the engine's weights: the producer pins
+            # the k-back snapshot before every minibatch, so the
+            # engine's own store polling must never override it
+            # (swap_interval=0 disables _maybe_swap entirely — a large
+            # interval would still fire at stats.steps == 0).
+            self.engine.swap_interval = 0
+
+    # -- forced lag ----------------------------------------------------------
+
+    def _apply_forced_lag(self) -> None:
+        if self.version_offset is None:
+            return
+        # Nearest resident version at (or older than) latest - offset;
+        # falls back to the oldest retained snapshot when the ring is
+        # shallower than the requested lag.
+        target = self.store.resolve_lagged(-self.version_offset)
+        if target != self.engine.version:
+            self.engine.params = self.store.get(target)
+            self.engine.version = target
+
+    # -- one minibatch through the engine ------------------------------------
+
+    def _produce_minibatch(self) -> "RLVRMinibatch":
+        # Imported here: rollout.async_engine imports runtime modules at
+        # module load (a package-level cycle otherwise).
+        from repro.data.mathgen import verify
+        from repro.rollout.async_engine import RLVRMinibatch
+        from repro.rollout.sampler import GenerationResult
+
+        self._apply_forced_lag()
+        tok = self.dataset.tok
+        prompt_len = self.dataset.prompt_len
+        n_new = self.max_new_tokens
+        toks_np, _, answers = self.dataset.sample_batch(
+            self.prompts_per_minibatch)
+        toks_np = np.repeat(toks_np, self.group_size, axis=0)
+        answers = [a for a in answers for _ in range(self.group_size)]
+        batch = toks_np.shape[0]
+
+        with self.tracer.span("produce", pid="runtime", tid="producer",
+                              version=self.engine.version):
+            pending = {}
+            for i in range(batch):
+                req = self.engine.submit(toks_np[i], n_new)
+                pending[req.request_id] = i
+            done: dict = {}
+            while len(done) < batch:
+                if not self.engine.has_work:
+                    raise RuntimeError(
+                        "serve producer: engine drained with "
+                        f"{batch - len(done)} requests outstanding")
+                for traj in self.engine.step():
+                    idx = pending.pop(traj.request_id, None)
+                    if idx is not None:
+                        done[idx] = traj
+
+        tokens = np.full((batch, prompt_len + n_new), PAD, np.int32)
+        tokens[:, :prompt_len] = toks_np
+        log_beta = np.zeros((batch, n_new), np.float32)
+        mask = np.zeros((batch, n_new), np.float32)
+        versions = np.zeros((batch, n_new), np.int64)
+        for i, traj in done.items():
+            n = traj.num_tokens
+            tokens[i, prompt_len:prompt_len + n] = traj.tokens
+            log_beta[i, :n] = traj.log_beta
+            mask[i, :n] = traj.mask
+            versions[i, :n] = traj.versions
+            # Pad the version record with the row's last real version so
+            # segmenting gates see no phantom boundary at the tail.
+            versions[i, n:] = (traj.versions[-1] if n
+                               else self.engine.version)
+
+        completion = tokens[:, prompt_len:]
+        rewards = jnp.asarray(
+            [verify(tok.decode(row), ans)
+             for row, ans in zip(completion, answers)],
+            jnp.float32)
+        gen = GenerationResult(
+            tokens=jnp.asarray(tokens),
+            completion=jnp.asarray(completion),
+            log_beta=jnp.asarray(log_beta),
+            mask=jnp.asarray(mask),
+            values=None,
+        )
+        return RLVRMinibatch(gen=gen, rewards=rewards, answers=answers,
+                             versions=versions)
+
+    def _put(self, mb: "RLVRMinibatch") -> None:
+        versions = np.asarray(mb.versions)
+        self.queue.put(
+            mb,
+            behavior_version=int(versions.min()),
+            learner_version=self.store.version,
+            behavior_version_newest=int(versions.max()),
+            producer="serve",
+        )
+
+    # -- phase-locked mode ---------------------------------------------------
+
+    def fill(self) -> None:
+        self._put(self._produce_minibatch())
+
+    # -- threaded mode -------------------------------------------------------
+
+    def start(self) -> None:
+        if self.phase_locked:
+            return
+        self._thread = threading.Thread(
+            target=self._loop, name="serve-producer", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        try:
+            while not self._stop_event.is_set() and (
+                self.max_items is None or self.produced < self.max_items
+            ):
+                mb = self._produce_minibatch()
+                try:
+                    self._put(mb)
+                except QueueClosed:
+                    break
+                self.produced += 1
+        except BaseException as e:   # surface crashes, don't hang
+            self.error = e
+        finally:
+            self.queue.close()
+
+    def next_item(self, learner_version, *, timeout=None, max_refills=50):
+        item = super().next_item(
+            learner_version, timeout=timeout, max_refills=max_refills)
+        if item is None and self.error is not None:
+            raise RuntimeError("serve producer crashed") from self.error
+        return item
+
+    def stop(self, join_timeout: float = 30.0) -> None:
+        if self.phase_locked:
+            return
+        self._stop_event.set()
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join(timeout=join_timeout)

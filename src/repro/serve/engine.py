@@ -307,7 +307,10 @@ class ServeEngine:
         self._swap_mono: Optional[float] = None   # last in-flight swap
         self._ann = (trace_annotation if annotate
                      else (lambda name: contextlib.nullcontext()))
-        self.swap_interval = max(int(swap_interval), 1)
+        # 0 = never poll the store: weights move only by direct
+        # params/version assignment (the serve-backed trainer's
+        # forced-lag producer pins snapshots this way).
+        self.swap_interval = max(int(swap_interval), 0)
         if store is not None:
             self.params, self.version = store.latest()
         else:
@@ -486,7 +489,7 @@ class ServeEngine:
         return val
 
     def _maybe_swap(self) -> None:
-        if self.store is None:
+        if self.store is None or not self.swap_interval:
             return
         if self.stats.steps % self.swap_interval != 0:
             return

@@ -39,8 +39,10 @@ from repro.runtime import (
     MixtureRolloutProducer,
     PolicyStore,
     TrajectoryQueue,
-    make_admission,
+    make_controller,
     make_regime,
+    parse_controller_spec,
+    spec_from_legacy,
 )
 from repro.train.trainer_rl import (
     RLHyperparams,
@@ -64,10 +66,13 @@ class AsyncRLRunConfig:
     runtime: str = "backward_mixture"  # backward_mixture|forward_n|threaded
     forward_n: int = 4                 # items per frozen policy (forward_n)
     queue_maxsize: int = 4             # producer backpressure (threaded)
-    admission: str = "pass_through"    # pass_through|max_lag|tv_gate
-    max_lag: int = 4                   # max_lag admission threshold
-    admission_delta: Optional[float] = None  # tv_gate delta (default hp.delta)
-    admission_mode: str = "drop"       # tv_gate: drop|downweight
+    # Lag controller, "name:key=val,..." (see runtime.controllers); wins
+    # over the deprecated string-keyed fields below when set.
+    controller: Optional[str] = None
+    admission: str = "pass_through"    # deprecated: use controller=
+    max_lag: int = 4                   # deprecated: use controller=
+    admission_delta: Optional[float] = None  # deprecated: use controller=
+    admission_mode: str = "drop"       # deprecated: use controller=
     get_timeout: float = 120.0         # learner wait per item (threaded)
     tracer: Any = None                 # obs.Tracer (None = no tracing)
 
@@ -115,13 +120,19 @@ def run_async_rl(cfg: AsyncRLRunConfig) -> AsyncRLResult:
     tracer = cfg.tracer if cfg.tracer is not None else NULL_TRACER
     store = PolicyStore(params, capacity=cfg.buffer_capacity,
                         tracer=tracer)
-    admission = make_admission(
-        cfg.admission,
-        max_lag=cfg.max_lag,
-        delta=(cfg.admission_delta
-               if cfg.admission_delta is not None else hp.delta),
-        tv_fn=_make_tv_fn(store) if cfg.admission == "tv_gate" else None,
-        mode=cfg.admission_mode,
+    if cfg.controller is not None:
+        spec = parse_controller_spec(cfg.controller)
+    else:
+        spec = spec_from_legacy(
+            cfg.admission,
+            max_lag=cfg.max_lag,
+            delta=(cfg.admission_delta
+                   if cfg.admission_delta is not None else hp.delta),
+            mode=cfg.admission_mode,
+        )
+    admission = make_controller(
+        spec,
+        tv_fn=_make_tv_fn(store) if spec.name == "tv_gate" else None,
     )
     queue = TrajectoryQueue(
         maxsize=cfg.queue_maxsize if cfg.runtime == "threaded" else 0,

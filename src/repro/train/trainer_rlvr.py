@@ -50,9 +50,12 @@ from repro.rollout.sampler import score_tokens
 from repro.runtime import (
     PolicyStore,
     TrajectoryQueue,
-    make_admission,
+    make_controller,
     make_regime,
+    parse_controller_spec,
+    spec_from_legacy,
 )
+from repro.runtime.serve_producer import ServeRolloutProducer
 
 
 @dataclass(frozen=True)
@@ -77,11 +80,28 @@ class RLVRHyperparams:
     runtime: str = "forward_n"    # forward_n | threaded
     store_capacity: int = 4       # policy snapshot ring size
     queue_maxsize: int = 4        # producer backpressure (threaded)
+    # Lag controller: a "name:key=val,..." spec (see
+    # runtime.controllers).  None falls back to the legacy admission
+    # triple below via the deprecation shim.
+    controller: Optional[str] = None
+    # --- legacy admission triple (deprecated; use `controller`) ---
     admission: str = "pass_through"  # pass_through|max_lag|tv_gate
     #                                 # |tv_gate_tokenwise
     max_lag: int = 8
     admission_mode: str = "drop"  # tv_gate*: drop|downweight
     get_timeout: float = 300.0    # learner wait per item (threaded)
+    max_refills: int = 50         # phase-locked starvation bound
+    # --- producer ---
+    producer: str = "legacy"      # legacy (ForwardLagGenerator) | serve
+    # serve producer: force generation from the learner's k-back
+    # snapshot (None = track the freshest swapped-in weights).
+    forced_lag: Optional[int] = None
+    engine_num_blocks: int = 64   # serve producer: paged-pool size
+    engine_block_size: int = 8
+    engine_max_batch: int = 8
+    engine_swap_interval: int = 1
+    engine_prefix_cache: bool = False
+    engine_speculate_k: int = 0
 
 
 class RLVRTrainState(NamedTuple):
@@ -123,6 +143,50 @@ def make_update_step(bundle: ModelBundle, hp: RLVRHyperparams,
         return RLVRTrainState(params, opt_state, state.updates + 1), aux
 
     return update
+
+
+def make_split_update_step(bundle: ModelBundle, hp: RLVRHyperparams,
+                           prompt_len: int):
+    """The fused update split at the gradient boundary, for controllers
+    with ``needs_gradients`` (GAC): ``grad_step`` returns the raw
+    gradients so the controller can inspect/rescale them on the host,
+    ``apply_step`` then clips and applies.  Same math as
+    :func:`make_update_step`, two dispatches instead of one."""
+    grpo_cfg = GRPOConfig(
+        clip_low=hp.clip_low, clip_high=hp.clip_high,
+        use_vaco=(hp.algorithm == "grpo_vaco"), delta=hp.delta,
+        entropy_coef=hp.entropy_coef,
+    )
+    opt_cfg = AdamWConfig(lr=hp.lr, weight_decay=hp.weight_decay, eps=1e-8)
+
+    def loss_fn(params, tokens, log_beta, mask, advantages):
+        log_pi, entropy, _ = score_tokens(
+            bundle, params, tokens, prompt_len)
+        loss, aux = grpo_token_loss(
+            log_pi=log_pi, log_beta=log_beta, advantages=advantages,
+            token_mask=mask, cfg=grpo_cfg,
+        )
+        aux["token_entropy"] = jnp.sum(entropy * mask) / jnp.maximum(
+            jnp.sum(mask), 1.0)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def grad_step(state: RLVRTrainState, tokens, log_beta, mask,
+                  advantages):
+        (loss, aux), grads = grad_fn(
+            state.params, tokens, log_beta, mask, advantages)
+        return grads, dict(aux, loss=loss)
+
+    @jax.jit
+    def apply_step(state: RLVRTrainState, grads):
+        grads, gnorm = clip_by_global_norm(grads, hp.max_grad_norm)
+        params, opt_state = adamw_update(
+            grads, state.opt_state, state.params, opt_cfg)
+        return RLVRTrainState(params, opt_state, state.updates + 1), gnorm
+
+    return grad_step, apply_step
 
 
 def make_warmup_step(bundle: ModelBundle, hp: RLVRHyperparams):
@@ -210,28 +274,76 @@ class RLVRTrainer:
         # --- runtime assembly ------------------------------------------------
         self.store = PolicyStore(params, capacity=hp.store_capacity,
                                  tracer=self.tracer)
-        tv_fn = None
-        if hp.admission == "tv_gate":
+        # Controller: a spec string wins; the legacy admission triple is
+        # mapped through the deprecation shim (no warning here — the
+        # launcher warns on actual legacy *flag* use).
+        spec = (parse_controller_spec(hp.controller) if hp.controller
+                else spec_from_legacy(
+                    hp.admission, max_lag=hp.max_lag, delta=hp.delta,
+                    mode=hp.admission_mode))
+        tv_fn = token_tv_fn = None
+        if spec.name == "tv_gate":
             tv_fn = self._make_tv_fn()
-        elif hp.admission == "tv_gate_tokenwise":
-            tv_fn = self._make_token_tv_fn()
+        elif spec.name == "tv_gate_tokenwise":
+            token_tv_fn = self._make_token_tv_fn()
+        self.controller = make_controller(
+            spec, tv_fn=tv_fn, token_tv_fn=token_tv_fn)
+        self.controller_spec = spec
         self.queue = TrajectoryQueue(
             maxsize=hp.queue_maxsize if hp.runtime == "threaded" else 0,
-            admission=make_admission(
-                hp.admission,
-                max_lag=hp.max_lag,
-                delta=hp.delta,
-                tv_fn=tv_fn,
-                mode=hp.admission_mode,
-            ),
+            admission=self.controller,
             tracer=self.tracer,
         )
-        self.regime = make_regime(
-            hp.runtime, self.store, self.queue,
-            self.generator.generate_minibatch,
-            forward_n=hp.n_minibatches,
-            max_items=None,
-        )
+        if self.controller.needs_log_pi:
+            prompt_len = dataset.prompt_len
+
+            @jax.jit
+            def _score(params, tokens):
+                log_pi, _, _ = score_tokens(
+                    bundle, params, tokens, prompt_len)
+                return log_pi
+
+            self._score_log_pi = _score
+        if self.controller.needs_gradients:
+            self._grad_step, self._apply_step = make_split_update_step(
+                bundle, hp, dataset.prompt_len)
+        self.engine = None
+        if hp.producer == "serve":
+            from repro.serve.engine import ServeEngine
+
+            self.engine = ServeEngine(
+                bundle,
+                store=self.store,
+                num_blocks=hp.engine_num_blocks,
+                block_size=hp.engine_block_size,
+                max_batch=hp.engine_max_batch,
+                max_seq_len=dataset.prompt_len + hp.max_new_tokens,
+                swap_interval=hp.engine_swap_interval,
+                temperature=hp.temperature,
+                seed=seed + 2,
+                prefix_cache=hp.engine_prefix_cache,
+                speculate_k=hp.engine_speculate_k,
+                tracer=self.tracer,
+                metrics=self.metrics,
+            )
+            self.regime = ServeRolloutProducer(
+                self.store, self.queue, self.engine, dataset,
+                prompts_per_minibatch=hp.prompts_per_minibatch,
+                completions_per_prompt=hp.completions_per_prompt,
+                max_new_tokens=hp.max_new_tokens,
+                version_offset=hp.forced_lag,
+                threaded=(hp.runtime == "threaded"),
+            )
+        elif hp.producer == "legacy":
+            self.regime = make_regime(
+                hp.runtime, self.store, self.queue,
+                self.generator.generate_minibatch,
+                forward_n=hp.n_minibatches,
+                max_items=None,
+            )
+        else:
+            raise ValueError(
+                f"unknown producer {hp.producer!r} (legacy|serve)")
         self._regime_started = False
 
     def _make_tv_fn(self):
@@ -313,23 +425,53 @@ class RLVRTrainer:
             self.regime.start()
             self._regime_started = True
         logs: List[RLVRPhaseLog] = []
+        ctrl = self.controller
         for _ in range(hp.n_minibatches):
             item = self.regime.next_item(
-                self.store.version, timeout=hp.get_timeout)
+                self.store.version, timeout=hp.get_timeout,
+                max_refills=hp.max_refills)
             if item is None:
                 break  # producer stopped / everything dropped
             mb: RLVRMinibatch = item.payload
             adv = group_advantages(
                 mb.rewards, hp.completions_per_prompt)
             adv = adv * jnp.float32(item.weight)
+            # Controller loss hook: an optional [B, S] per-token
+            # multiplier on the advantage.  The default controller
+            # returns None, leaving the fused 1-D-advantage update —
+            # and its jit cache — byte-identical to the legacy path.
+            log_pi = None
+            if ctrl.needs_log_pi:
+                log_pi = np.asarray(self._score_log_pi(
+                    self.state.params, mb.gen.tokens))
+            token_w = ctrl.loss_weights(
+                item,
+                advantages=np.asarray(adv),
+                log_beta=np.asarray(mb.gen.log_beta),
+                mask=np.asarray(mb.gen.mask),
+                log_pi=log_pi,
+            )
+            adv_in = (adv if token_w is None
+                      else adv[:, None] * jnp.asarray(token_w, jnp.float32))
             t0 = time.monotonic()
             with self.tracer.span("learner_step", pid="train", tid="learner",
                                   lag=item.lag, weight=float(item.weight)):
-                self.state, aux = self._update(
-                    self.state, mb.gen.tokens, mb.gen.log_beta, mb.gen.mask,
-                    adv)
-                aux = {k: jax.device_get(v) for k, v in aux.items()}
+                if ctrl.needs_gradients:
+                    grads, aux = self._grad_step(
+                        self.state, mb.gen.tokens, mb.gen.log_beta,
+                        mb.gen.mask, adv_in)
+                    grads, grad_info = ctrl.transform_gradients(item, grads)
+                    self.state, gnorm = self._apply_step(self.state, grads)
+                    aux = {k: jax.device_get(v) for k, v in aux.items()}
+                    aux["grad_norm"] = jax.device_get(gnorm)
+                    aux.update(grad_info)
+                else:
+                    self.state, aux = self._update(
+                        self.state, mb.gen.tokens, mb.gen.log_beta,
+                        mb.gen.mask, adv_in)
+                    aux = {k: jax.device_get(v) for k, v in aux.items()}
             self._h_step.observe(time.monotonic() - t0)
+            ctrl.on_learner_step(item, aux)
             self.store.publish(self.state.params)
             frac = aux.get("frac_filtered", aux.get("clip_frac", 0.0))
             logs.append(RLVRPhaseLog(
@@ -359,7 +501,7 @@ class RLVRTrainer:
                 if len(phase_logs) < self.hp.n_minibatches:
                     break  # starved mid-phase (producer done / all-drop)
         finally:
-            if self.hp.runtime == "threaded":
+            if not self.regime.phase_locked:
                 self.close()
         return RLVRResult(
             eval_accuracy=accs, phase_logs=logs,

@@ -1,0 +1,431 @@
+"""Lag-controller zoo: spec grammar, registry, legacy-shim equivalence,
+span-aware max-lag eviction, the per-token/gradient controller hooks
+(gac, stable_async, asympo), and serve-produced provenance flowing into
+the redesigned admission API."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    AsymPOController,
+    GradientAlignmentController,
+    MaxLagEviction,
+    PassThrough,
+    StableAsyncController,
+    TrajectoryItem,
+    TrajectoryQueue,
+    TVGatedAdmission,
+    available_controllers,
+    make_admission,
+    make_controller,
+    parse_controller_spec,
+    spec_from_legacy,
+)
+from repro.runtime.controllers import ControllerSpec
+
+
+def _item(behavior=0, consume=None, newest=None, payload=None, **meta):
+    it = TrajectoryItem(
+        payload=payload, behavior_version=behavior,
+        enqueue_learner_version=behavior if consume is None else consume,
+        behavior_version_newest=newest, meta=dict(meta),
+    )
+    if consume is not None:
+        it.learner_version_at_consume = consume
+    return it
+
+
+# --- spec grammar -----------------------------------------------------------
+
+
+def test_parse_controller_spec_values_and_canonical():
+    spec = parse_controller_spec(
+        "tv_gate:delta=0.2,mode=downweight,min_weight=1e-3")
+    assert spec.name == "tv_gate"
+    assert spec.options == {
+        "delta": 0.2, "mode": "downweight", "min_weight": 1e-3}
+    # values parse int -> float -> bool -> str
+    s2 = parse_controller_spec("max_lag:max_lag=4")
+    assert s2.options == {"max_lag": 4}
+    assert isinstance(s2.options["max_lag"], int)
+    # canonical round-trips through the parser
+    assert parse_controller_spec(spec.canonical()) == spec
+    assert parse_controller_spec("pass_through").canonical() == \
+        "pass_through"
+
+
+def test_parse_controller_spec_rejects_garbage():
+    with pytest.raises(ValueError, match="unknown controller"):
+        parse_controller_spec("definitely_not_registered")
+    with pytest.raises(ValueError):
+        parse_controller_spec("tv_gate:delta")        # not key=value
+    with pytest.raises(ValueError):
+        parse_controller_spec("")
+    # unknown option keys hard-error at build time, not silently ignored
+    with pytest.raises(ValueError, match="unknown option"):
+        make_controller(ControllerSpec("max_lag", (("bogus", 1),)))
+
+
+def test_registry_lists_all_six_controllers():
+    info = available_controllers()
+    assert {"pass_through", "max_lag", "tv_gate", "tv_gate_tokenwise",
+            "gac", "stable_async", "asympo"} <= set(info)
+    # every registered controller documents itself
+    assert all(info[k].description for k in info)
+
+
+# --- legacy shim ------------------------------------------------------------
+
+
+def test_spec_from_legacy_maps_the_admission_triple():
+    assert spec_from_legacy("pass_through").canonical() == "pass_through"
+    assert spec_from_legacy("max_lag", max_lag=7).canonical() == \
+        "max_lag:max_lag=7"
+    assert spec_from_legacy(
+        "tv_gate", delta=0.1, mode="downweight").canonical() == \
+        "tv_gate:delta=0.1,mode=downweight"
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        spec_from_legacy("nope")
+
+
+def test_make_admission_shim_warns_and_matches_spec_path():
+    """The deprecated factory must produce a controller whose decision
+    stream is identical to the redesigned spec path's, for every legacy
+    policy name."""
+    stream = [
+        _item(behavior=v, consume=5, payload=float(tv))
+        for v, tv in [(5, 0.01), (4, 0.09), (3, 0.11), (1, 0.4), (0, 2.0)]
+    ]
+    cases = [
+        ("pass_through", "pass_through", {}),
+        ("max_lag", "max_lag:max_lag=2", {"max_lag": 2}),
+        ("tv_gate", "tv_gate:delta=0.2,mode=downweight",
+         {"delta": 0.2, "mode": "downweight"}),
+    ]
+    tv_fn = lambda payload: payload                       # noqa: E731
+    for legacy_name, spec_text, kwargs in cases:
+        with pytest.warns(DeprecationWarning):
+            shim = make_admission(legacy_name, tv_fn=tv_fn, **kwargs)
+        spec = make_controller(parse_controller_spec(spec_text),
+                               tv_fn=tv_fn)
+        assert type(shim) is type(spec)
+        for it in stream:
+            assert shim.admit(it) == spec.admit(it), (
+                f"{legacy_name}: shim and spec paths disagree on "
+                f"lag={it.lag} tv={it.payload}")
+
+
+def test_make_admission_shim_type_errors_preserved():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert isinstance(make_admission("pass_through"), PassThrough)
+        assert isinstance(make_admission("max_lag"), MaxLagEviction)
+        with pytest.raises(ValueError, match="requires a tv_fn"):
+            make_admission("tv_gate")
+        with pytest.raises(ValueError):
+            make_admission("nope")
+
+
+# --- span-aware max-lag eviction --------------------------------------------
+
+
+def test_max_lag_span_gating_on_mixture_items():
+    gate = MaxLagEviction(max_lag=2)
+    # homogeneous fresh / stale: unchanged semantics
+    assert gate.admit(_item(behavior=4, consume=5)).admit
+    d = gate.admit(_item(behavior=0, consume=5))
+    assert (d.admit, d.reason) == (False, "max_lag")
+    # newest token over-age: the whole item is over-age
+    d = gate.admit(_item(behavior=0, consume=9, newest=1))
+    assert (d.admit, d.reason) == (False, "max_lag")
+    # REGRESSION: a mixture straddling the cutoff (oldest over, newest
+    # under) used to be dropped on its oldest version alone; now the
+    # under-cutoff fraction is admitted as a downweight.
+    d = gate.admit(_item(behavior=0, consume=3, newest=3))
+    assert d.admit and d.reason == "max_lag_span"
+    # linear interpolation over span {lag 3..0}: 3 of 4 lags <= 2
+    assert d.weight == pytest.approx(3 / 4)
+    # exact per-snapshot fractions when the producer recorded them
+    d = gate.admit(_item(behavior=0, consume=3, newest=3,
+                         behavior_versions=[0, 3, 3, 3]))
+    assert d.admit and d.weight == pytest.approx(3 / 4)
+    d = gate.admit(_item(behavior=0, consume=3, newest=3,
+                         behavior_versions=[0, 0, 0, 3]))
+    assert d.admit and d.weight == pytest.approx(1 / 4)
+
+
+def test_trajectory_item_lag_span_fields():
+    it = _item(behavior=2, consume=7, newest=6)
+    assert (it.lag, it.lag_oldest, it.lag_newest) == (5, 5, 1)
+    solo = _item(behavior=3, consume=7)
+    assert (solo.lag_oldest, solo.lag_newest) == (4, 4)
+
+
+# --- mandatory decision reasons ---------------------------------------------
+
+
+def test_queue_rejects_empty_decision_reason():
+    from repro.runtime import AdmissionDecision, LagController
+
+    class Reasonless(LagController):
+        name = "reasonless"
+
+        def admit(self, item):
+            return AdmissionDecision(admit=True)   # no reason
+
+    q = TrajectoryQueue(admission=Reasonless())
+    q.put("x", behavior_version=0, learner_version=0)
+    with pytest.raises(ValueError, match="reasons are mandatory"):
+        q.get(learner_version=0)
+
+
+def test_queue_labelled_admission_counters():
+    gate = TVGatedAdmission(delta=0.2, tv_fn=lambda p: p,
+                            mode="downweight")
+    q = TrajectoryQueue(admission=gate)
+    for tv in (0.05, 0.4, 0.4):
+        q.put(tv, behavior_version=0, learner_version=0)
+    q.close()
+    while q.get(learner_version=0) is not None:
+        pass
+    counters = q.admission_counters()
+    assert counters == {
+        "queue_admission_total{controller=tv_gate,"
+        "outcome=admit,reason=admit}": 1,
+        "queue_admission_total{controller=tv_gate,"
+        "outcome=downweight,reason=tv_downweight}": 2,
+    }
+    stats = q.stats()
+    assert stats.controller == "tv_gate"
+    assert stats.downweights_by_reason == {"tv_downweight": 2}
+
+
+# --- the new controllers ----------------------------------------------------
+
+
+def test_gac_scales_misaligned_stale_gradients():
+    ctrl = GradientAlignmentController(cos_min=0.5, fresh_lag=0,
+                                       min_scale=0.0)
+    g = {"w": jnp.ones((4,))}
+    # fresh item sets the anchor, passes through untouched
+    out, info = ctrl.transform_gradients(_item(behavior=5, consume=5), g)
+    assert info == {"gac_cos": 1.0, "gac_scale": 1.0}
+    np.testing.assert_array_equal(np.asarray(out["w"]), 1.0)
+    # stale gradient opposing the anchor is zeroed (cos = -1 <= 0)
+    opposed = {"w": -jnp.ones((4,))}
+    out, info = ctrl.transform_gradients(
+        _item(behavior=0, consume=5), opposed)
+    assert info["gac_cos"] == pytest.approx(-1.0)
+    assert info["gac_scale"] == 0.0
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.0)
+    # stale but aligned passes at full scale
+    out, info = ctrl.transform_gradients(_item(behavior=0, consume=5), g)
+    assert info["gac_cos"] == pytest.approx(1.0)
+    assert info["gac_scale"] == 1.0
+    # partially aligned (0 < cos < cos_min) interpolates
+    mixed = {"w": jnp.asarray([1.0, -1.0, 1.0, -1.0]) +
+             jnp.asarray([0.5, 0.0, 0.0, 0.0])}
+    _, info = ctrl.transform_gradients(_item(behavior=0, consume=5), mixed)
+    assert 0.0 < info["gac_scale"] < 1.0
+
+
+def test_stable_async_truncates_to_variance_budget():
+    ctrl = StableAsyncController(c_max=4.0, c_min=1.0, var_max=0.1)
+    B, S = 2, 5
+    log_beta = np.zeros((B, S), np.float32)
+    # one wildly off-policy token: untruncated ratio e^3 ~ 20
+    log_pi = np.zeros((B, S), np.float32)
+    log_pi[0, 0] = 3.0
+    mask = np.ones((B, S), np.float32)
+    item = _item(behavior=0, consume=3)
+    w = ctrl.loss_weights(item, advantages=np.ones(B),
+                          log_beta=log_beta, mask=mask, log_pi=log_pi)
+    assert w.shape == (B, S)
+    meta = item.meta["stable_async"]
+    assert meta["var"] <= 0.1 + 1e-9
+    # the off-policy token was truncated to c, everything else is ~1
+    assert w[0, 0] == pytest.approx(meta["c"])
+    np.testing.assert_allclose(w[1], 1.0)
+    # on-policy data passes essentially unweighted at the loosest c
+    item2 = _item(behavior=3, consume=3)
+    w2 = ctrl.loss_weights(item2, advantages=np.ones(B),
+                           log_beta=log_beta, mask=mask, log_pi=log_beta)
+    np.testing.assert_allclose(w2, 1.0)
+    assert item2.meta["stable_async"]["c"] == 4.0
+    with pytest.raises(ValueError, match="needs_log_pi"):
+        ctrl.loss_weights(item, advantages=np.ones(B),
+                          log_beta=log_beta, mask=mask, log_pi=None)
+
+
+def test_asympo_decays_positive_advantages_with_lag():
+    ctrl = AsymPOController(pos_scale=1.0, neg_scale=0.5, pos_decay=0.5)
+    adv = np.asarray([1.0, -1.0, 2.0])
+    mask = np.ones((3, 4), np.float32)
+    w = ctrl.loss_weights(_item(behavior=0, consume=2), advantages=adv,
+                          log_beta=np.zeros((3, 4)), mask=mask)
+    assert w.shape == (3, 4)
+    np.testing.assert_allclose(w[0], 0.25)      # +adv, lag 2: 0.5**2
+    np.testing.assert_allclose(w[1], 0.5)       # -adv: fixed neg_scale
+    np.testing.assert_allclose(w[2], 0.25)
+    # fresh: positive side at full pos_scale
+    w0 = ctrl.loss_weights(_item(behavior=2, consume=2), advantages=adv,
+                           log_beta=np.zeros((3, 4)), mask=mask)
+    np.testing.assert_allclose(w0[0], 1.0)
+
+
+# --- serve-produced provenance ----------------------------------------------
+
+
+def _tiny_bundle():
+    from repro.configs.base import ModelConfig
+    from repro.data.tokenizer import get_tokenizer
+    from repro.models.registry import build
+
+    tok = get_tokenizer()
+    cfg = ModelConfig(name="ctrl-serve", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=tok.vocab_size)
+    return build(cfg), tok
+
+
+@pytest.mark.slow
+def test_serve_producer_provenance_and_forced_lag():
+    """The serve producer must put engine-exact provenance on the queue:
+    per-token versions pinned to the forced-lag snapshot (including the
+    first minibatch — the engine must not swap to latest at step 0), and
+    log_beta that re-scores to ~zero TV against the generating params
+    through the trainer's padded-prompt scoring path."""
+    from repro.core.tv_filter import tv_estimate
+    from repro.data.mathgen import MathTaskDataset
+    from repro.rollout.sampler import score_tokens
+    from repro.runtime import PolicyStore, ServeRolloutProducer
+    from repro.serve import ServeEngine
+
+    bundle, tok = _tiny_bundle()
+    ds = MathTaskDataset(prompt_len=12, level=0, pool_size=64, seed=0)
+    key = jax.random.PRNGKey(0)
+    store = PolicyStore(bundle.init(key), capacity=4)
+    # three more (distinct) published versions: v1..v3
+    for i in range(3):
+        k = jax.random.PRNGKey(i + 1)
+        store.publish(bundle.init(k))
+    engine = ServeEngine(bundle, store=store, num_blocks=32, block_size=8,
+                         max_batch=4, max_seq_len=32, seed=0)
+    queue = TrajectoryQueue()
+    producer = ServeRolloutProducer(
+        store, queue, engine, ds, prompts_per_minibatch=2,
+        completions_per_prompt=2, max_new_tokens=5, version_offset=2)
+    producer.fill()
+    item = queue.get(learner_version=store.version)
+    assert item.meta["producer"] == "serve"
+    mb = item.payload
+    versions = np.asarray(mb.versions)
+    assert versions.shape == (4, 5)
+    # forced lag 2 from v3 -> every generated token is v1, even in the
+    # first minibatch (regression: a step-0 store poll used to swap the
+    # engine to latest before the first token)
+    assert versions.min() == versions.max() == 1
+    assert item.behavior_version == 1
+    assert item.behavior_version_newest == 1
+    assert item.lag == 2 and item.lag_newest == 2
+    # padded-prompt discipline: the engine's log_beta must agree with
+    # teacher-forced scoring of the same padded rows under the same
+    # params, i.e. the TV the gate would see on fresh data is ~0
+    log_pi, _, _ = score_tokens(bundle, store.get(1), mb.gen.tokens,
+                                ds.prompt_len)
+    tv = float(tv_estimate(log_pi - mb.gen.log_beta, mb.gen.mask))
+    assert tv < 5e-3, f"serve log_beta disagrees with score_tokens: tv={tv}"
+
+
+# --- redesigned trainer path: bit-exact vs the legacy admission triple ------
+
+
+@pytest.mark.slow
+def test_trainer_controller_spec_matches_legacy_admission_bit_for_bit():
+    """hp.controller='tv_gate:...' must reproduce the legacy
+    hp.admission triple exactly: same phase logs, same final params."""
+    from repro.data.mathgen import MathTaskDataset
+    from repro.train.trainer_rlvr import RLVRHyperparams, RLVRTrainer
+
+    bundle, tok = _tiny_bundle()
+
+    def run(**admission_kwargs):
+        ds = MathTaskDataset(prompt_len=12, level=0, pool_size=64, seed=0)
+        hp = RLVRHyperparams(
+            algorithm="grpo_vaco", n_minibatches=2,
+            prompts_per_minibatch=2, completions_per_prompt=2,
+            max_new_tokens=4, warmup_steps=2, delta=0.05,
+            **admission_kwargs)
+        tr = RLVRTrainer(bundle, ds, hp, seed=0)
+        tr.warmup()
+        res = tr.train(phases=2, eval_every=2)
+        return res, tr.state.params
+
+    res_a, params_a = run(admission="tv_gate",
+                          admission_mode="downweight")
+    res_b, params_b = run(
+        controller="tv_gate:delta=0.05,mode=downweight")
+    assert len(res_a.phase_logs) == len(res_b.phase_logs)
+    for pa, pb in zip(res_a.phase_logs, res_b.phase_logs):
+        assert pa == pb
+    assert res_a.eval_accuracy == res_b.eval_accuracy
+    for la, lb in zip(jax.tree.leaves(params_a),
+                      jax.tree.leaves(params_b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# --- direction: the Eq. 8 gate under forced serve-produced lag --------------
+
+
+@pytest.mark.slow
+def test_tv_gate_beats_pass_through_under_forced_lag():
+    """Deterministic direction check (two cells of the lag-sweep bench
+    at its CI config): training on forced-max-lag serve rollouts, the
+    downweighting TV gate must end at >= the final greedy accuracy of
+    ungated consumption of the identical stream."""
+    from repro.data.mathgen import MathTaskDataset
+    from repro.train.trainer_rlvr import (
+        RLVRHyperparams,
+        RLVRTrainer,
+        RLVRTrainState,
+        adamw_init,
+    )
+
+    bundle, tok = _tiny_bundle()
+
+    def make_ds():
+        return MathTaskDataset(prompt_len=16, level=0, pool_size=256,
+                               seed=1)
+
+    def make_hp(spec):
+        return RLVRHyperparams(
+            algorithm="grpo", lr=1e-3, n_minibatches=3,
+            prompts_per_minibatch=4, completions_per_prompt=4,
+            max_new_tokens=6, warmup_steps=80, producer="serve",
+            controller=spec, forced_lag=3, store_capacity=4,
+            max_refills=4, engine_max_batch=8, engine_num_blocks=48)
+
+    warm_tr = RLVRTrainer(bundle, make_ds(), make_hp("pass_through"),
+                          seed=0)
+    warm_tr.warmup()
+    warm = warm_tr.state.params
+
+    def final_acc(spec):
+        tr = RLVRTrainer(bundle, make_ds(), make_hp(spec), seed=0)
+        tr.state = RLVRTrainState(params=warm, opt_state=adamw_init(warm),
+                                  updates=jnp.zeros((), jnp.int32))
+        for _ in range(4):
+            tr.store.publish(warm, event="preramp")
+        res = tr.train(5, eval_every=10**9)
+        assert res.phase_logs, f"{spec}: learner starved"
+        assert all(pl.staleness == 3 for pl in res.phase_logs)
+        return res.eval_accuracy[-1]
+
+    gated = final_acc("tv_gate:delta=0.05,mode=downweight")
+    ungated = final_acc("pass_through")
+    assert gated >= ungated, (
+        f"tv_gate ({gated:.3f}) lost to pass_through ({ungated:.3f}) "
+        "on identical forced-lag serve rollouts")
