@@ -1,0 +1,345 @@
+"""Chaos smoke: the serve-backed RLVR loop must survive a canned fault
+plan — and the recovery must be *measured*, not assumed.
+
+Two runs of the same tiny threaded serve-producer RLVR training from one
+shared warm-started base policy:
+
+* **baseline** — fault-free;
+* **chaos** — under a canned plan covering every injection family: a
+  producer crash (watchdog restarts it with backoff, the first
+  recovered batch carries ``restart`` provenance and the outage-spanning
+  lag), a decode-loop stall long enough to blow the per-request
+  deadline (timed-out requests retire cleanly and free their pages), a
+  NaN publish (quarantined by the finiteness guard, never served), a
+  queue stall, and a poisoned learner step (skipped + rolled back).
+
+The run must complete with no deadlock, zero leaked pages / refcounts /
+threads at exit, the quarantined version never entering any served
+minibatch, and the chaos run's final greedy eval within a band of the
+fault-free run — all written as flat gate metrics for
+``benchmarks.check_regression`` (``CHAOS_METRICS``).
+
+Env-tunable thresholds (CI knobs; defaults fit a laptop-class host):
+``CHAOS_DEADLINE_S`` (per-request budget, default 3.0),
+``CHAOS_STALL_MS`` (decode stall, default 2.5x the deadline),
+``CHAOS_REWARD_BAND`` (|chaos - baseline| eval band, default 0.4),
+``CHAOS_JOIN_S`` (thread-join grace at shutdown, default 10).
+
+    PYTHONPATH=src python -m benchmarks.bench_chaos --steps-small \\
+        --out results/bench/BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional, Set
+
+import numpy as np
+
+ENV = {
+    "deadline_s": float(os.environ.get("CHAOS_DEADLINE_S", "3.0")),
+    "stall_ms": float(os.environ.get("CHAOS_STALL_MS", "0")) or None,
+    "reward_band": float(os.environ.get("CHAOS_REWARD_BAND", "0.4")),
+    "join_s": float(os.environ.get("CHAOS_JOIN_S", "10")),
+}
+
+
+def canned_plan(*, stall_ms: float, deadline_s: float) -> str:
+    """The gate's fault plan: >=1 producer crash, >=1 deadline blowout,
+    >=1 NaN publish, plus a queue stall and a poisoned learner step."""
+    return ";".join((
+        # Crash the producer thread on its third minibatch.
+        "producer_crash:at_step=2",
+        # Stall the decode loop long enough that every in-flight
+        # request's wall-clock budget expires (stall >> deadline).
+        f"stall:at_step=12,ms={stall_ms:g}",
+        # Poison the learner's 4th publish: warmup is publish #1, so
+        # this lands mid-training and the guard must quarantine it.
+        "nan_publish:at_publish=4",
+        # A put-side hiccup: backpressure path, not a failure.
+        "queue_stall:at_call=5,ms=120",
+        # Poison the learner state after step 7: the finiteness guard
+        # must skip the step and roll back to the last good state.
+        "learner_nan:at_step=7",
+    ))
+
+
+def _make_parts(seed: int, warmup_steps: int):
+    from repro.configs.base import ModelConfig
+    from repro.data.mathgen import MathTaskDataset
+    from repro.data.tokenizer import get_tokenizer
+
+    tok = get_tokenizer()
+    cfg = ModelConfig(
+        name="chaos", arch_type="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=tok.vocab_size,
+    )
+
+    def make_ds() -> MathTaskDataset:
+        return MathTaskDataset(prompt_len=16, level=0, pool_size=256,
+                               seed=seed + 1)
+
+    return cfg, make_ds
+
+
+def _make_hp(*, warmup_steps: int, fault_plan: str,
+             deadline_s: Optional[float], seed: int):
+    from repro.train.trainer_rlvr import RLVRHyperparams
+
+    return RLVRHyperparams(
+        algorithm="grpo", lr=1e-3, n_minibatches=3,
+        prompts_per_minibatch=4, completions_per_prompt=4,
+        max_new_tokens=6, warmup_steps=warmup_steps,
+        producer="serve", runtime="threaded", queue_maxsize=2,
+        controller="pass_through", store_capacity=6,
+        engine_max_batch=8, engine_num_blocks=48,
+        get_timeout=120.0,
+        fault_plan=fault_plan, fault_seed=seed,
+        watchdog_restarts=3, watchdog_backoff_ms=40.0,
+        request_deadline_s=deadline_s,
+        finiteness_guard=True,
+    )
+
+
+def _run_one(
+    bundle, make_ds, hp, warm_params, *, seed: int, phases: int,
+    tracer=None,
+) -> Dict[str, Any]:
+    """One threaded training run from the shared warm start; returns the
+    gate's per-run observables (reward, counters, leak audit)."""
+    import jax.numpy as jnp
+
+    from repro.train.trainer_rlvr import (
+        RLVRTrainer,
+        RLVRTrainState,
+        adamw_init,
+    )
+
+    threads_before = {t.ident for t in threading.enumerate()}
+    tr = RLVRTrainer(bundle, make_ds(), hp, seed=seed, tracer=tracer)
+    tr.state = RLVRTrainState(
+        params=warm_params, opt_state=adamw_init(warm_params),
+        updates=jnp.zeros((), jnp.int32),
+    )
+    tr.store.publish(warm_params, event="chaos_base")
+
+    # Quarantine-never-served audit: record every behavior version that
+    # reaches the queue (the engine stamps per-token provenance; any
+    # quarantined version appearing here means a poisoned snapshot got
+    # served).
+    served_versions: Set[int] = set()
+    orig_put = tr.queue.put
+
+    def audited_put(payload, **kw):
+        versions = getattr(payload, "versions", None)
+        if versions is not None:
+            served_versions.update(
+                int(v) for v in np.unique(np.asarray(versions)))
+        return orig_put(payload, **kw)
+
+    tr.queue.put = audited_put
+
+    t0 = time.monotonic()
+    res = tr.train(phases, eval_every=10**9)
+    final_acc = tr.evaluate(128)
+    wall_s = time.monotonic() - t0
+    tr.close()
+
+    # Leak audit — pages: every pool block must be free (or resident in
+    # the prefix cache) once all requests have retired; threads: every
+    # thread this run started must be gone after close().
+    alloc = tr.engine.allocator
+    leaked_pages = alloc.num_blocks - alloc.num_free
+    deadline = time.monotonic() + ENV["join_s"]
+    while time.monotonic() < deadline:
+        alive = [t for t in threading.enumerate()
+                 if t.ident not in threads_before and t.is_alive()]
+        if not alive:
+            break
+        time.sleep(0.05)
+    leaked_threads = len(alive)
+
+    quarantined = sorted(tr.store.quarantined_versions())
+    counters = tr.metrics.counter_values(
+        "fault_injected_total", "watchdog_restart_total",
+        "request_timeout_total", "publish_quarantined_total",
+        "restart_admitted_total", "learner_nonfinite_total",
+        "admission_fallback_total")
+
+    def total(name: str) -> int:
+        return int(sum(v for k, v in counters.items()
+                       if k.split("{")[0] == name))
+
+    return {
+        "final_reward": float(final_acc),
+        "updates": len(res.phase_logs),
+        "mean_minibatch_reward": (
+            float(np.mean([pl.mean_reward for pl in res.phase_logs]))
+            if res.phase_logs else 0.0),
+        "wall_s": wall_s,
+        "producer_restarts": tr.regime.restarts,
+        "engine_timeouts": int(tr.engine.stats.timeouts),
+        "quarantined_versions": quarantined,
+        "quarantine_served": len(served_versions
+                                 & set(quarantined)),
+        "leaked_pages": int(leaked_pages),
+        "leaked_threads": int(leaked_threads),
+        "counters": counters,
+        "faults_fired": dict(tr.regime.injector.fired_counts()),
+        "watchdog_restart_total": total("watchdog_restart_total"),
+        "request_timeout_total": total("request_timeout_total"),
+        "publish_quarantined_total": total("publish_quarantined_total"),
+        "restart_admitted_total": total("restart_admitted_total"),
+        "learner_nonfinite_total": total("learner_nonfinite_total"),
+        "runtime_stats": res.runtime_stats,
+    }
+
+
+def run_chaos(*, phases: int = 5, warmup_steps: int = 80,
+              seed: int = 0) -> Dict[str, Any]:
+    from repro.models.registry import build
+    from repro.obs.tracer import make_tracer
+    from repro.train.trainer_rlvr import RLVRTrainer
+
+    sys.path.insert(0, os.path.dirname(__file__))
+    from trace_report import fault_report
+
+    cfg, make_ds = _make_parts(seed, warmup_steps)
+    bundle = build(cfg)
+
+    # Shared warm start (and the process's jit warm-up): both runs train
+    # from identical params, so reward deltas are chaos-induced.
+    warm_hp = _make_hp(warmup_steps=warmup_steps, fault_plan="",
+                       deadline_s=None, seed=seed)
+    warm_tr = RLVRTrainer(bundle, make_ds(), warm_hp, seed=seed)
+    warm_tr.warmup()
+    warm_params = warm_tr.state.params
+    warm_tr.close()
+
+    baseline = _run_one(
+        bundle, make_ds,
+        _make_hp(warmup_steps=warmup_steps, fault_plan="",
+                 deadline_s=None, seed=seed),
+        warm_params, seed=seed, phases=phases)
+
+    deadline_s = ENV["deadline_s"]
+    stall_ms = ENV["stall_ms"] or deadline_s * 2.5e3
+    plan = canned_plan(stall_ms=stall_ms, deadline_s=deadline_s)
+    tracer = make_tracer("spans")
+    chaos = _run_one(
+        bundle, make_ds,
+        _make_hp(warmup_steps=warmup_steps, fault_plan=plan,
+                 deadline_s=deadline_s, seed=seed),
+        warm_params, seed=seed, phases=phases, tracer=tracer)
+
+    events = [
+        {"ph": ev.ph, "name": ev.name, "ts": ev.ts, "pid": ev.pid,
+         "tid": ev.tid, "args": ev.args, "id": ev.id}
+        for ev in tracer.events()
+    ]
+    recovery = fault_report(events)
+
+    reward_delta = abs(chaos["final_reward"] - baseline["final_reward"])
+    restarts = chaos["watchdog_restart_total"]
+    recovered = [r for r in recovery["restarts"]
+                 if r.get("recovery_ms") is not None]
+    return {
+        "benchmark": "chaos",
+        "config": {
+            "phases": phases, "warmup_steps": warmup_steps,
+            "seed": seed, "fault_plan": plan,
+            "request_deadline_s": deadline_s, "stall_ms": stall_ms,
+            "reward_band": ENV["reward_band"],
+        },
+        "baseline": baseline,
+        "chaos": chaos,
+        "recovery": recovery,
+        # --- flat gate metrics (benchmarks.check_regression) ---
+        # completed: both runs consumed their full update budget minus
+        # at most the guard-skipped steps — nothing deadlocked.
+        "completed": float(
+            baseline["updates"] == phases * 3
+            and chaos["updates"] >= phases * 3 - 2),
+        "reward_delta": reward_delta,
+        "reward_band_ok": float(reward_delta <= ENV["reward_band"]),
+        "leaked_pages": float(chaos["leaked_pages"]
+                              + baseline["leaked_pages"]),
+        "leaked_threads": float(chaos["leaked_threads"]
+                                + baseline["leaked_threads"]),
+        "quarantine_served": float(chaos["quarantine_served"]),
+        "faults": {
+            "producer_crash": float(
+                chaos["faults_fired"].get("producer_crash", 0)),
+            "nan_publish": float(
+                chaos["faults_fired"].get("nan_publish", 0)),
+            "request_timeouts": float(chaos["request_timeout_total"]),
+            "watchdog_restarts": float(restarts),
+            "restart_admitted": float(chaos["restart_admitted_total"]),
+            "learner_nonfinite": float(
+                chaos["learner_nonfinite_total"]),
+            "recovery_measured": float(
+                1.0 if (restarts == 0 or recovered) else 0.0),
+        },
+    }
+
+
+def print_chaos(doc: Dict[str, Any]) -> None:
+    base, chaos = doc["baseline"], doc["chaos"]
+    print(f"\nchaos smoke (plan: {doc['config']['fault_plan']})")
+    print(f"  {'':<26}{'baseline':>10}{'chaos':>10}")
+    for key in ("final_reward", "mean_minibatch_reward", "updates",
+                "wall_s", "engine_timeouts", "producer_restarts",
+                "leaked_pages", "leaked_threads"):
+        b, c = base[key], chaos[key]
+        fmt = (lambda v: f"{v:>10.3f}" if isinstance(v, float)
+               else f"{v:>10}")
+        print(f"  {key:<26}{fmt(b)}{fmt(c)}")
+    print(f"  faults fired: {chaos['faults_fired']}")
+    print(f"  quarantined versions: {chaos['quarantined_versions']} "
+          f"(served: {chaos['quarantine_served']})")
+    rec = [r for r in doc["recovery"]["restarts"]
+           if r.get("recovery_ms") is not None]
+    for r in rec:
+        print(f"  restart attempt {r['attempt']}: recovered in "
+              f"{r['recovery_ms']:.1f} ms, admitted lag "
+              f"{r['admitted_lag_oldest']} oldest / "
+              f"{r['admitted_lag_newest']} newest")
+    print(f"  timeout retirements by state: "
+          f"{doc['recovery']['timeout_retirements']}")
+    print(f"  reward |delta| {doc['reward_delta']:.3f} "
+          f"(band {doc['config']['reward_band']}): "
+          f"{'OK' if doc['reward_band_ok'] else 'OUT OF BAND'}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--phases", type=int, default=8)
+    ap.add_argument("--warmup-steps", type=int, default=120)
+    ap.add_argument("--steps-small", action="store_true",
+                    help="CI-smoke scale (fewer phases, shorter warmup); "
+                         "the committed baseline and the fresh CI run "
+                         "must agree on this flag")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write a BENCH_chaos.json artifact for the CI "
+                         "regression gate")
+    args = ap.parse_args()
+    if args.steps_small:
+        doc = run_chaos(phases=5, warmup_steps=80, seed=args.seed)
+    else:
+        doc = run_chaos(phases=args.phases,
+                        warmup_steps=args.warmup_steps, seed=args.seed)
+    print_chaos(doc)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -130,6 +130,41 @@ RUNTIME_METRICS = (
            hard_min=0.99, cap_only=True),
 )
 
+# Chaos smoke (PR-9 acceptance bars), all cap-only: the run is
+# fault-injected and threaded, so no throughput baseline makes sense —
+# the gates are structural.  Completion is the no-deadlock bar; the
+# leak audits must be exactly zero (a leaked page or producer thread is
+# a bug regardless of scale); a quarantined (NaN-poisoned) version must
+# never appear in served provenance; every canned fault family must
+# actually have fired (otherwise the chaos run silently tested
+# nothing); the watchdog restart must be *measured* — a
+# restart-flagged admission with its recovery latency in the trace —
+# and the chaos run's final reward must sit within the band of the
+# fault-free twin (the band itself is env-tunable in the bench,
+# CHAOS_REWARD_BAND).
+CHAOS_METRICS = (
+    Metric("completed", True, True, hard_min=1.0, cap_only=True),
+    Metric("leaked_pages", False, True, hard_max=0.0, cap_only=True),
+    Metric("leaked_threads", False, True, hard_max=0.0, cap_only=True),
+    Metric("quarantine_served", False, True, hard_max=0.0,
+           cap_only=True),
+    Metric("reward_band_ok", True, True, hard_min=1.0, cap_only=True),
+    Metric("faults.producer_crash", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("faults.nan_publish", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("faults.request_timeouts", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("faults.watchdog_restarts", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("faults.restart_admitted", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("faults.learner_nonfinite", True, True, hard_min=1.0,
+           cap_only=True),
+    Metric("faults.recovery_measured", True, True, hard_min=1.0,
+           cap_only=True),
+)
+
 # Sharded-serve job (forced multi-device CPU).  CPU sharding is a
 # correctness instrument, not a speedup: token_exact is the hard bar
 # (greedy sharded output == single-device output — 1.0 or the gate
@@ -240,6 +275,8 @@ def main(argv=None) -> int:
     ap.add_argument("--runtime-fresh", default=None)
     ap.add_argument("--sharded-baseline", default=None)
     ap.add_argument("--sharded-fresh", default=None)
+    ap.add_argument("--chaos-baseline", default=None)
+    ap.add_argument("--chaos-fresh", default=None)
     ap.add_argument("--tol", type=float, default=0.15,
                     help="tolerance for machine-normalized (relative) "
                          "metrics; >15%% drop fails")
@@ -263,9 +300,12 @@ def main(argv=None) -> int:
     if args.sharded_fresh:
         pairs.append(("sharded", args.sharded_baseline, args.sharded_fresh,
                       SHARDED_METRICS))
+    if args.chaos_fresh:
+        pairs.append(("chaos", args.chaos_baseline, args.chaos_fresh,
+                      CHAOS_METRICS))
     if not pairs:
-        ap.error("nothing to check: pass --serve-fresh, --runtime-fresh "
-                 "and/or --sharded-fresh")
+        ap.error("nothing to check: pass --serve-fresh, --runtime-fresh, "
+                 "--sharded-fresh and/or --chaos-fresh")
 
     failures: List[str] = []
     for name, base_path, fresh_path, metrics in pairs:

@@ -20,8 +20,16 @@ and every async ``b`` must close with its ``e``.  Exit status is
 nonzero on any imbalance — CI runs this against a fresh
 ``launch.serve --trace`` artifact.
 
+``--faults`` switches to the fault/recovery view: injected-fault
+counts, each watchdog restart's latency to the first restart-flagged
+admission (the recovery lag spike, measured), timeout retirements
+grouped by the request state they were caught in, and degradation
+events (publish quarantines, admission fallbacks, non-finite learner
+steps, speculation auto-disables).
+
   PYTHONPATH=src python benchmarks/trace_report.py out.json
   PYTHONPATH=src python benchmarks/trace_report.py out.json --check
+  PYTHONPATH=src python benchmarks/trace_report.py chaos.jsonl --faults
 """
 from __future__ import annotations
 
@@ -164,12 +172,113 @@ def report(events: List[Dict[str, Any]]) -> None:
         print("swaps: none in trace")
 
 
+def _instants(events: List[Dict[str, Any]], name: str
+              ) -> List[Dict[str, Any]]:
+    return [ev for ev in events
+            if ev.get("ph") == "i" and ev.get("name") == name]
+
+
+def fault_report(events: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Fault/recovery digest of a trace (the ``--faults`` view, and what
+    ``bench_chaos`` reads for its recovery-latency assertion).
+
+    * ``faults``: injected-fault counts keyed ``kind@site``;
+    * ``restarts``: one row per watchdog restart with the latency from
+      the restart instant to the *next* ``restart_admitted`` instant —
+      the restart -> first-fresh-admission recovery time, including the
+      admitted item's lag columns (the measured recovery lag spike);
+    * ``timeout_retirements``: deadline-expired requests grouped by the
+      state they were caught in (``running`` vs ``waiting``);
+    * ``quarantines`` / ``fallbacks`` / ``nonfinite_steps`` /
+      ``spec_autodisables``: degradation-event counts.
+    """
+    faults: Dict[str, int] = defaultdict(int)
+    for ev in _instants(events, "fault"):
+        a = ev.get("args") or {}
+        faults[f"{a.get('kind', '?')}@{a.get('site', '?')}"] += 1
+
+    admissions = _instants(events, "restart_admitted")
+    restarts: List[Dict[str, Any]] = []
+    for rs in _instants(events, "watchdog_restart"):
+        a = rs.get("args") or {}
+        first = next((ad for ad in admissions if ad["ts"] >= rs["ts"]),
+                     None)
+        row: Dict[str, Any] = {
+            "producer": rs.get("tid"),
+            "attempt": a.get("attempt"),
+            "backoff_s": a.get("delay_s"),
+            "error": a.get("error"),
+        }
+        if first is not None:
+            fa = first.get("args") or {}
+            row.update(
+                recovery_ms=(first["ts"] - rs["ts"]) / 1e6,
+                admitted_lag=fa.get("lag"),
+                admitted_lag_oldest=fa.get("lag_oldest"),
+                admitted_lag_newest=fa.get("lag_newest"),
+            )
+        restarts.append(row)
+
+    by_state: Dict[str, int] = defaultdict(int)
+    for ev in _instants(events, "retire"):
+        a = ev.get("args") or {}
+        if a.get("reason") == "timeout":
+            by_state[a.get("state", "?")] += 1
+
+    return {
+        "faults": dict(faults),
+        "restarts": restarts,
+        "timeout_retirements": dict(by_state),
+        "quarantines": len(_instants(events, "publish_quarantine")),
+        "fallbacks": len(_instants(events, "admission_fallback")),
+        "nonfinite_steps": len(_instants(events, "learner_nonfinite")),
+        "spec_autodisables": len(_instants(events, "spec_autodisable")),
+    }
+
+
+def print_fault_report(fr: Dict[str, Any]) -> None:
+    print("injected faults:")
+    if fr["faults"]:
+        for key in sorted(fr["faults"]):
+            print(f"  {key:<32} {fr['faults'][key]}")
+    else:
+        print("  (none in trace)")
+    print("watchdog restarts -> first fresh admission:")
+    if fr["restarts"]:
+        for row in fr["restarts"]:
+            rec = row.get("recovery_ms")
+            tail = ("no restart-flagged admission in trace"
+                    if rec is None else
+                    f"recovered in {rec:.1f} ms (admitted lag "
+                    f"{row.get('admitted_lag_oldest')} oldest / "
+                    f"{row.get('admitted_lag_newest')} newest)")
+            print(f"  {row['producer']} attempt {row['attempt']} "
+                  f"(backoff {row['backoff_s']}s): {tail}")
+    else:
+        print("  (no restarts in trace)")
+    print("timeout retirements by request state:")
+    if fr["timeout_retirements"]:
+        for state, n in sorted(fr["timeout_retirements"].items()):
+            print(f"  {state:<10} {n}")
+    else:
+        print("  (none in trace)")
+    print(f"publish quarantines: {fr['quarantines']}, admission "
+          f"fallbacks: {fr['fallbacks']}, non-finite learner steps: "
+          f"{fr['nonfinite_steps']}, speculation auto-disables: "
+          f"{fr['spec_autodisables']}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("trace", help="trace file (.json Perfetto or .jsonl)")
     ap.add_argument("--check", action="store_true",
                     help="validate only: file loads and all spans are "
                          "balanced; nonzero exit on any imbalance")
+    ap.add_argument("--faults", action="store_true",
+                    help="fault/recovery view: injected faults, watchdog "
+                         "restart -> first-fresh-admission latency, "
+                         "timeout retirements per request state, "
+                         "degradation events")
     args = ap.parse_args(argv)
 
     try:
@@ -190,6 +299,9 @@ def main(argv=None) -> int:
     if errors:
         print(f"warning: {len(errors)} span imbalance(s) — "
               "partial trace? (ring eviction or truncated run)")
+    if args.faults:
+        print_fault_report(fault_report(events))
+        return 0
     report(events)
     return 0
 

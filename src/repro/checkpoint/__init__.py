@@ -1,3 +1,7 @@
-from repro.checkpoint.checkpoint import save_checkpoint, load_checkpoint
+from repro.checkpoint.checkpoint import (
+    latest_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_checkpoint"]

@@ -169,7 +169,7 @@ def _shadow_admission(args, engine, store, bundle, trajs):
 
 
 def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None,
-                      tracer=None):
+                      tracer=None, flush_state=None):
     from repro.data.mathgen import verify
     from repro.serve import ServeEngine
 
@@ -191,6 +191,8 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None,
         prefix_cache=args.prefix_cache,
         tracer=tracer, annotate=args.profiler_annotations,
     )
+    if flush_state is not None:
+        flush_state["metrics"] = engine.metrics
     toks_np, prompts, answers = ds.sample_batch(args.requests)
     meta = {}
     for i in range(args.requests):
@@ -352,6 +354,10 @@ def main(argv=None) -> int:
                          "('name:key=val,...', same grammar as the "
                          "training launcher) over the retired requests "
                          "— verdicts and reasons only, nothing dropped")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="append one metrics-registry snapshot as a "
+                         "JSONL line at exit (flushed early on "
+                         "SIGINT/SIGTERM)")
     args = ap.parse_args(argv)
     if args.requests is None:
         args.requests = args.batch
@@ -360,8 +366,34 @@ def main(argv=None) -> int:
                          "(shadow admission runs over retired requests)")
 
     from repro.obs.tracer import make_tracer
+    from repro.resilience import install_flush_handlers
 
     tracer = make_tracer(args.trace_detail if args.trace else "off")
+
+    def _export_trace() -> None:
+        if not args.trace:
+            return
+        from repro.obs.perfetto import export_perfetto, export_trace_jsonl
+
+        if args.trace.endswith(".jsonl"):
+            n = export_trace_jsonl(tracer, args.trace)
+        else:
+            n = export_perfetto(tracer, args.trace)
+        print(f"trace: {n} events -> {args.trace} "
+              f"(detail={args.trace_detail}, "
+              f"ring-dropped={tracer.dropped})")
+
+    # SIGINT/SIGTERM still leave the trace + metrics on disk.
+    _flush_state = {"metrics": None}
+
+    def _flush(signum: int) -> None:
+        metrics = _flush_state.get("metrics")
+        if metrics is not None and args.metrics_out:
+            metrics.export_jsonl(args.metrics_out, signal=signum)
+            print(f"metrics: flushed -> {args.metrics_out}")
+        _export_trace()
+
+    install_flush_handlers(_flush)
 
     from repro.configs import reduced_config
     from repro.data.mathgen import MathTaskDataset
@@ -417,20 +449,14 @@ def main(argv=None) -> int:
                          seed=args.seed + 1)
     if args.engine == "continuous":
         _serve_continuous(args, bundle, params, store, tok, ds, mesh=mesh,
-                          tracer=tracer)
+                          tracer=tracer, flush_state=_flush_state)
     else:
         toks_np, prompts, answers = ds.sample_batch(args.batch)
         _serve_static(args, bundle, params, store, tok, toks_np, answers)
-    if args.trace:
-        from repro.obs.perfetto import export_perfetto, export_trace_jsonl
-
-        if args.trace.endswith(".jsonl"):
-            n = export_trace_jsonl(tracer, args.trace)
-        else:
-            n = export_perfetto(tracer, args.trace)
-        print(f"trace: {n} events -> {args.trace} "
-              f"(detail={args.trace_detail}, "
-              f"ring-dropped={tracer.dropped})")
+    _export_trace()
+    if args.metrics_out and _flush_state.get("metrics") is not None:
+        _flush_state["metrics"].export_jsonl(args.metrics_out)
+        print(f"metrics: snapshot -> {args.metrics_out}")
     return 0
 
 

@@ -71,6 +71,10 @@ def _add_runtime_args(p, *, regimes, default_regime,
     p.add_argument("--trace-detail", default="spans",
                    choices=["off", "spans", "full"],
                    help="trace verbosity (off disables the tracer)")
+    p.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="append one metrics-registry snapshot as a "
+                        "JSONL line at exit (flushed early on "
+                        "SIGINT/SIGTERM)")
 
 
 def _resolve_controller(args, *, delta):
@@ -145,6 +149,34 @@ def main(argv=None) -> int:
                     help="completion length (default: hp default)")
     rv.add_argument("--engine-max-batch", type=int, default=8,
                     help="serve producer: engine decode batch size")
+    # Resilience (see repro.resilience and README "Fault tolerance").
+    rv.add_argument("--fault-plan", default="", metavar="PLAN",
+                    help="fault-injection plan, ';'-joined "
+                         "'kind:key=val,...' chunks — e.g. "
+                         "'producer_crash:at_step=4;"
+                         "nan_publish:at_publish=7'")
+    rv.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for probabilistic faults + stall jitter")
+    rv.add_argument("--watchdog-restarts", type=int, default=0,
+                    help="supervise threaded producers: restart a "
+                         "crashed producer up to N times with seeded "
+                         "exponential backoff (0 = crash-fast)")
+    rv.add_argument("--watchdog-backoff-ms", type=float, default=50.0,
+                    help="watchdog restart backoff base (doubles per "
+                         "attempt, jittered)")
+    rv.add_argument("--request-deadline", type=float, default=None,
+                    metavar="SECONDS",
+                    help="serve producer: per-request wall-clock "
+                         "budget; expired requests retire as "
+                         "finish_reason='timeout' and free their pages")
+    rv.add_argument("--no-finiteness-guard", action="store_true",
+                    help="disable the NaN/Inf firewall (non-finite "
+                         "publishes quarantined, non-finite learner "
+                         "steps skipped + rolled back)")
+    rv.add_argument("--guard-checkpoint-dir", default=None,
+                    help="finiteness guard restores from the newest "
+                         "checkpoint here (also written after every "
+                         "finite step) instead of the in-memory copy")
     # tv_gate_tokenwise: Eq. 8 per producing-version segment, scored by
     # a tv_fn closed over the PolicyStore (ROADMAP item).  RLVR-only:
     # classic-RL rollout payloads carry no per-token version record.
@@ -157,6 +189,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from repro.obs.tracer import make_tracer
+    from repro.resilience import install_flush_handlers
 
     tracer = make_tracer(args.trace_detail if args.trace else "off")
 
@@ -172,6 +205,26 @@ def main(argv=None) -> int:
         print(f"trace: {n} events -> {args.trace} "
               f"(detail={args.trace_detail}, "
               f"ring-dropped={tracer.dropped})")
+
+    # Graceful shutdown: SIGINT/SIGTERM stops producers and flushes the
+    # trace/metrics buffers before exiting — an interrupted (or chaos-
+    # killed) run still leaves its telemetry on disk.
+    _flush_state = {"trainer": None}
+
+    def _flush(signum: int) -> None:
+        trainer = _flush_state.get("trainer")
+        if trainer is not None:
+            try:
+                trainer.close()
+            except Exception:
+                pass
+            if args.metrics_out:
+                trainer.metrics.export_jsonl(
+                    args.metrics_out, signal=signum)
+                print(f"metrics: flushed -> {args.metrics_out}")
+        _export_trace()
+
+    install_flush_handlers(_flush)
 
     if args.mode == "rl":
         from repro.train.runner_rl import AsyncRLRunConfig, run_async_rl
@@ -216,11 +269,18 @@ def main(argv=None) -> int:
         controller=_resolve_controller(args, delta=args.delta),
         producer=args.producer, forced_lag=args.forced_lag,
         engine_max_batch=args.engine_max_batch,
+        fault_plan=args.fault_plan, fault_seed=args.fault_seed,
+        watchdog_restarts=args.watchdog_restarts,
+        watchdog_backoff_ms=args.watchdog_backoff_ms,
+        request_deadline_s=args.request_deadline,
+        finiteness_guard=not args.no_finiteness_guard,
+        guard_checkpoint_dir=args.guard_checkpoint_dir,
     )
     if args.max_new_tokens is not None:
         hp_kwargs["max_new_tokens"] = args.max_new_tokens
     hp = RLVRHyperparams(**hp_kwargs)
     trainer = RLVRTrainer(bundle, ds, hp, seed=args.seed, tracer=tracer)
+    _flush_state["trainer"] = trainer
     wl = trainer.warmup()
     print(f"[warmup] loss={wl:.4f} acc={trainer.evaluate(128):.3f}")
     res = trainer.train(args.phases, eval_every=max(args.phases // 4, 1))
@@ -241,6 +301,9 @@ def main(argv=None) -> int:
         },
     }, indent=1))
     _export_trace()
+    if args.metrics_out:
+        trainer.metrics.export_jsonl(args.metrics_out)
+        print(f"metrics: snapshot -> {args.metrics_out}")
     if args.checkpoint_dir:
         path = save_checkpoint(
             args.checkpoint_dir, args.phases, trainer.state.params,

@@ -144,9 +144,16 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
     if getattr(engine, "_reclaim_window", None) is not None:
         out["reclaim_window"] = engine._reclaim_window
         out["reclaimed_window_pages"] = sched.reclaimed_pages
+    out["spec_disabled"] = bool(getattr(engine, "spec_disabled", False))
+    out["timeouts_by_state"] = dict(getattr(sched, "timeouts_by_state", {}))
     metrics = getattr(engine, "metrics", None)
     if metrics is not None:
         out.update(serve_latency_stats(metrics))
+        resilience = collect_resilience_stats(
+            metrics, store=getattr(engine, "store", None),
+            injector=getattr(engine, "injector", None))
+        if resilience:
+            out["resilience"] = resilience
     return out
 
 
@@ -187,6 +194,40 @@ def serve_latency_counts(metrics: Any) -> Dict[str, int]:
             for name, _ in SERVE_LATENCY_HISTOGRAMS}
 
 
+# Fault/recovery counters surfaced by collect_{runtime,serve}_stats —
+# the names the resilience layer increments (repro.resilience plus the
+# hooks in policy_store/queue/scheduler/engine/trainer).
+RESILIENCE_COUNTERS = (
+    "fault_injected_total",
+    "watchdog_restart_total",
+    "request_timeout_total",
+    "publish_quarantined_total",
+    "admission_fallback_total",
+    "restart_admitted_total",
+    "learner_nonfinite_total",
+    "spec_autodisable_total",
+)
+
+
+def collect_resilience_stats(registry: Any, store: Any = None,
+                             injector: Any = None) -> Dict[str, Any]:
+    """Fault-injection and recovery counters as one JSON-ready block.
+
+    Reads labelled counters via ``registry.counter_values`` (never
+    ``snapshot()`` — this function runs *inside* snapshot producers),
+    plus the store's quarantine ledger and the injector's fired-fault
+    tally when available.
+    """
+    out: Dict[str, Any] = {}
+    if registry is not None and hasattr(registry, "counter_values"):
+        out["counters"] = registry.counter_values(*RESILIENCE_COUNTERS)
+    if store is not None and hasattr(store, "quarantined_versions"):
+        out["quarantined_versions"] = sorted(store.quarantined_versions())
+    if injector is not None and getattr(injector, "active", False):
+        out["faults_fired"] = dict(injector.fired_counts())
+    return out
+
+
 def collect_runtime_stats(store: Any, queue: Any) -> Dict[str, Any]:
     """Joined store+queue view, JSON-ready, for launchers and examples."""
     stats = queue.stats()
@@ -213,4 +254,9 @@ def collect_runtime_stats(store: Any, queue: Any) -> Dict[str, Any]:
     counters_fn = getattr(queue, "admission_counters", None)
     if counters_fn is not None:
         out["admission"]["counters"] = counters_fn()
+    resilience = collect_resilience_stats(
+        getattr(queue, "registry", None), store=store,
+        injector=getattr(queue, "injector", None))
+    if resilience:
+        out["resilience"] = resilience
     return out

@@ -214,6 +214,19 @@ class MetricsRegistry:
         with self._lock:
             self._producers.pop(name, None)
 
+    def counter_values(self, *names: str) -> Dict[str, float]:
+        """Rendered ``{name{labels}: value}`` for counters whose metric
+        name is in ``names`` (all counters when empty).  Unlike
+        :meth:`snapshot` this never invokes producers, so stats
+        producers may call it without recursing into themselves."""
+        with self._lock:
+            counters = list(self._counters.items())
+        return {
+            _render(n, k): c.value
+            for (n, k), c in counters
+            if not names or n in names
+        }
+
     # -- export ---------------------------------------------------------------
 
     def snapshot(self) -> Dict[str, Any]:

@@ -38,6 +38,7 @@ from repro.runtime.controllers import (
 )
 from repro.runtime.policy_store import (
     PolicyStore,
+    QuarantinedVersionError,
     SnapshotMeta,
     StaleVersionError,
 )
@@ -75,6 +76,7 @@ __all__ = [
     "register_controller",
     "spec_from_legacy",
     "PolicyStore",
+    "QuarantinedVersionError",
     "SnapshotMeta",
     "StaleVersionError",
     "QueueClosed",

@@ -36,6 +36,8 @@ from repro.core.policy_lag import (
     buffer_sample,
 )
 from repro.obs.tracer import NULL_TRACER, Tracer
+from repro.resilience.faults import FaultInjector, NULL_INJECTOR
+from repro.resilience.supervision import tree_all_finite
 
 
 @dataclass(frozen=True)
@@ -51,6 +53,10 @@ class StaleVersionError(KeyError):
     """Requested a version whose parameters were evicted from the ring."""
 
 
+class QuarantinedVersionError(KeyError):
+    """Requested a version that was quarantined (non-finite publish)."""
+
+
 class PolicyStore:
     """Bounded ring of policy snapshots with monotonic versioning."""
 
@@ -61,6 +67,9 @@ class PolicyStore:
         meta: Optional[Dict[str, Any]] = None,
         sharding: Any = None,
         tracer: Tracer = NULL_TRACER,
+        injector: FaultInjector = NULL_INJECTOR,
+        guard_finite: bool = False,
+        registry: Any = None,
     ) -> None:
         """``sharding`` (a ``NamedSharding``, typically
         ``distributed.sharding.replicated(mesh)``) places every
@@ -87,31 +96,90 @@ class PolicyStore:
         # version -> [params, refcount]: snapshots kept alive past ring
         # eviction for long-lived readers (speculative-decode drafts).
         self._pinned: Dict[int, List[Any]] = {}
+        # Resilience: quarantined versions hold a version number and
+        # history entry but never enter the ring, so they can never be
+        # resolved, pinned or swapped into a serve engine.
+        self.injector = injector
+        self.guard_finite = bool(guard_finite)
+        self.registry = registry
+        self._quarantined: set = set()
+        self._publish_calls = 0
 
     # -- publication ---------------------------------------------------------
 
     def publish(self, params: Any, **meta: Any) -> int:
-        """Insert a new snapshot; returns its (monotonic) version."""
-        if self._sharding is not None:
+        """Insert a new snapshot; returns its (monotonic) version.
+
+        With ``guard_finite`` on, a snapshot with any non-finite array
+        leaf is **quarantined** instead of inserted: it consumes a
+        version number and a history entry (``quarantined=True``) but
+        never enters the ring, so ``latest()``/``resolve_lagged()``
+        keep serving the last good snapshot and no actor can swap the
+        poison in.  The fault injector's ``nan_publish`` hook runs
+        first, so an injected poisoned publish exercises exactly this
+        path."""
+        with self._lock:
+            self._publish_calls += 1
+            calls, provisional = self._publish_calls, self._version + 1
+        params, poisoned = self.injector.poison(
+            "publish", params, at_publish=calls, version=provisional)
+        quarantine = self.guard_finite and not tree_all_finite(params)
+        if not quarantine and self._sharding is not None:
             # Outside the lock: device placement can be slow and needs
             # no store state.
             params = jax.device_put(params, self._sharding)
         with self._lock:
-            slot = int(self._buffer.head)
-            self._buffer = buffer_push(self._buffer, params)
             self._version += 1
-            self._slot_versions[slot] = self._version
-            self._history[self._version] = SnapshotMeta(
-                self._version, time.time(), dict(meta)
-            )
             version = self._version
+            if quarantine:
+                self._quarantined.add(version)
+                meta = dict(meta, quarantined=True, poisoned=poisoned)
+            else:
+                slot = int(self._buffer.head)
+                self._buffer = buffer_push(self._buffer, params)
+                self._slot_versions[slot] = self._version
+            self._history[version] = SnapshotMeta(
+                version, time.time(), dict(meta)
+            )
         tr = self.tracer
+        if quarantine:
+            if self.registry is not None:
+                self.registry.counter("publish_quarantined_total").inc()
+            if tr.enabled:
+                tr.instant("publish_quarantine", pid="runtime", tid="store",
+                           version=version, poisoned=poisoned)
+            return version
         if tr.enabled:
             tr.instant("publish", pid="runtime", tid="store",
                        version=version)
             tr.counter("policy_version", pid="runtime",
                        version=float(version))
         return version
+
+    # -- quarantine ----------------------------------------------------------
+
+    def quarantine(self, version: int) -> None:
+        """Mark ``version`` unserveable: excluded from ``latest()`` and
+        lagged resolution, and ``get()`` raises.  (Post-hoc quarantine
+        of a version already resident in the ring guards the serve
+        read paths; in-graph mixture sampling still sees the slot.)"""
+        with self._lock:
+            if version not in self._history:
+                raise KeyError(f"version {version} was never published")
+            self._quarantined.add(version)
+        if self.registry is not None:
+            self.registry.counter("publish_quarantined_total").inc()
+        if self.tracer.enabled:
+            self.tracer.instant("publish_quarantine", pid="runtime",
+                                tid="store", version=version)
+
+    def is_quarantined(self, version: int) -> bool:
+        with self._lock:
+            return version in self._quarantined
+
+    def quarantined_versions(self) -> List[int]:
+        with self._lock:
+            return sorted(self._quarantined)
 
     # -- reads ---------------------------------------------------------------
 
@@ -135,8 +203,22 @@ class PolicyStore:
             return self._buffer, self._slot_versions.copy(), self._version
 
     def latest(self) -> Tuple[Any, int]:
+        """Newest *serveable* snapshot.  When the newest published
+        version is quarantined this is the newest good one — the ring
+        never holds quarantined params, so ``buffer_latest`` already
+        points at it; only the reported version needs adjusting."""
         with self._lock:
-            return buffer_latest(self._buffer), self._version
+            version = self._version
+            while version in self._quarantined and version > 0:
+                version -= 1
+            if version == self._version:
+                return buffer_latest(self._buffer), version
+            params = self._resident_locked(version)
+            if params is None:
+                raise QuarantinedVersionError(
+                    f"no serveable snapshot: latest good version "
+                    f"{version} is no longer resident")
+            return params, version
 
     def retained_versions(self) -> List[int]:
         """Versions whose parameters are still resident, oldest first."""
@@ -151,6 +233,10 @@ class PolicyStore:
         """Parameters of `version`; StaleVersionError once evicted
         (pinned versions stay readable past eviction)."""
         with self._lock:
+            if version in self._quarantined:
+                raise QuarantinedVersionError(
+                    f"version {version} is quarantined (non-finite "
+                    "publish); it cannot be served")
             params = self._resident_locked(version)
             if params is not None:
                 return params
@@ -232,6 +318,11 @@ class PolicyStore:
             for j in range(count)
         }
         resident.update(self._pinned)
+        resident -= self._quarantined
+        if not resident:
+            raise QuarantinedVersionError(
+                "no serveable snapshot: every resident version is "
+                "quarantined")
         older = [v for v in resident if v <= target]
         return max(older) if older else min(resident)
 

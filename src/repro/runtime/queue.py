@@ -22,6 +22,7 @@ from typing import Any, Dict, Optional
 
 from repro.metrics.runtime_metrics import LagHistogram, RuntimeQueueStats
 from repro.obs.tracer import NULL_TRACER, Tracer
+from repro.resilience.faults import FaultInjector, NULL_INJECTOR
 from repro.runtime.admission import AdmissionPolicy, PassThrough
 
 
@@ -83,6 +84,9 @@ class TrajectoryQueue:
         admission: Optional[AdmissionPolicy] = None,
         tracer: Tracer = NULL_TRACER,
         registry: Any = None,
+        injector: FaultInjector = NULL_INJECTOR,
+        fallback_admission: Optional[AdmissionPolicy] = None,
+        fallback_max_lag: int = 4,
     ) -> None:
         """``tracer`` gets put/pop/drop instants (with the TV verdict
         and lag at decision time) plus a queue-depth counter track;
@@ -114,6 +118,21 @@ class TrajectoryQueue:
         # queue_admission_total{controller=...,outcome=...,reason=...}.
         self._decision_counters: Dict[tuple, Any] = {}
         self._lag_histogram = LagHistogram()
+        # Resilience: fault hooks + the max_lag fallback admission used
+        # when the configured controller raises mid-run (graceful
+        # degradation — a buggy controller must not kill the trainer).
+        self.injector = injector
+        self._gets = 0
+        self._fallback_max_lag = int(fallback_max_lag)
+        self._fallback = fallback_admission
+        self._fallback_active = False
+
+    def _fallback_admission(self) -> AdmissionPolicy:
+        if self._fallback is None:
+            from repro.runtime.admission import MaxLagEviction
+
+            self._fallback = MaxLagEviction(max_lag=self._fallback_max_lag)
+        return self._fallback
 
     def _count_decision(self, outcome: str, reason: str) -> None:
         """Bump queue_admission_total{controller,outcome,reason} (must be
@@ -168,6 +187,10 @@ class TrajectoryQueue:
                 else int(behavior_version_newest)),
             meta=dict(meta),
         )
+        if self.injector.active:
+            with self._cond:
+                call = self._puts + 1
+            self.injector.stall("queue_put", at_call=call)
         with self._cond:
             while (
                 self.maxsize > 0
@@ -214,6 +237,11 @@ class TrajectoryQueue:
         drained, or when `timeout` elapses with nothing available.
         """
         deadline = None if timeout is None else time.monotonic() + timeout
+        if self.injector.active:
+            with self._cond:
+                self._gets += 1
+                call = self._gets
+            self.injector.stall("queue_get", at_call=call)
         while True:
             with self._cond:
                 while not self._dq and not self._closed:
@@ -231,7 +259,30 @@ class TrajectoryQueue:
             # Admission runs outside the lock: tv_fn may dispatch a jitted
             # forward pass and must not stall the producer.
             item.learner_version_at_consume = int(learner_version)
-            decision = self.admission.admit(item)
+            try:
+                decision = self.admission.admit(item)
+            except Exception as exc:
+                # Graceful degradation: a raising controller downgrades
+                # the run to plain max_lag admission instead of killing
+                # the learner.  Counted + traced so the fallback is a
+                # measured event, not a silent behavior change.
+                self.registry.counter(
+                    "admission_fallback_total",
+                    controller=self.admission.name).inc()
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "admission_fallback", pid="runtime", tid="queue",
+                        controller=self.admission.name, error=repr(exc))
+                if not self._fallback_active:
+                    self._fallback_active = True
+                    import warnings
+
+                    warnings.warn(
+                        f"admission controller {self.admission.name!r} "
+                        f"raised ({exc!r}); falling back to "
+                        f"max_lag:{self._fallback_max_lag}",
+                        RuntimeWarning, stacklevel=2)
+                decision = self._fallback_admission().admit(item)
             # A decision must say *why* — reasons label the registry
             # counters, so an empty one would silently merge outcomes.
             reason = decision.reason
@@ -266,6 +317,15 @@ class TrajectoryQueue:
                 self._admitted += 1
                 self._lag_histogram.record(item.lag)
                 depth = len(self._dq)
+            if item.meta.get("restart"):
+                # First admitted batch from a restarted producer: the
+                # recovery lag spike, measured at the gate.
+                self.registry.counter("restart_admitted_total").inc()
+                if tr.enabled:
+                    tr.instant("restart_admitted", pid="runtime",
+                               tid="queue", lag=item.lag,
+                               lag_oldest=item.lag_oldest,
+                               lag_newest=item.lag_newest)
             if tr.enabled:
                 tr.instant("queue_pop", pid="runtime", tid="queue",
                            lag=item.lag, weight=item.weight,

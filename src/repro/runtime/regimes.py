@@ -32,6 +32,12 @@ import numpy as np
 
 from repro.core.policy_lag import PolicyBuffer, buffer_sample
 from repro.envs.base import Env
+from repro.resilience.faults import FaultInjector, NULL_INJECTOR
+from repro.resilience.supervision import (
+    BackoffPolicy,
+    RestartContext,
+    supervise,
+)
 from repro.rollout.env_rollout import collect_rollout, init_env_states
 from repro.runtime.policy_store import PolicyStore
 from repro.runtime.queue import QueueClosed, TrajectoryQueue
@@ -275,7 +281,17 @@ class ForwardNRegime(LagRegime):
 
 class ThreadedRegime(LagRegime):
     """Real producer thread: generate from the newest snapshot while the
-    learner consumes.  ``fill()`` is a no-op — production is continuous."""
+    learner consumes.  ``fill()`` is a no-op — production is continuous.
+
+    With a ``supervisor`` (:class:`~repro.resilience.BackoffPolicy`) the
+    loop body runs under watchdog supervision: a crash consumes one
+    bounded restart after a seeded backoff delay instead of silently
+    starving the queue.  A restarted incarnation re-pins the *current*
+    store version and stamps its first item with ``restart=True``
+    provenance spanning the outage (``behavior_version`` = the version
+    pinned at crash time), so the recovery surfaces at admission as a
+    measured ``lag_oldest`` spike rather than bypassing the gate.
+    """
 
     name = "threaded"
     phase_locked = False
@@ -287,14 +303,21 @@ class ThreadedRegime(LagRegime):
         producer: Callable[[Any], Any],
         *,
         max_items: Optional[int] = None,
+        injector: FaultInjector = NULL_INJECTOR,
+        supervisor: Optional[BackoffPolicy] = None,
     ) -> None:
         super().__init__(store, queue)
         self.producer = producer
         self.max_items = max_items
+        self.injector = injector
+        self.supervisor = supervisor
         self._stop_event = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.produced = 0
+        self.restarts = 0
         self.error: Optional[BaseException] = None
+        self._version_at_crash: Optional[int] = None
+        self._restart_floor: Optional[int] = None
 
     def start(self) -> None:
         self._thread = threading.Thread(
@@ -302,25 +325,69 @@ class ThreadedRegime(LagRegime):
         )
         self._thread.start()
 
+    def _restart_meta(self, ctx: RestartContext, version: int) -> tuple:
+        """(behavior_version_oldest, meta) for the first item a restarted
+        incarnation publishes: conservative provenance spanning the
+        outage, so span-aware admission sees the true worst case."""
+        oldest = version
+        meta = {}
+        if ctx.attempt > 0:
+            meta = {"restart": True, "restart_attempt": ctx.attempt}
+            if self._restart_floor is not None:
+                oldest = min(self._restart_floor, version)
+                self._restart_floor = None
+        return oldest, meta
+
+    def _run(self, ctx: RestartContext) -> None:
+        restart_pending = ctx.attempt > 0
+        if restart_pending:
+            # Freeze the crash-time pin NOW: the loop below re-pins (and
+            # overwrites _version_at_crash) every iteration, so the
+            # outage floor must be captured before the first one.
+            self._restart_floor = self._version_at_crash
+        while not self._stop_event.is_set() and (
+            self.max_items is None or self.produced < self.max_items
+        ):
+            # A restarted incarnation re-pins whatever is current *now*.
+            params, version = self.store.latest()
+            self._version_at_crash = version
+            self.injector.crash_if(
+                "producer", at_step=self.produced, producer=self.name)
+            with self.tracer.span("produce", pid="runtime",
+                                  tid="producer", version=version):
+                payload = _stamp_versions(
+                    self.producer(params), version)
+            oldest, meta = (
+                self._restart_meta(ctx, version)
+                if restart_pending else (version, {}))
+            try:
+                self.queue.put(
+                    payload,
+                    behavior_version=oldest,
+                    learner_version=self.store.version,
+                    behavior_version_newest=(
+                        version if oldest != version else None),
+                    **meta,
+                )
+            except QueueClosed:
+                break
+            restart_pending = False
+            self.produced += 1
+
     def _loop(self) -> None:
         try:
-            while not self._stop_event.is_set() and (
-                self.max_items is None or self.produced < self.max_items
-            ):
-                params, version = self.store.latest()
-                with self.tracer.span("produce", pid="runtime",
-                                      tid="producer", version=version):
-                    payload = _stamp_versions(
-                        self.producer(params), version)
-                try:
-                    self.queue.put(
-                        payload,
-                        behavior_version=version,
-                        learner_version=self.store.version,
-                    )
-                except QueueClosed:
-                    break
-                self.produced += 1
+            if self.supervisor is None:
+                self._run(RestartContext())
+            else:
+                self.restarts = supervise(
+                    self._run,
+                    policy=self.supervisor,
+                    name=self.name,
+                    should_stop=self._stop_event.is_set,
+                    clean_exits=(QueueClosed,),
+                    registry=self.queue.registry,
+                    tracer=self.tracer,
+                )
         except BaseException as e:  # surface producer crashes, don't hang
             self.error = e
         finally:
@@ -375,13 +442,16 @@ class EngineThreadedRegime(ThreadedRegime):
         *,
         request_fn: Callable[[], Optional[tuple]],
         max_items: Optional[int] = None,
+        injector: FaultInjector = NULL_INJECTOR,
+        supervisor: Optional[BackoffPolicy] = None,
     ) -> None:
         if engine.store is not store:
             raise ValueError(
                 "engine must share the regime's PolicyStore (its "
                 "in-flight swaps are how learner publishes reach the "
                 "actor)")
-        super().__init__(store, queue, producer=None, max_items=max_items)
+        super().__init__(store, queue, producer=None, max_items=max_items,
+                         injector=injector, supervisor=supervisor)
         self.engine = engine
         self.request_fn = request_fn
         self._source_dry = False
@@ -400,34 +470,46 @@ class EngineThreadedRegime(ThreadedRegime):
             prompt, max_new_tokens = item
             self.engine.submit(prompt, max_new_tokens)
 
-    def _loop(self) -> None:
-        try:
-            while not self._stop_event.is_set() and (
-                self.max_items is None or self.produced < self.max_items
-            ):
-                self._feed()
-                if not self.engine.has_work:
-                    break    # stream dry and everything drained
-                for traj in self.engine.step():
-                    try:
-                        self.queue.put(
-                            traj,
-                            behavior_version=traj.behavior_version,
-                            learner_version=self.store.version,
-                            behavior_version_newest=int(
-                                traj.versions.max()
-                            ) if traj.versions.size else None,
-                            versions=traj.versions.tolist(),
-                            request_id=traj.request_id,
-                            finish_reason=traj.finish_reason,
-                        )
-                    except QueueClosed:
-                        return
-                    self.produced += 1
-        except BaseException as e:  # surface producer crashes, don't hang
-            self.error = e
-        finally:
-            self.queue.close()
+    def _run(self, ctx: RestartContext) -> None:
+        restart_pending = ctx.attempt > 0
+        if restart_pending:
+            # Re-pin the current store version: the engine's in-flight
+            # requests keep their stale per-token provenance (the real
+            # recovery lag spike), new tokens come from fresh weights.
+            params, version = self.store.latest()
+            self.engine.params = params
+            self.engine.version = version
+        while not self._stop_event.is_set() and (
+            self.max_items is None or self.produced < self.max_items
+        ):
+            self.injector.crash_if(
+                "producer", at_step=self.produced, producer=self.name)
+            self._feed()
+            if not self.engine.has_work:
+                break    # stream dry and everything drained
+            for traj in self.engine.step():
+                self._version_at_crash = int(traj.behavior_version)
+                meta = {}
+                if restart_pending:
+                    meta = {"restart": True,
+                            "restart_attempt": ctx.attempt}
+                try:
+                    self.queue.put(
+                        traj,
+                        behavior_version=traj.behavior_version,
+                        learner_version=self.store.version,
+                        behavior_version_newest=int(
+                            traj.versions.max()
+                        ) if traj.versions.size else None,
+                        versions=traj.versions.tolist(),
+                        request_id=traj.request_id,
+                        finish_reason=traj.finish_reason,
+                        **meta,
+                    )
+                except QueueClosed:
+                    return
+                restart_pending = False
+                self.produced += 1
 
 
 def make_regime(
@@ -439,23 +521,29 @@ def make_regime(
     forward_n: int = 4,
     max_items: Optional[int] = None,
     engine: Any = None,
+    injector: FaultInjector = NULL_INJECTOR,
+    supervisor: Optional[BackoffPolicy] = None,
 ) -> LagRegime:
     """Factory used by runners and launchers (`--runtime` flag).
 
     For ``threaded_engine``, `producer` is the request source
     (``request_fn``) and `engine` the ServeEngine bound to `store`.
+    ``injector``/``supervisor`` apply to the threaded regimes only
+    (phase-locked regimes have no producer thread to crash or watch).
     """
     if name == "backward_mixture":
         return BackwardMixtureRegime(store, queue, producer)
     if name == "forward_n":
         return ForwardNRegime(store, queue, producer, n_items=forward_n)
     if name == "threaded":
-        return ThreadedRegime(store, queue, producer, max_items=max_items)
+        return ThreadedRegime(store, queue, producer, max_items=max_items,
+                              injector=injector, supervisor=supervisor)
     if name == "threaded_engine":
         if engine is None:
             raise ValueError("threaded_engine regime requires engine=")
         return EngineThreadedRegime(
-            store, queue, engine, request_fn=producer, max_items=max_items)
+            store, queue, engine, request_fn=producer, max_items=max_items,
+            injector=injector, supervisor=supervisor)
     raise ValueError(f"unknown lag regime {name!r}")
 
 

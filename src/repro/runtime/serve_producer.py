@@ -45,6 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.tokenizer import PAD
+from repro.resilience.faults import FaultInjector, NULL_INJECTOR
+from repro.resilience.supervision import (
+    BackoffPolicy,
+    RestartContext,
+    supervise,
+)
 from repro.runtime.policy_store import PolicyStore
 from repro.runtime.queue import QueueClosed, TrajectoryQueue
 from repro.runtime.regimes import LagRegime
@@ -71,6 +77,8 @@ class ServeRolloutProducer(LagRegime):
         version_offset: Optional[int] = None,
         threaded: bool = False,
         max_items: Optional[int] = None,
+        injector: FaultInjector = NULL_INJECTOR,
+        supervisor: Optional[BackoffPolicy] = None,
     ) -> None:
         if engine.store is not store:
             raise ValueError(
@@ -85,10 +93,16 @@ class ServeRolloutProducer(LagRegime):
         self.version_offset = version_offset
         self.phase_locked = not threaded
         self.max_items = max_items
+        self.injector = injector
+        self.supervisor = supervisor
         self.produced = 0
+        self.restarts = 0
         self.error: Optional[BaseException] = None
         self._stop_event = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._version_at_crash: Optional[int] = None
+        self._restart_floor: Optional[int] = None
+        self._last_timeouts = 0
         if version_offset is not None:
             if version_offset < 0:
                 raise ValueError(
@@ -122,7 +136,10 @@ class ServeRolloutProducer(LagRegime):
         from repro.rollout.async_engine import RLVRMinibatch
         from repro.rollout.sampler import GenerationResult
 
+        self.injector.crash_if(
+            "producer", at_step=self.produced, producer=self.name)
         self._apply_forced_lag()
+        self._version_at_crash = int(self.engine.version)
         tok = self.dataset.tok
         prompt_len = self.dataset.prompt_len
         n_new = self.max_new_tokens
@@ -139,6 +156,7 @@ class ServeRolloutProducer(LagRegime):
                 req = self.engine.submit(toks_np[i], n_new)
                 pending[req.request_id] = i
             done: dict = {}
+            self._last_timeouts = 0
             while len(done) < batch:
                 if not self.engine.has_work:
                     raise RuntimeError(
@@ -148,6 +166,11 @@ class ServeRolloutProducer(LagRegime):
                     idx = pending.pop(traj.request_id, None)
                     if idx is not None:
                         done[idx] = traj
+                        if traj.finish_reason == "timeout":
+                            # Deadline retirement: the row stays in the
+                            # fixed-shape batch with whatever tokens it
+                            # emitted (possibly none — fully masked).
+                            self._last_timeouts += 1
 
         tokens = np.full((batch, prompt_len + n_new), PAD, np.int32)
         tokens[:, :prompt_len] = toks_np
@@ -180,14 +203,23 @@ class ServeRolloutProducer(LagRegime):
         return RLVRMinibatch(gen=gen, rewards=rewards, answers=answers,
                              versions=versions)
 
-    def _put(self, mb: "RLVRMinibatch") -> None:
+    def _put(self, mb: "RLVRMinibatch", **meta: Any) -> None:
         versions = np.asarray(mb.versions)
+        oldest = int(versions.min())
+        if meta.get("restart") and self._restart_floor is not None:
+            # Conservative provenance for a restarted producer's first
+            # batch: span the outage so admission measures the true
+            # worst-case staleness instead of being bypassed.
+            oldest = min(oldest, self._restart_floor)
+            self._restart_floor = None
         self.queue.put(
             mb,
-            behavior_version=int(versions.min()),
+            behavior_version=oldest,
             learner_version=self.store.version,
             behavior_version_newest=int(versions.max()),
             producer="serve",
+            timeouts=self._last_timeouts,
+            **meta,
         )
 
     # -- phase-locked mode ---------------------------------------------------
@@ -204,17 +236,45 @@ class ServeRolloutProducer(LagRegime):
             target=self._loop, name="serve-producer", daemon=True)
         self._thread.start()
 
+    def _run(self, ctx: RestartContext) -> None:
+        restart_pending = ctx.attempt > 0
+        if restart_pending:
+            # The version generation was pinned to when the crash hit —
+            # the floor for the first recovered batch's span.
+            self._restart_floor = self._version_at_crash
+        if restart_pending and self.version_offset is None:
+            # Re-pin the current store version for the restarted
+            # incarnation (forced-lag mode re-pins per minibatch).
+            params, version = self.store.latest()
+            self.engine.params = params
+            self.engine.version = version
+        while not self._stop_event.is_set() and (
+            self.max_items is None or self.produced < self.max_items
+        ):
+            mb = self._produce_minibatch()
+            meta = ({"restart": True, "restart_attempt": ctx.attempt}
+                    if restart_pending else {})
+            try:
+                self._put(mb, **meta)
+            except QueueClosed:
+                break
+            restart_pending = False
+            self.produced += 1
+
     def _loop(self) -> None:
         try:
-            while not self._stop_event.is_set() and (
-                self.max_items is None or self.produced < self.max_items
-            ):
-                mb = self._produce_minibatch()
-                try:
-                    self._put(mb)
-                except QueueClosed:
-                    break
-                self.produced += 1
+            if self.supervisor is None:
+                self._run(RestartContext())
+            else:
+                self.restarts = supervise(
+                    self._run,
+                    policy=self.supervisor,
+                    name=self.name,
+                    should_stop=self._stop_event.is_set,
+                    clean_exits=(QueueClosed,),
+                    registry=self.queue.registry,
+                    tracer=self.tracer,
+                )
         except BaseException as e:   # surface crashes, don't hang
             self.error = e
         finally:

@@ -162,6 +162,10 @@ class ServeStats:
     # (suffix-only under a prefix hit) and COW page copies performed.
     prefill_tokens: int = 0
     cow_copies: int = 0
+    # Resilience: deadline-expired requests retired with a (possibly
+    # empty) "timeout" trajectory, and speculation auto-disable events.
+    timeouts: int = 0
+    spec_autodisables: int = 0
 
     def as_dict(self) -> Dict[str, Any]:
         d = dict(self.__dict__)
@@ -251,6 +255,9 @@ class ServeEngine:
         tracer: Optional[Tracer] = None,
         metrics: Optional[MetricsRegistry] = None,
         annotate: bool = False,
+        injector: Any = None,
+        request_deadline_s: Optional[float] = None,
+        spec_disable_after: int = 8,
     ) -> None:
         """``speculate_k > 0`` turns on speculative decode; ``draft`` is
         one of ``("version", -n)`` (self-speculation from the store's
@@ -336,12 +343,19 @@ class ServeEngine:
         self._reclaim_window = (
             max(windows) if window_reclaim and windows
             and all(w is not None for w in windows) else None)
+        if injector is None:
+            from repro.resilience.faults import NULL_INJECTOR
+
+            injector = NULL_INJECTOR
+        self.injector = injector
         self.scheduler = ContinuousBatchingScheduler(
             self.allocator, max_batch=max_batch,
             max_blocks_per_request=max_blocks_per_request,
             prefix_fn=self._prefix_key if self.prefix_cache else None,
             reclaim_window=self._reclaim_window,
-            tracer=self.tracer)
+            tracer=self.tracer,
+            request_deadline_s=request_deadline_s,
+            registry=self.metrics)
         self.pages = shard_paged_pool(
             bundle.init_paged_cache(num_blocks, block_size), mesh)
         self.max_batch = max_batch
@@ -442,6 +456,15 @@ class ServeEngine:
         # (1.0 = draft the full k) reset whenever a slot is re-admitted.
         self._accept_ema = np.ones((max_batch,), np.float64)
         self._accept_ema_alpha = 0.3
+        # Graceful degradation: after `spec_disable_after` consecutive
+        # rounds where the verifier rejected EVERY drafted token,
+        # speculation turns itself off and the engine falls back to the
+        # plain chunked decode path (the verifier's corrected tokens
+        # keep the output exact either way — this is purely cutting the
+        # wasted draft work of a hopeless draft).
+        self.spec_disable_after = max(int(spec_disable_after), 1)
+        self.spec_disabled = False
+        self._all_reject_rounds = 0
         if self.speculate_k:
             if bundle.decode_step_paged_multi is None:
                 raise ValueError(
@@ -974,6 +997,35 @@ class ServeEngine:
             num_preemptions=req.num_preemptions,
         ))
 
+    @property
+    def _spec_k_active(self) -> int:
+        """Speculation depth for this round: 0 once auto-disabled."""
+        return 0 if self.spec_disabled else self.speculate_k
+
+    def _timeout_finish(self, req: Request,
+                        finished: List[ServedTrajectory]) -> None:
+        """Book a deadline-expired request (already retired by the
+        scheduler) as a trajectory: whatever tokens it emitted, marked
+        ``finish_reason="timeout"`` — an empty, fully-masked row when
+        it never produced one."""
+        self._clear_slot(req.slot)
+        self.stats.finished += 1
+        self.stats.timeouts += 1
+        latency = (req.finish_time or time.monotonic()) - req.submit_time
+        self._h_latency.observe(latency)
+        n = len(req.tokens)
+        finished.append(ServedTrajectory(
+            request_id=req.request_id,
+            prompt=req.prompt,
+            tokens=np.asarray(req.tokens, np.int32),
+            log_beta=np.asarray(req.log_beta, np.float32),
+            versions=np.asarray(req.versions, np.int64),
+            mask=np.ones((n,), np.float32),
+            finish_reason="timeout",
+            latency_s=latency,
+            num_preemptions=req.num_preemptions,
+        ))
+
     def _clear_slot(self, slot: Optional[int]) -> None:
         if slot is None:
             return
@@ -991,7 +1043,22 @@ class ServeEngine:
         tr = self.tracer
         self._maybe_swap()
         self.stats.steps += 1
-        lookahead = self.speculate_k or self.decode_chunk
+        if self.injector.active:
+            # Straggler injection: a matching stall sleeps here, with
+            # the deadline clock still running — exactly how a hung
+            # slot turns into a timeout retirement.
+            self.injector.stall("engine_step", at_step=self.stats.steps)
+            for req in self.scheduler.running:
+                self.injector.stall("engine_step",
+                                    at_step=self.stats.steps,
+                                    slot=int(req.slot))
+        # Deadline sweep BEFORE scheduling: expired waiting requests
+        # never get admitted, expired running ones free their slot and
+        # pages (draft pool included — it shares the block tables) for
+        # this round's admissions.
+        for req in self.scheduler.expire():
+            self._timeout_finish(req, finished)
+        lookahead = self._spec_k_active or self.decode_chunk
         with tr.span("schedule", tid="engine"):
             admitted, _ = self.scheduler.schedule(lookahead=lookahead)
         self.stats.preemptions = self.scheduler.preemptions
@@ -1039,7 +1106,7 @@ class ServeEngine:
                            lag=float(self.store.version - self.version))
         if not self._active.any():
             return finished
-        if self.speculate_k:
+        if self._spec_k_active:
             with tr.span("spec_round", tid="engine"):
                 self._spec_round(finished)
             return finished
@@ -1107,6 +1174,28 @@ class ServeEngine:
             np.rint(1.0 + self._accept_ema[act] * (k_max - 1)), 1, k_max)
         return int(np.clip(np.rint(targets.mean()), 1, k_max))
 
+    def _note_spec_round(self, accepted: int, n_active: int) -> None:
+        """Track consecutive all-reject rounds; auto-disable the draft
+        once `spec_disable_after` of them land in a row (output is
+        unaffected — the verifier's corrections always emit — but a
+        draft that never lands a token is pure overhead)."""
+        if n_active <= 0:
+            return
+        if accepted > 0:
+            self._all_reject_rounds = 0
+            return
+        self._all_reject_rounds += 1
+        if (self._all_reject_rounds >= self.spec_disable_after
+                and not self.spec_disabled):
+            self.spec_disabled = True
+            self.stats.spec_autodisables += 1
+            self.metrics.counter("spec_autodisable_total").inc()
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "spec_autodisable", tid="engine",
+                    rounds=self._all_reject_rounds,
+                    k=self.speculate_k)
+
     def _spec_round(self, finished: List[ServedTrajectory]) -> None:
         """One draft-then-verify round: k cheap draft steps, one
         multi-token verifier dispatch, accept/rollback by pos rewind."""
@@ -1161,6 +1250,7 @@ class ServeEngine:
         self.stats.drafted_tokens += k * n_active
         accepted = int(n_acc_np[self._active].sum())
         self.stats.accepted_tokens += accepted
+        self._note_spec_round(accepted, n_active)
         if tr.enabled:
             rejected = k * n_active - accepted
             if rejected:

@@ -95,6 +95,9 @@ class Request:
     num_matched: int = 0
     num_shared_full: int = 0
     cow_src: Optional[Tuple[int, int]] = None   # (page, rows)
+    # Per-request wall-clock budget (seconds from submit_time); None
+    # defers to the scheduler-wide default.  Enforced by expire().
+    deadline_s: Optional[float] = None
 
     @property
     def prompt_len(self) -> int:
@@ -119,6 +122,9 @@ class ContinuousBatchingScheduler:
         prefix_fn: Optional[Callable[[Request], PrefixKey]] = None,
         reclaim_window: Optional[int] = None,
         tracer: Tracer = NULL_TRACER,
+        request_deadline_s: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+        registry: Optional[object] = None,
     ) -> None:
         self.allocator = allocator
         self.tracer = tracer
@@ -139,6 +145,13 @@ class ContinuousBatchingScheduler:
         self.prefix_hits = 0
         self.prefix_matched_tokens = 0
         self.reclaimed_pages = 0
+        # Per-request deadlines: default budget, injectable clock (tests
+        # drive expiry deterministically), timeout bookkeeping.
+        self.request_deadline_s = request_deadline_s
+        self._clock = clock
+        self.registry = registry
+        self.timeouts = 0
+        self.timeouts_by_state: dict = {}
 
     # -- introspection -------------------------------------------------------
 
@@ -198,7 +211,15 @@ class ContinuousBatchingScheduler:
         references — pages other live block tables point at stay put,
         and registered pages park on the evictable LRU for future
         matches instead of returning to the free list outright.
+
+        Idempotent: retiring an already-FINISHED request is a no-op, so
+        a deadline expiry racing the engine's own finish path (or a
+        preemption list naming a request a timeout just killed) can
+        never double-release pages or double-decrement prefix-cache
+        refcounts.
         """
+        if req.state is RequestState.FINISHED:
+            return
         was_running = req.state is RequestState.RUNNING
         req.state = RequestState.FINISHED
         req.finish_reason = reason
@@ -211,6 +232,7 @@ class ContinuousBatchingScheduler:
                 tr.async_end("waiting", req.request_id)
             tr.instant("retire", tid="scheduler", rid=req.request_id,
                        reason=reason, tokens=len(req.tokens),
+                       state="running" if was_running else "waiting",
                        preemptions=req.num_preemptions)
         self._release_all(req)
         if req.slot is not None:
@@ -218,8 +240,49 @@ class ContinuousBatchingScheduler:
             req.slot = None
         if req in self._admission_order:
             self._admission_order.remove(req)
+        if req in self.waiting:
+            self.waiting.remove(req)
+
+    def expire(self, now: Optional[float] = None) -> List[Request]:
+        """Retire every request past its deadline; returns them.
+
+        A request's budget is ``deadline_s`` (or the scheduler default)
+        seconds of wall clock from ``submit_time`` — preemptions do not
+        reset it (the user has been waiting the whole time).  Expired
+        RUNNING requests release their slot + pages/refcounts through
+        the one :meth:`retire` path; expired WAITING requests leave the
+        queue before they can be admitted.  The engine turns each into
+        a (possibly empty) ``finish_reason="timeout"`` trajectory.
+        """
+        candidates = [
+            r for r in list(self.waiting) + self.running
+            if (r.deadline_s if r.deadline_s is not None
+                else self.request_deadline_s) is not None
+        ]
+        if not candidates:
+            return []
+        if now is None:
+            now = self._clock()
+        expired: List[Request] = []
+        for req in candidates:
+            budget = (req.deadline_s if req.deadline_s is not None
+                      else self.request_deadline_s)
+            if now - req.submit_time <= budget:
+                continue
+            state = req.state.value
+            self.retire(req, "timeout")
+            self.timeouts += 1
+            self.timeouts_by_state[state] = (
+                self.timeouts_by_state.get(state, 0) + 1)
+            if self.registry is not None:
+                self.registry.counter(
+                    "request_timeout_total", state=state).inc()
+            expired.append(req)
+        return expired
 
     def _preempt(self, victim: Request) -> None:
+        if victim.state is RequestState.FINISHED:
+            return    # lost the race against a timeout retirement
         self.preemptions += 1
         victim.num_preemptions += 1
         tr = self.tracer

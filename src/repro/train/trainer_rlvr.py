@@ -38,12 +38,23 @@ from repro.metrics.runtime_metrics import collect_runtime_stats
 from repro.models.registry import ModelBundle
 from repro.obs.registry import MetricsRegistry
 from repro.obs.tracer import NULL_TRACER, Tracer
+from repro.checkpoint import (
+    latest_checkpoint,
+    load_checkpoint,
+    save_checkpoint,
+)
 from repro.optim import (
     AdamWConfig,
     AdamWState,
     adamw_init,
     adamw_update,
     clip_by_global_norm,
+)
+from repro.resilience import (
+    BackoffPolicy,
+    FaultInjector,
+    NULL_INJECTOR,
+    tree_all_finite,
 )
 from repro.rollout.async_engine import ForwardLagGenerator, RLVRMinibatch
 from repro.rollout.sampler import score_tokens
@@ -102,6 +113,25 @@ class RLVRHyperparams:
     engine_swap_interval: int = 1
     engine_prefix_cache: bool = False
     engine_speculate_k: int = 0
+    # --- resilience (see repro.resilience) ---
+    # Fault plan spec: ";"-joined "kind:key=val,..." chunks, e.g.
+    # "producer_crash:at_step=40;nan_publish:at_publish=7".  Empty =
+    # no injection (NULL_INJECTOR, zero overhead on every hook).
+    fault_plan: str = ""
+    fault_seed: int = 0
+    # Watchdog: >0 supervises threaded producers with bounded-retry
+    # restarts under seeded exponential backoff; 0 = crash-fast (the
+    # pre-supervision behavior, and what phase-locked runs use).
+    watchdog_restarts: int = 0
+    watchdog_backoff_ms: float = 50.0
+    # Serve producer: per-request wall-clock budget; timed-out requests
+    # retire with finish_reason="timeout" and release their pages.
+    request_deadline_s: Optional[float] = None
+    # Quarantine non-finite publishes and skip+restore non-finite
+    # learner steps (restores the last finite state, or the newest
+    # checkpoint under `guard_checkpoint_dir` when set).
+    finiteness_guard: bool = True
+    guard_checkpoint_dir: Optional[str] = None
 
 
 class RLVRTrainState(NamedTuple):
@@ -272,8 +302,26 @@ class RLVRTrainer:
         self._warmup = make_warmup_step(bundle, hp)
 
         # --- runtime assembly ------------------------------------------------
+        # Resilience: one shared injector threads through every fault
+        # site (producer, publish, queue, engine, learner); the
+        # supervisor policy restarts crashed producer threads with
+        # seeded backoff.  Both are inert by default.
+        self.injector = (
+            FaultInjector(hp.fault_plan, seed=hp.fault_seed,
+                          registry=self.metrics, tracer=self.tracer)
+            if hp.fault_plan else NULL_INJECTOR)
+        self.supervisor = (
+            BackoffPolicy(base_ms=hp.watchdog_backoff_ms,
+                          max_restarts=hp.watchdog_restarts, seed=seed)
+            if hp.watchdog_restarts > 0 else None)
+        self._last_good: Optional[RLVRTrainState] = None
+        self._learner_steps = 0
+        self.nonfinite_skipped = 0
         self.store = PolicyStore(params, capacity=hp.store_capacity,
-                                 tracer=self.tracer)
+                                 tracer=self.tracer,
+                                 injector=self.injector,
+                                 guard_finite=hp.finiteness_guard,
+                                 registry=self.metrics)
         # Controller: a spec string wins; the legacy admission triple is
         # mapped through the deprecation shim (no warning here — the
         # launcher warns on actual legacy *flag* use).
@@ -293,6 +341,9 @@ class RLVRTrainer:
             maxsize=hp.queue_maxsize if hp.runtime == "threaded" else 0,
             admission=self.controller,
             tracer=self.tracer,
+            registry=self.metrics,
+            injector=self.injector,
+            fallback_max_lag=hp.max_lag,
         )
         if self.controller.needs_log_pi:
             prompt_len = dataset.prompt_len
@@ -325,6 +376,8 @@ class RLVRTrainer:
                 speculate_k=hp.engine_speculate_k,
                 tracer=self.tracer,
                 metrics=self.metrics,
+                injector=self.injector,
+                request_deadline_s=hp.request_deadline_s,
             )
             self.regime = ServeRolloutProducer(
                 self.store, self.queue, self.engine, dataset,
@@ -333,6 +386,8 @@ class RLVRTrainer:
                 max_new_tokens=hp.max_new_tokens,
                 version_offset=hp.forced_lag,
                 threaded=(hp.runtime == "threaded"),
+                injector=self.injector,
+                supervisor=self.supervisor,
             )
         elif hp.producer == "legacy":
             self.regime = make_regime(
@@ -340,6 +395,8 @@ class RLVRTrainer:
                 self.generator.generate_minibatch,
                 forward_n=hp.n_minibatches,
                 max_items=None,
+                injector=self.injector,
+                supervisor=self.supervisor,
             )
         else:
             raise ValueError(
@@ -412,6 +469,47 @@ class RLVRTrainer:
         """Stop the producer (threaded regime) and close the queue."""
         self.regime.stop()
 
+    # -- finiteness guard ----------------------------------------------------
+
+    def _step_finite(self, aux: Dict[str, Any]) -> bool:
+        """True when this step's loss and the post-update params are
+        all finite (aux values are already on host)."""
+        loss = aux.get("loss")
+        if loss is not None and not np.all(np.isfinite(np.asarray(loss))):
+            return False
+        return tree_all_finite(self.state.params)
+
+    def _restore_last_good(self) -> str:
+        """Roll the train state back to the newest known-finite point;
+        returns where it came from ("checkpoint" | "memory" | "none")."""
+        hp = self.hp
+        if hp.guard_checkpoint_dir:
+            path = latest_checkpoint(hp.guard_checkpoint_dir)
+            if path is not None:
+                like = {"params": self.state.params,
+                        "opt_state": self.state.opt_state}
+                tree, _, _ = load_checkpoint(path, like)
+                self.state = RLVRTrainState(
+                    params=tree["params"],
+                    opt_state=tree["opt_state"],
+                    updates=self.state.updates)
+                return "checkpoint"
+        if self._last_good is not None:
+            self.state = self._last_good
+            return "memory"
+        return "none"
+
+    def _skip_nonfinite(self, item: Any) -> None:
+        self.nonfinite_skipped += 1
+        restored = self._restore_last_good()
+        self.metrics.counter(
+            "learner_nonfinite_total", restored=restored).inc()
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "learner_nonfinite", pid="train", tid="learner",
+                lag=item.lag, restored=restored,
+                step=self._learner_steps)
+
     def train_phase(self) -> List[RLVRPhaseLog]:
         """One train phase: consume N queue items, publish after each.
 
@@ -424,14 +522,18 @@ class RLVRTrainer:
         if not self._regime_started:
             self.regime.start()
             self._regime_started = True
+        if hp.finiteness_guard and self._last_good is None:
+            self._last_good = self.state
         logs: List[RLVRPhaseLog] = []
         ctrl = self.controller
+        self._phase_consumed = 0
         for _ in range(hp.n_minibatches):
             item = self.regime.next_item(
                 self.store.version, timeout=hp.get_timeout,
                 max_refills=hp.max_refills)
             if item is None:
                 break  # producer stopped / everything dropped
+            self._phase_consumed += 1
             mb: RLVRMinibatch = item.payload
             adv = group_advantages(
                 mb.rewards, hp.completions_per_prompt)
@@ -471,6 +573,28 @@ class RLVRTrainer:
                         mb.gen.mask, adv_in)
                     aux = {k: jax.device_get(v) for k, v in aux.items()}
             self._h_step.observe(time.monotonic() - t0)
+            self._learner_steps += 1
+            if self.injector.active:
+                poisoned_params, poisoned = self.injector.poison(
+                    "learner_step", self.state.params,
+                    at_step=self._learner_steps)
+                if poisoned:
+                    self.state = self.state._replace(
+                        params=poisoned_params)
+            if hp.finiteness_guard and not self._step_finite(aux):
+                # Divergence firewall: drop this update, restore the
+                # last finite state, and keep training — the bad step
+                # is never published, so generation can't see it.
+                self._skip_nonfinite(item)
+                continue
+            self._last_good = self.state
+            if hp.guard_checkpoint_dir:
+                save_checkpoint(
+                    hp.guard_checkpoint_dir,
+                    int(jax.device_get(self.state.updates)),
+                    {"params": self.state.params,
+                     "opt_state": self.state.opt_state},
+                    meta={"source": "finiteness_guard"})
             ctrl.on_learner_step(item, aux)
             self.store.publish(self.state.params)
             frac = aux.get("frac_filtered", aux.get("clip_frac", 0.0))
@@ -498,8 +622,12 @@ class RLVRTrainer:
                     break  # end of stream: no point re-evaluating
                 if (i + 1) % eval_every == 0 or i == phases - 1:
                     accs.append(self.evaluate())
-                if len(phase_logs) < self.hp.n_minibatches:
-                    break  # starved mid-phase (producer done / all-drop)
+                if self._phase_consumed < self.hp.n_minibatches:
+                    # Starved mid-phase (producer done / all-drop).
+                    # Keyed off items *consumed*, not updates logged: a
+                    # finiteness-guard skip shortens the logs but is not
+                    # starvation — training must keep going.
+                    break
         finally:
             if not self.regime.phase_locked:
                 self.close()

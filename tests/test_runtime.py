@@ -447,3 +447,33 @@ def test_rlvr_forward_n_matches_legacy_bit_for_bit():
     for a, b in zip(jax.tree.leaves(state.params),
                     jax.tree.leaves(tr.state.params)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --- supervised production (no-fault transparency) --------------------------
+
+
+def test_threaded_regime_supervision_transparent_without_faults():
+    """A supervisor on a healthy producer must be invisible: no restarts,
+    no restart provenance, identical put/consume accounting."""
+    from repro.resilience import BackoffPolicy
+
+    store = PolicyStore(_params(0.0), capacity=2)
+    queue = TrajectoryQueue(maxsize=2)
+    regime = make_regime(
+        "threaded", store, queue,
+        lambda params: float(params["w"][0]), max_items=5,
+        supervisor=BackoffPolicy(base_ms=1, max_restarts=3, seed=0))
+    regime.start()
+    try:
+        consumed = []
+        while (item := queue.get(learner_version=store.version,
+                                 timeout=30.0)) is not None:
+            consumed.append(item)
+        assert len(consumed) == 5
+        assert all("restart" not in i.meta for i in consumed)
+        assert queue.stats().puts == 5
+    finally:
+        regime.stop()
+    assert regime.restarts == 0 and regime.error is None
+    assert queue.registry.counter_values("watchdog_restart_total") == {}
+    assert queue.registry.counter_values("restart_admitted_total") == {}
