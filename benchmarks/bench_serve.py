@@ -450,16 +450,40 @@ def run_burst(
     arch: str = "qwen2.5-0.5b",
     seed: int = 0,
     repeats: int = 3,
+    long_prompt_len: int = 192,
+    long_burst: int = 16,
+    long_budget: int = 16,
+    flight: int = 2,
+    flight_budget: int = 64,
+    prefill_chunk: int = 32,
+    dispatch_budget: int = 520,
 ) -> Dict:
-    """Batched-prefill micro-bench: a burst of same-length admissions.
+    """Prefill-burst micro-benches: admission latency + decode stalls.
 
-    All ``burst`` requests arrive at once with identical (padded) prompt
+    **Legacy lane** (both arms pin ``chunked_prefill=False``): all
+    ``burst`` requests arrive at once with identical (padded) prompt
     length — the regime where per-request prefill dispatches hurt most.
     Reported per mode (batched vs per-request prefill): **admission
     latency** p50/p99 (submit -> first emitted token, queueing included
     — the engine registry's TTFT histogram, read windowed) and prefill
     dispatch counts.  ``admission_speedup`` (unbatched p50 /
     batched p50) is machine-normalized: both sides ran on this host.
+
+    **Long-prompt lane** (``out["long"]``): ``flight`` short-prompt
+    requests reach steady decode, then ``long_burst`` long-prompt
+    requests arrive at once.  Measured per arm — chunked ragged prefill
+    (the default engine) vs the deprecated monolithic path
+    (``chunked_prefill=False``) — is the **p99 inter-token gap of the
+    already-in-flight requests** from the burst's submission until they
+    finish: under monolithic prefill every long prompt blocks the
+    decode loop for a full-prompt dispatch, while chunked prefill tiles
+    it under ``dispatch_budget`` tokens per round with decode rows
+    riding along.  Gaps are host-measured per engine round (wall time
+    between successive rounds in which the request emitted), identically
+    on both arms.  ``inflight_p99_improvement`` (monolithic p99 /
+    chunked p99) and ``tokens_per_s_ratio`` (chunked / monolithic burst
+    throughput — the "no win by throttling" guard) are medians of
+    paired per-repeat ratios, machine-normalized by construction.
     """
     import jax
 
@@ -482,6 +506,14 @@ def run_burst(
     # Full fixed-length rows: identical padded length by construction.
     rows = [np.asarray(r, np.int32) for r in toks_np]
     max_seq_len = prompt_len + budget + block_size
+
+    def _legacy(**kw):
+        # Both legacy arms exercise the deprecated monolithic-prefill
+        # path on purpose; silence its DeprecationWarning here.
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return ServeEngine(chunked_prefill=False, **kw)
 
     def _run(engine) -> Dict:
         before = dict(engine.stats.__dict__)
@@ -513,11 +545,11 @@ def run_burst(
         },
     }
     for label, batched in (("batched", True), ("unbatched", False)):
-        engine = ServeEngine(
-            bundle, params, num_blocks=num_blocks, block_size=block_size,
-            max_batch=max_batch, max_seq_len=max_seq_len,
-            decode_chunk=decode_chunk, temperature=1e-4, seed=seed + 2,
-            batch_prefill=batched)
+        engine = _legacy(
+            bundle=bundle, params=params, num_blocks=num_blocks,
+            block_size=block_size, max_batch=max_batch,
+            max_seq_len=max_seq_len, decode_chunk=decode_chunk,
+            temperature=1e-4, seed=seed + 2, batch_prefill=batched)
         _run(engine)                        # compile/warm
         runs = [_run(engine) for _ in range(max(repeats, 1))]
         out[label] = min(runs, key=lambda r: r["admission_p50_ms"])
@@ -526,6 +558,112 @@ def run_burst(
         / out["batched"]["admission_p50_ms"]
         if out["batched"]["admission_p50_ms"] else 0.0
     )
+
+    # ---- long-prompt lane: in-flight inter-token p99 during the burst
+    ds_long = MathTaskDataset(
+        prompt_len=long_prompt_len, level=0, seed=seed + 3)
+    long_np, _, _ = ds_long.sample_batch(long_burst)
+    long_rows = [np.asarray(r, np.int32) for r in long_np]
+    flight_rows = [np.asarray(r, np.int32) for r in rows[:flight]]
+    long_seq_len = long_prompt_len + long_budget + block_size
+    # Slots for every flight + every long request at once: the stall
+    # contrast is sharpest when the whole burst is resident (monolithic
+    # prefills it as one giant dispatch; chunked tiles all of it under
+    # the budget with the flight rows riding along every round).
+    long_max_batch = flight + long_burst
+    pages_per = -(-long_seq_len // block_size)
+    long_blocks = max(num_blocks, 2 * long_max_batch * pages_per)
+
+    def _mk_long(chunked: bool):
+        # decode_chunk pinned to 1 on BOTH arms: the lane isolates the
+        # prefill *scheduling* policy at fixed decode granularity.  A
+        # multi-token decode chunk would let the monolithic arm bank 4
+        # tokens per round between its prefill stalls — hiding exactly
+        # the stall the lane exists to measure — while the chunked arm
+        # is 1-token-per-round during tiling by construction.
+        kw = dict(
+            bundle=bundle, params=params, num_blocks=long_blocks,
+            block_size=block_size, max_batch=long_max_batch,
+            max_seq_len=long_seq_len, decode_chunk=1,
+            temperature=1e-4, seed=seed + 4)
+        if chunked:
+            return ServeEngine(prefill_chunk=prefill_chunk,
+                               dispatch_budget=dispatch_budget, **kw)
+        return _legacy(**kw)
+
+    def _run_long(engine) -> Dict:
+        in_flight = [engine.submit(p, flight_budget)
+                     for p in flight_rows]
+        # Let the in-flight requests finish prefill and settle into
+        # steady decode before the burst lands.
+        for _ in range(4):
+            engine.step()
+        tokens0 = engine.stats.tokens_out
+        now = time.perf_counter()
+        t0 = now
+        last_emit = {r.request_id: now for r in in_flight}
+        counts = {r.request_id: len(r.tokens) for r in in_flight}
+        gaps: List[float] = []
+        for p in long_rows:
+            engine.submit(p, long_budget)
+        while engine.has_work:
+            engine.step()
+            now = time.perf_counter()
+            for r in in_flight:
+                n = len(r.tokens)
+                if n > counts[r.request_id]:
+                    # The client-visible stall: wall time since this
+                    # request last produced anything, regardless of how
+                    # many tokens the round then delivered at once.
+                    gaps.append(now - last_emit[r.request_id])
+                    counts[r.request_id] = n
+                    last_emit[r.request_id] = now
+        wall = time.perf_counter() - t0
+        tokens = engine.stats.tokens_out - tokens0
+        return {
+            "wall_s": wall,
+            "tokens": int(tokens),
+            "tokens_per_s": tokens / wall if wall > 0 else 0.0,
+            "inflight_gaps": len(gaps),
+            "inflight_p50_ms": float(np.percentile(gaps, 50)) * 1e3,
+            "inflight_p99_ms": float(np.percentile(gaps, 99)) * 1e3,
+        }
+
+    chunked_eng = _mk_long(True)
+    mono_eng = _mk_long(False)
+    _run_long(chunked_eng), _run_long(mono_eng)     # compile/warm
+    # Arms alternate within each repeat.  The p99 improvement is the
+    # MEDIAN of per-pair ratios (host drift lands on both arms of a
+    # pair); the throughput ratio instead compares each arm's BEST
+    # (least-perturbed) wall time — the workload is identical on both
+    # arms, so best-of-N wall is the standard noise floor and a single
+    # slow repeat can't fake a throughput regression.
+    long_pairs = [(_run_long(mono_eng), _run_long(chunked_eng))
+                  for _ in range(max(repeats, 5))]
+    p99_ratios = [m["inflight_p99_ms"] / c["inflight_p99_ms"]
+                  for m, c in long_pairs if c["inflight_p99_ms"] > 0]
+    best_mono = min(m["wall_s"] for m, _ in long_pairs)
+    best_chunked = min(c["wall_s"] for _, c in long_pairs)
+    out["long"] = {
+        "config": {
+            "long_prompt_len": long_prompt_len, "long_burst": long_burst,
+            "long_budget": long_budget, "flight": flight,
+            "flight_budget": flight_budget,
+            "prefill_chunk": prefill_chunk,
+            "dispatch_budget": dispatch_budget,
+            "max_batch": long_max_batch,
+            "decode_chunk": 1,
+            "num_blocks": long_blocks,
+        },
+        "monolithic": min((m for m, _ in long_pairs),
+                          key=lambda r: r["inflight_p99_ms"]),
+        "chunked": min((c for _, c in long_pairs),
+                       key=lambda r: r["inflight_p99_ms"]),
+        "inflight_p99_improvement": float(np.median(p99_ratios))
+        if p99_ratios else 0.0,
+        "tokens_per_s_ratio": (best_mono / best_chunked
+                               if best_chunked > 0 else 0.0),
+    }
     return out
 
 
@@ -968,6 +1106,12 @@ def main() -> None:
               f"{burst['unbatched']['admission_p50_ms']:.1f} ms "
               f"per-request ({burst['unbatched']['prefill_dispatches']}) "
               f"-> {burst['admission_speedup']:.2f}x")
+        lane = burst["long"]
+        print(f"{'burst/long':13s} in-flight inter-token p99 "
+              f"{lane['chunked']['inflight_p99_ms']:.1f} ms chunked vs "
+              f"{lane['monolithic']['inflight_p99_ms']:.1f} ms monolithic"
+              f" -> {lane['inflight_p99_improvement']:.2f}x better "
+              f"(tokens/s ratio {lane['tokens_per_s_ratio']:.2f})")
     if args.out:
         write_json(res, args.out)
         print(f"wrote {args.out}")

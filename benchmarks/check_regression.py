@@ -81,9 +81,24 @@ SERVE_METRICS = (
     Metric("speculative.acceptance_rate", True, True),
     Metric("speculative.tokens_per_s", True, False),
     # Batched prefill: admission-latency win of stacking same-length
-    # admissions into one dispatch (both sides measured on this host).
+    # admissions into one dispatch (both sides measured on this host —
+    # both arms run the deprecated monolithic path on purpose).
     Metric("burst.admission_speedup", True, True),
     Metric("burst.batched.admission_p50_ms", False, False),
+    # Chunked ragged prefill (PR-10 acceptance bars).  The long-prompt
+    # burst lane measures the p99 inter-token gap of already-decoding
+    # requests while long prompts prefill: chunked tiling under the
+    # dispatch budget must cut that tail >= 2x vs the monolithic path
+    # (median of paired same-host ratios, machine-normalized — the
+    # hard floor is the acceptance bar, the relative band catches
+    # drift from the committed baseline).  tokens_per_s_ratio is the
+    # "no win by throttling" guard: chunked may not buy its latency
+    # tail by giving up more than 15% of burst throughput (being
+    # faster is fine, so a floor, not a band).
+    Metric("burst.long.inflight_p99_improvement", True, True,
+           hard_min=2.0),
+    Metric("burst.long.tokens_per_s_ratio", True, True, hard_min=0.85,
+           cap_only=True),
     # Prefix caching (PR-6 acceptance bar): at best-of N=4, computed
     # prefill KV rows (prefix-cached vs dense) must drop >= 2x — the
     # ratio counts token rows, not wall time, so it is deterministic

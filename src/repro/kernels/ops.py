@@ -17,7 +17,8 @@ request's pages live on exactly ONE shard (placement is host-side, in
 ``repro.serve``).  The sharded dispatchers wrap the same kernel bodies
 in ``shard_map``:
 
-* ``paged_attention`` / ``paged_attention_multi`` — block tables carry
+* ``paged_attention`` / ``paged_attention_multi`` /
+  ``paged_attention_varlen`` — block tables carry
   *shard-local* page ids; each device runs the kernel over its local
   pool with non-local slots masked to ``context_len 0`` (both the
   Pallas kernel and the oracle produce exact zeros there), then a
@@ -50,6 +51,8 @@ from repro.kernels.paged_attention_pallas import paged_attention as \
     paged_attention_pallas
 from repro.kernels.paged_attention_pallas import paged_attention_multi as \
     paged_attention_multi_pallas
+from repro.kernels.paged_attention_pallas import paged_attention_varlen as \
+    paged_attention_varlen_pallas
 from repro.kernels.paged_kv_write_pallas import paged_kv_write as \
     paged_kv_write_pallas
 from repro.kernels.ssm_scan_pallas import ssm_scan_pallas
@@ -194,6 +197,52 @@ def paged_attention_multi(
         in_specs=(P(), pool, pool, P(), P(), P()),
         out_specs=P(), check_rep=False,
     )(q, k_pages, v_pages, block_tables, context_lens,
+      slot_shard.astype(jnp.int32))
+
+
+def _paged_attention_varlen_local(
+    q, k_pages, v_pages, block_tables, row_start, row_len, *, window, mode,
+):
+    kw = _pallas_kwargs(mode)
+    if kw is None:
+        return ref_mod.ref_paged_attention_varlen(
+            q, k_pages, v_pages, block_tables, row_start, row_len,
+            window=window)
+    return paged_attention_varlen_pallas(
+        q, k_pages, v_pages, block_tables, row_start, row_len,
+        window=window, **kw)
+
+
+def paged_attention_varlen(
+    q, k_pages, v_pages, block_tables, row_start, row_len,
+    *, window: Optional[int] = None, mode: Optional[str] = None,
+    mesh=None, slot_shard=None, axis_name: str = "data",
+):
+    """Ragged multi-token attention over the paged pool ([B, T, H, D]):
+    query ``t < row_len[b]`` sits at absolute position ``row_start[b] +
+    t`` and attends causally; padding rows and ``row_len == 0`` slots
+    come back exactly zero.  Decode, speculative verify and chunked
+    prefill tiles are call shapes of this one kernel.  Mesh semantics
+    match :func:`paged_attention` — foreign slots are masked to
+    ``row_len 0`` (exact zero) and a ``psum`` recombines the batch."""
+    if not _sharded(mesh, axis_name):
+        return _paged_attention_varlen_local(
+            q, k_pages, v_pages, block_tables, row_start, row_len,
+            window=window, mode=mode)
+
+    def body(q, kp, vp, tbl, rs, rl, ss):
+        idx = jax.lax.axis_index(axis_name)
+        local_len = jnp.where(ss == idx, rl, 0).astype(jnp.int32)
+        out = _paged_attention_varlen_local(
+            q, kp, vp, tbl, rs, local_len, window=window, mode=mode)
+        return jax.lax.psum(out, axis_name)
+
+    pool = P(None, axis_name, None, None)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), pool, pool, P(), P(), P(), P()),
+        out_specs=P(), check_rep=False,
+    )(q, k_pages, v_pages, block_tables, row_start, row_len,
       slot_shard.astype(jnp.int32))
 
 

@@ -28,18 +28,24 @@ Two entry points share the machinery:
 
 * :func:`paged_attention` — one query token per request (the plain
   decode step).
-* :func:`paged_attention_multi` — ``T`` *consecutive* query tokens per
-  request in one dispatch (the speculative-decode verifier): query
-  ``t`` sits at absolute position ``context_lens[b] - T + t`` and
-  attends causally over exactly its own prefix, so all ``T`` drafted
-  tokens are scored against the paged pool in a single kernel launch
-  instead of ``T`` sequential ones.  The online-softmax state simply
-  grows a ``T`` row axis; the page loop, scalar-prefetch gather and
-  window logic are identical.
+* :func:`paged_attention_varlen` — up to ``Tmax`` consecutive query
+  tokens per request with a *per-slot* ``(row_start, row_len)`` table
+  riding in as scalar prefetch: query ``t < row_len[b]`` of request
+  ``b`` sits at absolute position ``row_start[b] + t`` and attends
+  causally over exactly its own prefix; rows ``t >= row_len[b]`` are
+  padding and come back exactly zero.  Decode (``row_len == 1``),
+  speculative verify (``row_len == k``) and chunked prefill tiles
+  (ragged ``row_len`` per slot) are three call shapes of this one
+  kernel — the online-softmax state grows a ``Tmax`` row axis and the
+  page loop, scalar-prefetch gather and window logic are unchanged.
+* :func:`paged_attention_multi` — the fixed-``T`` shape (every active
+  slot supplies exactly ``T`` rows ending at ``context_lens[b]``);
+  kept as a thin wrapper that derives ``row_start = ctx - T`` /
+  ``row_len = T`` and calls the varlen kernel.
 
 Forward-only (decode); the pure-jnp oracles are
 ``repro.kernels.ref.ref_paged_attention`` and
-``ref.ref_paged_attention_multi``.
+``ref.ref_paged_attention_varlen``.
 """
 from __future__ import annotations
 
@@ -171,9 +177,10 @@ def paged_attention(
       q, k_pages, v_pages)
 
 
-def _paged_multi_kernel(
+def _paged_varlen_kernel(
     tables_ref,   # scalar prefetch [B, M] int32
-    lens_ref,     # scalar prefetch [B] int32 (rows live incl. the chunk)
+    start_ref,    # scalar prefetch [B] int32 (abs position of query row 0)
+    len_ref,      # scalar prefetch [B] int32 (live query rows, 0 = inactive)
     q_ref,        # [1, T, 1, D]
     k_ref,        # [1, 1, BS, D]
     v_ref,        # [1, 1, BS, D]
@@ -190,8 +197,9 @@ def _paged_multi_kernel(
 ):
     b = pl.program_id(0)
     j = pl.program_id(2)
-    ctx = lens_ref[b]
-    base = ctx - q_len            # absolute position of query 0
+    base = start_ref[b]           # absolute position of query 0
+    n = len_ref[b]                # live rows; padding rows t >= n
+    ctx = base + n                # rows live once the chunk is written
 
     @pl.when(j == 0)
     def _init():
@@ -200,7 +208,7 @@ def _paged_multi_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     k_start = j * block_size
-    live = k_start < ctx
+    live = jnp.logical_and(k_start < ctx, n > 0)
     if window is not None:
         # The *oldest* query (position `base`) has the leftmost window;
         # a page fully left of it is dead for every query in the chunk.
@@ -223,6 +231,9 @@ def _paged_multi_kernel(
         if window is not None:
             mask = jnp.logical_and(
                 mask, (qpos[:, None] - kpos[None, :]) < window)
+        # Padding rows (t >= n) get a fully-masked score row; their m
+        # saturates at NEG_INF and the accumulator fills with garbage
+        # that _finalize zeroes out.
         scores = jnp.where(mask, scores, NEG_INF)
 
         m_prev = m_ref[:, 0]                                  # [T]
@@ -239,7 +250,75 @@ def _paged_multi_kernel(
     @pl.when(j == num_blocks_max - 1)
     def _finalize():
         denom = jnp.maximum(l_ref[:, 0], 1e-30)
-        o_ref[0, :, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        row_live = jax.lax.iota(jnp.int32, q_len) < n         # [T]
+        out = jnp.where(
+            row_live[:, None], acc_ref[...] / denom[:, None], 0.0)
+        o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"),
+)
+def paged_attention_varlen(
+    q: jax.Array,             # [B, T, H, D] ragged query chunks, right-padded
+    k_pages: jax.Array,       # [KV, NB, BS, D]
+    v_pages: jax.Array,       # [KV, NB, BS, D]
+    block_tables: jax.Array,  # [B, M] int32 page ids (pads must be in-range)
+    row_start: jax.Array,     # [B] int32 abs position of query row 0
+    row_len: jax.Array,       # [B] int32 live rows per slot (0 = inactive)
+    *,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ragged multi-token attention over a paged KV pool.
+
+    Query ``t < row_len[b]`` of request ``b`` sits at absolute position
+    ``row_start[b] + t`` and attends causally over positions ``<=`` its
+    own; rows ``t >= row_len[b]`` are padding and yield exactly zero, as
+    does a slot with ``row_len[b] == 0``.  Decode (``row_len == 1``),
+    speculative verify (``row_len == k``) and chunked prefill tiles are
+    all this one kernel called with different ``(row_start, row_len)``
+    tables."""
+    b, t, h, d = q.shape
+    kv, _, block_size, _ = k_pages.shape
+    m = block_tables.shape[1]
+    assert h % kv == 0, (h, kv)
+    group = h // kv
+    scale = d ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, h, m),
+        in_specs=[
+            pl.BlockSpec(
+                (1, t, 1, d), lambda b_, h_, j, tbl, rs, rl: (b_, 0, h_, 0)),
+            pl.BlockSpec(
+                (1, 1, block_size, d),
+                lambda b_, h_, j, tbl, rs, rl: (h_ // group, tbl[b_, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_size, d),
+                lambda b_, h_, j, tbl, rs, rl: (h_ // group, tbl[b_, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, t, 1, d), lambda b_, h_, j, tbl, rs, rl: (b_, 0, h_, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, 1), jnp.float32),
+            pltpu.VMEM((t, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_varlen_kernel, block_size=block_size, num_blocks_max=m,
+            q_len=t, window=window, scale=scale,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), row_start.astype(jnp.int32),
+      row_len.astype(jnp.int32), q, k_pages, v_pages)
 
 
 @functools.partial(
@@ -255,47 +334,15 @@ def paged_attention_multi(
     window: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """Multi-token decode attention: query ``t`` of request ``b`` sits at
-    absolute position ``context_lens[b] - T + t`` and attends causally
-    over positions ``<=`` its own.  A slot with ``context_lens[b] == 0``
-    is inactive and yields exactly zero."""
-    b, t, h, d = q.shape
-    kv, _, block_size, _ = k_pages.shape
-    m = block_tables.shape[1]
-    assert h % kv == 0, (h, kv)
-    group = h // kv
-    scale = d ** -0.5
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b, h, m),
-        in_specs=[
-            pl.BlockSpec(
-                (1, t, 1, d), lambda b_, h_, j, tbl, cl: (b_, 0, h_, 0)),
-            pl.BlockSpec(
-                (1, 1, block_size, d),
-                lambda b_, h_, j, tbl, cl: (h_ // group, tbl[b_, j], 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, 1, block_size, d),
-                lambda b_, h_, j, tbl, cl: (h_ // group, tbl[b_, j], 0, 0),
-            ),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, t, 1, d), lambda b_, h_, j, tbl, cl: (b_, 0, h_, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((t, 1), jnp.float32),
-            pltpu.VMEM((t, 1), jnp.float32),
-            pltpu.VMEM((t, d), jnp.float32),
-        ],
-    )
-    return pl.pallas_call(
-        functools.partial(
-            _paged_multi_kernel, block_size=block_size, num_blocks_max=m,
-            q_len=t, window=window, scale=scale,
-        ),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, t, h, d), q.dtype),
-        interpret=interpret,
-    )(block_tables.astype(jnp.int32), context_lens.astype(jnp.int32),
-      q, k_pages, v_pages)
+    """Fixed-``T`` shape of :func:`paged_attention_varlen`: query ``t``
+    of request ``b`` sits at absolute position ``context_lens[b] - T +
+    t`` and attends causally over positions ``<=`` its own.  A slot with
+    ``context_lens[b] == 0`` is inactive and yields exactly zero."""
+    t = q.shape[1]
+    context_lens = context_lens.astype(jnp.int32)
+    active = context_lens > 0
+    row_start = jnp.where(active, context_lens - t, 0)
+    row_len = jnp.where(active, t, 0)
+    return paged_attention_varlen(
+        q, k_pages, v_pages, block_tables, row_start, row_len,
+        window=window, interpret=interpret)

@@ -121,6 +121,52 @@ def ref_paged_attention(
     return out.reshape(b, h, d)
 
 
+def ref_paged_attention_varlen(
+    q: jax.Array,             # [B, T, H, D] ragged query chunks, right-padded
+    k_pages: jax.Array,       # [KV, NB, BS, D] pooled key blocks
+    v_pages: jax.Array,       # [KV, NB, BS, D] pooled value blocks
+    block_tables: jax.Array,  # [B, M] int32 page ids
+    row_start: jax.Array,     # [B] int32 abs position of query row 0
+    row_len: jax.Array,       # [B] int32 live rows per slot (0 = inactive)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Ragged multi-token paged attention ground truth.
+
+    Query ``t < row_len[b]`` of request ``b`` sits at absolute position
+    ``row_start[b] + t`` and attends causally over positions ``<=`` its
+    own (its K/V row — and those of the earlier rows in the chunk — are
+    expected to already be written).  Padding rows ``t >= row_len[b]``
+    and fully inactive slots (``row_len[b] == 0``) yield exactly zero.
+    Decode, speculative verify and chunked prefill tiles are all this
+    one shape with different ``(row_start, row_len)`` tables.
+    """
+    kv, _, bs, d = k_pages.shape
+    b, t, h, _ = q.shape
+    g = h // kv
+    scale = d ** -0.5
+    row_start = row_start.astype(jnp.int32)
+    row_len = row_len.astype(jnp.int32)
+    keys = k_pages[:, block_tables].reshape(kv, b, -1, d)
+    vals = v_pages[:, block_tables].reshape(kv, b, -1, d)
+    qg = q.reshape(b, t, kv, g, d)
+    scores = jnp.einsum("btkgd,kbsd->bkgts", qg * scale, keys,
+                        preferred_element_type=jnp.float32)
+    pos = jnp.arange(keys.shape[2], dtype=jnp.int32)[None, None, :]
+    qpos = (row_start[:, None]
+            + jnp.arange(t, dtype=jnp.int32)[None, :])[:, :, None]
+    valid = pos <= qpos                                   # [B, T, S]
+    if window is not None:
+        valid = jnp.logical_and(valid, (qpos - pos) < window)
+    scores = jnp.where(valid[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,kbsd->btkgd", probs, vals)
+    row_live = (jnp.arange(t, dtype=jnp.int32)[None, :]
+                < row_len[:, None])                       # [B, T]
+    out = jnp.where(row_live[:, :, None, None, None], out, 0.0)
+    return out.reshape(b, t, h, d)
+
+
 def ref_paged_attention_multi(
     q: jax.Array,             # [B, T, H, D] consecutive query tokens
     k_pages: jax.Array,       # [KV, NB, BS, D] pooled key blocks
@@ -132,33 +178,19 @@ def ref_paged_attention_multi(
 ) -> jax.Array:
     """Multi-token (speculative-verify) paged attention ground truth.
 
-    Query ``t`` of request ``b`` sits at absolute position
-    ``context_lens[b] - T + t`` and attends causally over positions
-    ``<=`` its own (its K/V row — and those of the earlier drafted
-    tokens — are expected to already be written).  ``T = 1`` reduces
-    exactly to :func:`ref_paged_attention`.
+    The fixed-``T`` shape of :func:`ref_paged_attention_varlen`: query
+    ``t`` of request ``b`` sits at absolute position ``context_lens[b]
+    - T + t``.  ``T = 1`` reduces exactly to
+    :func:`ref_paged_attention`.
     """
-    kv, _, bs, d = k_pages.shape
-    b, t, h, _ = q.shape
-    g = h // kv
-    scale = d ** -0.5
-    keys = k_pages[:, block_tables].reshape(kv, b, -1, d)
-    vals = v_pages[:, block_tables].reshape(kv, b, -1, d)
-    qg = q.reshape(b, t, kv, g, d)
-    scores = jnp.einsum("btkgd,kbsd->bkgts", qg * scale, keys,
-                        preferred_element_type=jnp.float32)
-    pos = jnp.arange(keys.shape[2], dtype=jnp.int32)[None, None, :]
-    qpos = (context_lens[:, None] - t
-            + jnp.arange(t, dtype=jnp.int32)[None, :])[:, :, None]
-    valid = pos <= qpos                                   # [B, T, S]
-    if window is not None:
-        valid = jnp.logical_and(valid, (qpos - pos) < window)
-    scores = jnp.where(valid[:, None, None], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgts,kbsd->btkgd", probs, vals)
-    out = jnp.where(
-        context_lens[:, None, None, None, None] > 0, out, 0.0)
-    return out.reshape(b, t, h, d)
+    t = q.shape[1]
+    context_lens = context_lens.astype(jnp.int32)
+    active = context_lens > 0
+    row_start = jnp.where(active, context_lens - t, 0)
+    row_len = jnp.where(active, t, 0)
+    return ref_paged_attention_varlen(
+        q, k_pages, v_pages, block_tables, row_start, row_len,
+        window=window)
 
 
 # ---------------------------------------------------------------------------

@@ -187,6 +187,9 @@ def _serve_continuous(args, bundle, params, store, tok, ds, mesh=None,
         top_p=args.top_p, seed=args.seed + 2,
         speculate_k=args.speculate, draft=draft,
         batch_prefill=not args.no_batch_prefill,
+        chunked_prefill=not args.no_chunked_prefill,
+        prefill_chunk=args.prefill_chunk,
+        dispatch_budget=args.dispatch_budget,
         mesh=mesh, speculate_adaptive=args.speculate_adaptive,
         prefix_cache=args.prefix_cache,
         tracer=tracer, annotate=args.profiler_annotations,
@@ -317,6 +320,20 @@ def main(argv=None) -> int:
                     help="continuous: prefill admissions one dispatch "
                          "per request (default stacks same-padded-"
                          "length admissions)")
+    ap.add_argument("--no-chunked-prefill", action="store_true",
+                    help="continuous: disable chunked ragged prefill "
+                         "and fall back to the DEPRECATED batched "
+                         "prefill path (one blocking dispatch per "
+                         "padded-length group)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="continuous: rows per prefill tile in the "
+                         "unified varlen dispatch (chunked prefill)")
+    ap.add_argument("--dispatch-budget", type=int, default=32,
+                    help="continuous: max tokens per unified dispatch "
+                         "while prefills are pending — decode rows are "
+                         "reserved first, the rest goes to prefill "
+                         "tiles (bounds inter-token latency under "
+                         "long-prompt bursts)")
     ap.add_argument("--mesh", default=None,
                     help="shard the serve path over a device mesh, e.g. "
                          "'data=2': the paged pool partitions its page "

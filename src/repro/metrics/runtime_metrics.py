@@ -84,10 +84,12 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
     Engines carrying an ``obs.MetricsRegistry`` (all of them, since
     the engine creates one by default) additionally report serve-time
     latency percentiles straight from the registry's histograms —
-    TTFT (submit -> first token), inter-token gap, admission
+    TTFT (submit -> first token) plus its queue-wait vs
+    prefill-compute decomposition, inter-token gap, admission
     queue-wait, end-to-end request latency and swap-to-first-stale-
-    token — as ``{ttft,inter_token,queue_wait,request_latency,
-    swap_to_stale}_{count,mean_ms,p50_ms,p99_ms}``.  Benchmarks source
+    token — as ``{ttft,ttft_queue,ttft_prefill,inter_token,queue_wait,
+    request_latency,swap_to_stale}_{count,mean_ms,p50_ms,p99_ms}``.
+    Benchmarks source
     their timing columns from the same histograms, so benchmark
     numbers and live telemetry cannot disagree.
     """
@@ -158,8 +160,15 @@ def collect_serve_stats(engine: Any) -> Dict[str, Any]:
 
 
 # Registry histogram name -> flat-key prefix in collect_serve_stats.
+# ttft decomposes exactly into ttft_queue (submit -> the admission that
+# produced the first token) + ttft_prefill (that admission -> first
+# token): under chunked prefill the second term is what the dispatch
+# budget bounds, so the split shows whether a slow first token is
+# queueing or prompt compute.
 SERVE_LATENCY_HISTOGRAMS = (
     ("serve_ttft_s", "ttft"),
+    ("serve_ttft_queue_s", "ttft_queue"),
+    ("serve_ttft_prefill_s", "ttft_prefill"),
     ("serve_inter_token_s", "inter_token"),
     ("serve_queue_wait_s", "queue_wait"),
     ("serve_request_latency_s", "request_latency"),

@@ -39,6 +39,9 @@ class ModelBundle:
     # Multi-token verify step for speculative decode (None iff the paged
     # path is unsupported).
     decode_step_paged_multi: Optional[Callable] = None
+    # Ragged varlen step — per-slot (row_start, row_len) chunks; unifies
+    # chunked prefill, decode and verify (None iff paged unsupported).
+    decode_step_paged_varlen: Optional[Callable] = None
 
 
 def build(cfg: ModelConfig, unroll_layers: bool = False,
@@ -75,6 +78,7 @@ def _build_decoder_only(cfg: ModelConfig,
     decode_step_paged = None
     init_paged_cache = None
     decode_step_paged_multi = None
+    decode_step_paged_varlen = None
     if tf_mod.paged_arch_unsupported(cfg) is None:
         def decode_step_paged(params, token, pages, block_tables, pos,
                               active, kernel_mode=None, mesh=None,
@@ -92,6 +96,15 @@ def _build_decoder_only(cfg: ModelConfig,
                 write_cap, kernel_mode=kernel_mode, mesh=mesh,
                 slot_shard=slot_shard)
 
+        def decode_step_paged_varlen(params, tokens, pages, block_tables,
+                                     row_start, row_len, write_cap,
+                                     kernel_mode=None, mesh=None,
+                                     slot_shard=None):
+            return tf_mod.decode_step_paged_varlen(
+                params, cfg, tokens, pages, block_tables, row_start,
+                row_len, write_cap, kernel_mode=kernel_mode, mesh=mesh,
+                slot_shard=slot_shard)
+
         def init_paged_cache(num_blocks, block_size, dtype=jnp.float32):
             return tf_mod.init_paged_cache(cfg, num_blocks, block_size,
                                            dtype)
@@ -99,7 +112,8 @@ def _build_decoder_only(cfg: ModelConfig,
     return ModelBundle(cfg, init, forward, decode_step, init_cache,
                        aux_shapes, decode_step_paged=decode_step_paged,
                        init_paged_cache=init_paged_cache,
-                       decode_step_paged_multi=decode_step_paged_multi)
+                       decode_step_paged_multi=decode_step_paged_multi,
+                       decode_step_paged_varlen=decode_step_paged_varlen)
 
 
 def _build_encdec(cfg: ModelConfig,

@@ -429,6 +429,73 @@ def decode_step_paged_multi(
     return out, {"k_pages": k_pages, "v_pages": v_pages}
 
 
+def decode_step_paged_varlen(
+    params: Dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,        # [B, T] ragged token chunks, right-padded
+    pages: Dict,              # {"k_pages","v_pages"} [L, KV, NB, BS, Dh]
+    block_tables: jax.Array,  # [B, M] int32 page ids (pads in-range)
+    row_start: jax.Array,     # [B] int32 rows already cached per slot
+    row_len: jax.Array,       # [B] int32 live tokens per slot (0 = idle)
+    write_cap: jax.Array,     # [B] int32 rows this slot owns pages for
+    *,
+    kernel_mode: Optional[str] = None,
+    mesh=None,
+    slot_shard: Optional[jax.Array] = None,  # [B] int32 home shard per slot
+) -> Tuple[ModelOutput, Dict]:
+    """Score a *ragged* chunk of consecutive tokens per slot in one
+    dispatch — the varlen generalization of :func:`decode_step_paged_multi`
+    that unifies chunked prefill, decode and speculative verify.
+
+    Token ``t < row_len[b]`` of slot ``b`` sits at absolute position
+    ``row_start[b] + t``: its K/V row is written (through the slot's
+    block table, dropped past ``write_cap``) and it attends causally
+    over its own prefix via the varlen paged kernel.  Padding rows
+    (``t >= row_len[b]``) write nothing and their logits are garbage —
+    callers only read rows ``< row_len``.  ``row_len == 1`` everywhere
+    is the plain decode step; ``row_len == T`` everywhere is the
+    verifier; mixed values interleave prefill tiles with decode rows in
+    one launch.  Layer-loop hoisting, in-place page writes, per-layer
+    windows and mesh semantics are identical to the multi path.
+    """
+    from repro.kernels import ops as kops
+
+    b, t = tokens.shape
+    block_size = pages["k_pages"].shape[3]
+    x = embedding_apply(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    safe_start = jnp.maximum(row_start, 0)
+    row_len = row_len.astype(jnp.int32)
+    positions = safe_start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    page_idx = jnp.take_along_axis(
+        block_tables, positions // block_size, axis=1)       # [B, T]
+    offset = positions % block_size
+    live = jnp.arange(t, dtype=jnp.int32)[None, :] < row_len[:, None]
+    write_ok = jnp.logical_and(
+        live, positions < write_cap[:, None])                # [B, T]
+
+    k_pages, v_pages = pages["k_pages"], pages["v_pages"]
+    for layer in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[layer], params["layers"])
+        q, k_new, v_new = _paged_qkv(cfg, lp, x, positions)
+        for step in range(t):
+            k_pages, v_pages = kops.paged_kv_write(
+                k_pages, v_pages, k_new[:, step], v_new[:, step],
+                page_idx[:, step], offset[:, step], write_ok[:, step],
+                layer=layer, mode=kernel_mode,
+                mesh=mesh, slot_shard=slot_shard,
+            )
+        attn_out = kops.paged_attention_varlen(
+            q, k_pages[layer], v_pages[layer], block_tables,
+            safe_start, row_len, window=cfg.window_for_layer(layer),
+            mode=kernel_mode, mesh=mesh, slot_shard=slot_shard,
+        )
+        x = _paged_layer_tail(cfg, lp, x, attn_out)
+
+    out = _paged_head_full(params, cfg, x)
+    return out, {"k_pages": k_pages, "v_pages": v_pages}
+
+
 def decode_step_paged_carried(
     params: Dict,
     cfg: ModelConfig,

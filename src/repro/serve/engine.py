@@ -45,10 +45,26 @@ everything downstream that consumes it (TV-gate admission) — is
 identical to non-speculative serving; speculative greedy decode is
 token-exact with non-speculative greedy decode at any acceptance rate.
 
-**Batched prefill** (``batch_prefill=True``, default): admissions of
-the same padded prompt length are stacked into one prefill dispatch
-instead of paying one dispatch per request, cutting admission latency
-under bursty load (``benchmarks.bench_serve --burst`` measures it).
+**Chunked ragged prefill** (``chunked_prefill=True``, default): an
+admission's unmatched suffix is split into tiles of ``prefill_chunk``
+rows and streamed through the same varlen paged kernel the decode and
+verify steps use (``decode_step_paged_varlen``) — one dispatch per
+round carries every decode-eligible slot's single-token row *and* the
+pending prefill tiles as ragged ``(row_start, row_len)`` rows, bounded
+by ``dispatch_budget`` tokens.  A long prompt therefore never blocks
+in-flight decodes for a full prefill dispatch: decode rows ride every
+round (they are reserved out of the budget first) and the prompt
+streams in beside them, which is what bounds p99 inter-token latency
+under bursty long-prompt load (``benchmarks.bench_serve --burst``
+measures exactly that).  A partially-prefilled request holds its pages
+but is not decode-eligible until its last chunk lands; greedy output
+is token-exact with the unchunked engine, prefix cache, speculation
+and sharding included.
+
+**Batched prefill** (``chunked_prefill=False`` + ``batch_prefill=
+True``): the legacy one-dispatch-per-padded-length prefill path, kept
+behind a ``DeprecationWarning`` for comparison benchmarks; admissions
+of the same padded prompt length stack into one prefill dispatch.
 
 **Sharded serve** (``mesh=...``): the paged pool partitions its NB
 (page) axis over the mesh's ``data`` axis; the scheduler places every
@@ -84,6 +100,7 @@ from __future__ import annotations
 
 import contextlib
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -102,7 +119,8 @@ from repro.obs.tracer import NULL_TRACER, Tracer
 from repro.models.transformer import (copy_page_rows,
                                       write_prefill_batch_to_pages)
 from repro.rollout.sampler import _top_p_filter, speculative_accept
-from repro.serve.paged_cache import PrefixKey, make_allocator, prefix_key
+from repro.serve.paged_cache import (RECLAIMED, PrefixKey, make_allocator,
+                                     prefix_key)
 from repro.serve.scheduler import (
     ContinuousBatchingScheduler,
     Request,
@@ -248,6 +266,9 @@ class ServeEngine:
         speculate_k: int = 0,
         draft: Any = None,
         batch_prefill: bool = True,
+        chunked_prefill: bool = True,
+        prefill_chunk: int = 16,
+        dispatch_budget: int = 32,
         mesh: Any = None,
         speculate_adaptive: bool = False,
         prefix_cache: bool = False,
@@ -271,6 +292,14 @@ class ServeEngine:
         and must divide by the data-axis size.  ``speculate_adaptive``
         adapts the per-round draft length in ``[1, speculate_k]`` from
         each slot's measured acceptance EMA.
+
+        ``chunked_prefill=True`` (default) streams each admission's prefill
+        as ragged tiles of ``prefill_chunk`` rows through the varlen
+        kernel, unified with decode rows in one dispatch of at most
+        ``dispatch_budget`` tokens (decode rows are reserved first and
+        always all run; the budget throttles prefill tiles).
+        ``chunked_prefill=False`` falls back to the deprecated
+        batched-prefill path.
 
         ``prefix_cache=True`` content-addresses full KV pages (hash over
         token ids, salted with the policy version and arch identity):
@@ -307,6 +336,14 @@ class ServeEngine:
         # Serve-time latency histograms: observed always (raw-sample
         # reservoirs are cheap), reported via collect_serve_stats.
         self._h_ttft = self.metrics.histogram("serve_ttft_s")
+        # TTFT decomposition: queue-wait (submit -> the admission that
+        # produced the first token) + prefill-compute (that admission ->
+        # first token).  The two sum to TTFT exactly; a request
+        # preempted before its first token books its earlier attempts
+        # as queue time.
+        self._h_ttft_queue = self.metrics.histogram("serve_ttft_queue_s")
+        self._h_ttft_prefill = self.metrics.histogram(
+            "serve_ttft_prefill_s")
         self._h_inter_token = self.metrics.histogram("serve_inter_token_s")
         self._h_queue_wait = self.metrics.histogram("serve_queue_wait_s")
         self._h_latency = self.metrics.histogram("serve_request_latency_s")
@@ -435,6 +472,21 @@ class ServeEngine:
         # batched prefill stacks same-padded-length admissions into one
         # forward, so bursty admissions stop paying a dispatch each.
         self.batch_prefill = bool(batch_prefill)
+        # Chunked ragged prefill (default): admissions stream through
+        # the unified varlen dispatch instead of the legacy batched
+        # prefill forward.  Varlen dispatches are keyed by the padded
+        # round width so steady tile sizes reuse one trace.
+        self.chunked_prefill = bool(chunked_prefill)
+        if not self.chunked_prefill:
+            warnings.warn(
+                "chunked_prefill=False: the batched-prefill serve path "
+                "is deprecated and kept only for comparison; chunked "
+                "ragged prefill is the default",
+                DeprecationWarning, stacklevel=2)
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.dispatch_budget = max(int(dispatch_budget), 1)
+        self._varlen_fns: Dict[int, Any] = {}
+        self._draft_varlen_fns: Dict[int, Any] = {}
         self._prefill_fns: Dict[Tuple[int, int], Any] = {}
         self._draft_prefill_fns: Dict[Tuple[int, int], Any] = {}
         # Prefix-cache dispatches: suffix-only prefills keyed by (padded
@@ -825,6 +877,7 @@ class ServeEngine:
             slot = req.slot
             self._tables[slot] = tables[i]
             self._pos[slot] = plen
+            req.num_prefilled = plen
             if req.tokens:                     # resume after preemption
                 self._last_tok[slot] = req.tokens[-1]
             else:
@@ -899,6 +952,7 @@ class ServeEngine:
             slot = req.slot
             self._tables[slot] = tables[i]
             self._pos[slot] = plen
+            req.num_prefilled = plen
             if req.tokens:                     # resume after preemption
                 self._last_tok[slot] = req.tokens[-1]
             else:
@@ -950,6 +1004,11 @@ class ServeEngine:
         if req.first_token_time is None:
             req.first_token_time = now
             self._h_ttft.observe(now - req.submit_time)
+            if req.admit_time is not None:
+                # Exact decomposition: queue + prefill == TTFT.
+                self._h_ttft_queue.observe(
+                    req.admit_time - req.submit_time)
+                self._h_ttft_prefill.observe(now - req.admit_time)
         else:
             self._h_inter_token.observe(now - req.last_emit_time)
         req.last_emit_time = now
@@ -1034,6 +1093,204 @@ class ServeEngine:
         self._pos[slot] = 0
         self._last_tok[slot] = 0
 
+    # -- chunked ragged prefill ----------------------------------------------
+
+    def _varlen_fn(self, t_pad: int, draft: bool = False):
+        cache = self._draft_varlen_fns if draft else self._varlen_fns
+        fn = cache.get(t_pad)
+        if fn is None:
+            fn = cache[t_pad] = self._make_varlen(t_pad, draft=draft)
+        return fn
+
+    def _make_varlen(self, t_pad: int, draft: bool = False):
+        """One unified ragged dispatch: every slot contributes
+        ``row_len[b]`` token rows starting at absolute position
+        ``row_start[b]`` — a decode row is ``row_len == 1``, a prefill
+        tile is ``row_len`` up to the chunk size, an idle/gated slot is
+        ``row_len == 0``.  Verifier variant samples each slot's next
+        token from the logits of its last live row; the draft variant
+        only fills the draft pool (proposal rows must exist there for
+        later speculative rounds) and discards logits."""
+        bundle = self.draft.bundle if draft else self.bundle
+        sample = self._sample
+        kernel_mode = self._kernel_mode
+        mesh = self.mesh
+
+        def _fn(params, tokens, pages, tables, row_start, row_len, cap,
+                slot_shard, key=None):
+            out, pages = bundle.decode_step_paged_varlen(
+                params, tokens, pages, tables, row_start, row_len, cap,
+                kernel_mode=kernel_mode, mesh=mesh, slot_shard=slot_shard)
+            if draft:
+                return pages
+            last = jnp.clip(row_len - 1, 0, t_pad - 1)
+            logits = jnp.take_along_axis(
+                out.logits, last[:, None, None], axis=1)[:, 0]
+            tok, lp = sample(logits, key)
+            return tok, lp, pages
+
+        return jax.jit(_fn, donate_argnums=(2,))
+
+    def _chunked_round(self, finished: List[ServedTrajectory]) -> bool:
+        """One unified varlen round, or False when no prefill is pending
+        (steady state: the caller falls through to the normal decode/
+        speculative path, which this mode leaves untouched).
+
+        Budgeting: every decode-eligible slot's single-token row is
+        reserved out of ``dispatch_budget`` first — bounding the round's
+        token count is only useful if in-flight requests keep emitting —
+        and the remainder goes to prefill tiles of at most
+        ``prefill_chunk`` rows, FIFO by admission order, with a one-row
+        floor for the oldest ready tile so admission always progresses.
+
+        Prefix-cache gating: an admission's pages are registered at
+        admission but their rows land over future rounds, so a pending
+        request whose shared (or COW-source) pages belong to another
+        request still computing them waits until those rows land.  The
+        gate is acyclic — a dependency always points at an *earlier*
+        admission, so the oldest pending request is never gated — and a
+        mid-prefill owner that aborts (preemption, deadline) preempts
+        its gated dependents through the scheduler's ``_abort_prefill``.
+        """
+        pending = [r for r in self.scheduler.running if not r.prefill_done]
+        if not pending:
+            return False
+        tr = self.tracer
+        bs = self.block_size
+        # Pages whose rows an in-flight prefill has not computed yet,
+        # keyed to their unique computing owner (sharers only ever hold
+        # such a page inside their own matched prefix, which is already
+        # complete, so they never appear as owners).
+        incomplete: Dict[Tuple[int, int], Request] = {}
+        for r in pending:
+            sh = r.shard or 0
+            for j, b in enumerate(r.blocks):
+                if b != RECLAIMED and (j + 1) * bs > r.num_prefilled:
+                    incomplete[(sh, b)] = r
+
+        def _gated(r: Request) -> bool:
+            sh = r.shard or 0
+            deps = list(r.blocks[:r.num_shared_full])
+            if r.cow_src is not None:
+                deps.append(r.cow_src[0])
+            return any(incomplete.get((sh, b)) not in (None, r)
+                       for b in deps)
+
+        order = {id(r): i for i, r in
+                 enumerate(self.scheduler._admission_order)}
+        ready = sorted((r for r in pending if not _gated(r)),
+                       key=lambda r: order[id(r)])
+        decode_reqs = [r for r in self.scheduler.running if r.prefill_done]
+        budget_left = self.dispatch_budget - len(decode_reqs)
+        chunks: List[Tuple[Request, np.ndarray, int]] = []
+        for r in ready:
+            ids = self._committed_ids(r)
+            left = int(ids.shape[0]) - r.num_prefilled
+            n = min(self.prefill_chunk, left, budget_left)
+            if n <= 0:
+                if chunks:
+                    continue
+                n = 1    # floor: the oldest ready tile always advances
+            budget_left -= n
+            chunks.append((r, ids, n))
+        # Deferred copy-on-write: a mid-page match is copied into the
+        # request's own page right before its FIRST tile (cow_src is
+        # cleared by the copy, so presence == not yet copied); the tile
+        # then attends over the copied rows like any resident prefix.
+        cow_items = [r for r, _, _ in chunks if r.cow_src is not None]
+        if cow_items:
+            n = len(cow_items)
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)
+            rows = np.zeros((n,), np.int32)
+            home = np.zeros((n,), np.int32)
+            for i, r in enumerate(cow_items):
+                src[i], rows[i] = r.cow_src
+                dst[i] = r.blocks[r.num_shared_full]
+                home[i] = r.shard or 0
+            fn = self._cow_fn(n)
+            args = (jnp.asarray(src), jnp.asarray(dst),
+                    jnp.asarray(rows), jnp.asarray(home))
+            self.pages = fn(self.pages, *args)
+            if isinstance(self.draft, ModelDraft):
+                self.draft.pages = fn(self.draft.pages, *args)
+            for r in cow_items:
+                self.allocator.release([r.cow_src[0]], r.shard or 0)
+                r.cow_src = None
+            self.stats.cow_copies += n
+            if tr.enabled:
+                tr.instant("cow_copy", tid="engine", n=n)
+        t_max = max([n for _, _, n in chunks], default=1)
+        t_pad = -(-t_max // 4) * 4     # pad for jit-cache reuse
+        B = self.max_batch
+        tokens = np.full((B, t_pad), PAD, np.int32)
+        row_start = np.zeros((B,), np.int32)
+        row_len = np.zeros((B,), np.int32)
+        cap = np.zeros((B,), np.int32)
+        for r in decode_reqs:
+            s = r.slot
+            tokens[s, 0] = self._last_tok[s]
+            row_start[s] = self._pos[s]
+            row_len[s] = 1
+            cap[s] = len(r.blocks) * bs
+        for r, ids, n in chunks:
+            s = r.slot
+            tokens[s, :n] = ids[r.num_prefilled:r.num_prefilled + n]
+            row_start[s] = r.num_prefilled
+            row_len[s] = n
+            cap[s] = len(r.blocks) * bs
+        n_tile_tokens = sum(n for _, _, n in chunks)
+        fn = self._varlen_fn(t_pad)
+        tokens_d = jnp.asarray(tokens)
+        rs_d = jnp.asarray(row_start)
+        rl_d = jnp.asarray(row_len)
+        cap_d = jnp.asarray(cap)
+        tables_d = self._dev("tables", self._tables)
+        shard_d = self._dev("slot_shard", self._slot_shard)
+        with tr.span("chunked_round", tid="engine",
+                     decode=len(decode_reqs), tiles=len(chunks),
+                     tokens=int(row_len.sum())), \
+                self._ann("serve.chunked_round"):
+            tok, lp, self.pages = fn(
+                self.params, tokens_d, self.pages, tables_d,
+                rs_d, rl_d, cap_d, shard_d, self._next_key())
+        if isinstance(self.draft, ModelDraft):
+            # Mirror the same rows into the draft pool (draft weights):
+            # later speculative rounds read them as resident context.
+            self.draft.pages = self._varlen_fn(t_pad, draft=True)(
+                self.draft.params, tokens_d, self.draft.pages, tables_d,
+                rs_d, rl_d, cap_d, shard_d)
+        toks_np, lps_np = np.asarray(tok), np.asarray(lp)
+        self.stats.prefill_dispatches += 1
+        self.stats.prefill_tokens += n_tile_tokens
+        if decode_reqs:
+            self.stats.decode_steps += 1
+            self.stats.occupancy_sum += float(len(decode_reqs))
+        for r, ids, n in chunks:
+            slot = r.slot
+            r.num_prefilled += n
+            self._pos[slot] = r.num_prefilled
+            if r.num_prefilled >= int(ids.shape[0]):
+                # Last chunk landed: the slot becomes decode-eligible
+                # and the round's sampled token (from the final prompt
+                # row's logits) is its first emission — unless the
+                # request is resuming after preemption, whose pending
+                # token was already recorded before the preemption.
+                r.prefill_done = True
+                self._active[slot] = True
+                self.stats.prefills += 1
+                if r.tokens:
+                    self._last_tok[slot] = r.tokens[-1]
+                else:
+                    self._record(r, int(toks_np[slot]),
+                                 float(lps_np[slot]), finished)
+        for r in decode_reqs:
+            slot = r.slot
+            self._pos[slot] += 1
+            self._record(r, int(toks_np[slot]), float(lps_np[slot]),
+                         finished)
+        return True
+
     # -- the decode loop -----------------------------------------------------
 
     def step(self) -> List[ServedTrajectory]:
@@ -1066,14 +1323,26 @@ class ServeEngine:
             now = time.monotonic()
             for req in admitted:
                 self._h_queue_wait.observe(now - req.queued_time)
+                req.admit_time = now
         for req in admitted:
             # Fresh occupant: the acceptance EMA of whoever held this
             # slot before says nothing about the new request.
             self._accept_ema[req.slot] = 1.0
-        self._prefill_admitted(admitted, finished)
+        if self.chunked_prefill:
+            # Admissions stream in as ragged tiles over the next rounds
+            # (no prefill dispatch here): mark them pending and park the
+            # write cursor at the first uncomputed row.
+            for req in admitted:
+                req.prefill_done = False
+                self._pos[req.slot] = req.num_prefilled
+        else:
+            self._prefill_admitted(admitted, finished)
         # Rebuild slot state from the scheduler: preempted/retired slots
         # (their Request no longer knows its old index) go quiet, and
         # running rows pick up pages the extension pass just granted.
+        # A mid-prefill request keeps its slot but is not decode-
+        # eligible until its last chunk lands (prefill_done is always
+        # True on the legacy path by this point).
         by_slot = {r.slot: r for r in self.scheduler.running}
         remaining = np.zeros((self.max_batch,), np.int32)
         for slot in range(self.max_batch):
@@ -1081,7 +1350,7 @@ class ServeEngine:
             if req is None:
                 self._clear_slot(slot)
             else:
-                self._active[slot] = True
+                self._active[slot] = req.prefill_done
                 self._slot_shard[slot] = req.shard or 0
                 self._tables[slot] = self.allocator.padded_table(
                     req.blocks, self._tables.shape[1])
@@ -1104,6 +1373,11 @@ class ServeEngine:
             if self.store is not None:
                 tr.counter("policy_lag",
                            lag=float(self.store.version - self.version))
+        if self.chunked_prefill and self._chunked_round(finished):
+            # A unified varlen round ran (prefill tiles + one decode
+            # token per eligible slot); speculation and the multi-step
+            # decode chunk resume once no prefill is pending.
+            return finished
         if not self._active.any():
             return finished
         if self._spec_k_active:
@@ -1139,19 +1413,40 @@ class ServeEngine:
         must be exclusively owned (ref 1).  Shared pages are read-only;
         matched full pages sit strictly below the write position and a
         mid-page match was COW'd at prefill — a violation here means a
-        refcount/COW bug, caught before it corrupts another request."""
+        refcount/COW bug, caught before it corrupts another request.
+
+        Two chunked-prefill exemptions.  Mid-prefill requests are
+        skipped outright: their registered-but-not-yet-complete pages
+        may already be shared by a *gated* later admission (one blocked
+        until exactly these rows land) — the gate in ``_chunked_round``
+        is what keeps the sharer from reading early.  And a deferred
+        COW reservation is allowed on a write page: until the
+        dependent's first tile performs the copy, its ``cow_src`` ref
+        keeps the owner's partial page above 1 — safe because the copy
+        reads rows strictly below the owner's write offset (the match
+        limit excludes the owner's last committed token, let alone its
+        future writes).
+        """
+        cow_pending: Dict[Tuple[int, int], int] = {}
+        for r in self.scheduler.running:
+            if r.cow_src is not None:
+                k = ((r.shard or 0), r.cow_src[0])
+                cow_pending[k] = cow_pending.get(k, 0) + 1
         for req in self.scheduler.running:
+            if not req.prefill_done:
+                continue
             idx = int(self._pos[req.slot]) // self.block_size
             if idx >= len(req.blocks):
                 continue
             page = req.blocks[idx]
             if page >= 0:
                 refs = self.allocator.ref(page, req.shard or 0)
-                if refs != 1:
+                expect = 1 + cow_pending.get(((req.shard or 0), page), 0)
+                if refs != expect:
                     raise RuntimeError(
                         f"request {req.request_id}: decode write page "
-                        f"{page} has refcount {refs} (expected 1) — "
-                        f"copy-on-write invariant violated")
+                        f"{page} has refcount {refs} (expected {expect})"
+                        f" — copy-on-write invariant violated")
 
     def _choose_k(self) -> int:
         """Per-round draft length.

@@ -382,6 +382,23 @@ class BlockAllocator:
                 blocks[len(key.chain)], key.chain_before(len(key.chain)),
                 key.tail)
 
+    def unregister(self, pages: Iterable[int], shard: int = 0) -> None:
+        """Drop the index entries of specific pages (their content stays
+        put; references are untouched).  Used when a chunked prefill
+        aborts mid-flight: the request's registered-but-never-computed
+        pages must stop matching future admissions."""
+        if self._index is None:
+            return
+        for b in pages:
+            b = int(b)
+            self._check_page(b)
+            self._index.drop_page(b)
+            # A page already parked on the evictable LRU with no index
+            # entries left can never match again — free it outright.
+            if b in self._evictable:
+                del self._evictable[b]
+                self._free.append(b)
+
     def flush(self, shard: Optional[int] = None) -> None:
         """Drop every index entry; evictable pages return to the free
         list.  (Unused on weight swaps — the version salt already
@@ -485,6 +502,9 @@ class ShardedBlockAllocator:
     def register(self, key: PrefixKey, blocks: List[int],
                  n_matched_full: int, shard: int = 0) -> None:
         self._shards[shard].register(key, blocks, n_matched_full)
+
+    def unregister(self, pages: Iterable[int], shard: int = 0) -> None:
+        self._shards[shard].unregister(pages)
 
     def flush(self, shard: Optional[int] = None) -> None:
         for i, s in enumerate(self._shards):

@@ -83,6 +83,11 @@ class Request:
     queued_time: float = field(default_factory=time.monotonic)
     first_token_time: Optional[float] = None   # admission latency probe
     last_emit_time: Optional[float] = None     # inter-token latency probe
+    # Most recent admission wall-clock (set by the engine): splits TTFT
+    # into queue-wait (submit -> admit) vs prefill-compute (admit ->
+    # first token).  Re-admissions overwrite it, so a preempted-before-
+    # first-token request books its earlier attempts as queue time.
+    admit_time: Optional[float] = None
     finish_time: Optional[float] = None
     finish_reason: Optional[str] = None
     num_preemptions: int = 0
@@ -95,6 +100,14 @@ class Request:
     num_matched: int = 0
     num_shared_full: int = 0
     cow_src: Optional[Tuple[int, int]] = None   # (page, rows)
+    # Chunked-prefill progress: KV rows computed so far (starts at
+    # ``num_matched`` on admission) and whether the prefill has landed
+    # in full.  A request with ``prefill_done == False`` holds its pages
+    # but is not decode-eligible; the engine advances ``num_prefilled``
+    # tile by tile and flips the flag when the last chunk lands (the
+    # legacy one-dispatch prefill flips it immediately).
+    num_prefilled: int = 0
+    prefill_done: bool = True
     # Per-request wall-clock budget (seconds from submit_time); None
     # defers to the scheduler-wide default.  Enforced by expire().
     deadline_s: Optional[float] = None
@@ -194,6 +207,8 @@ class ContinuousBatchingScheduler:
         """Drop every page reference `req` holds (RECLAIMED sentinels
         were already released; a pending COW source ref too)."""
         shard = req.shard or 0
+        if not req.prefill_done:
+            self._abort_prefill(req, shard)
         self.allocator.release(
             [b for b in req.blocks if b != RECLAIMED], shard)
         if req.cow_src is not None:
@@ -203,6 +218,41 @@ class ContinuousBatchingScheduler:
         req.shard = None
         req.num_matched = 0
         req.num_shared_full = 0
+        req.num_prefilled = 0
+
+    def _abort_prefill(self, req: Request, shard: int) -> None:
+        """A partially-prefilled request is going away.  Rows past its
+        ``num_prefilled`` were never computed, so (a) the registered but
+        not-yet-complete pages must leave the prefix index before any
+        future admission can match their garbage rows, and (b) a running
+        request that already shares one of them (it was gated waiting
+        for those rows to land) must recompute from scratch.  Fires
+        exactly once per prefill attempt — re-admission starts a new
+        one.  Requests that already *started* computing against this
+        chain only ever read rows the owner had finished, so they are
+        untouched (their shared pages are disjoint from the bad set)."""
+        req.prefill_done = True
+        if self.prefix_fn is None or \
+                not getattr(self.allocator, "prefix_cache", False):
+            return
+        bs = self.allocator.block_size
+        bad = {b for j, b in enumerate(req.blocks)
+               if b != RECLAIMED and (j + 1) * bs > req.num_prefilled}
+        if not bad:
+            return
+        self.allocator.unregister(bad, shard)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                "prefill_abort", tid="scheduler", rid=req.request_id,
+                prefilled=req.num_prefilled, pages=len(bad))
+        for r in list(self.running):
+            if r is req or (r.shard or 0) != shard:
+                continue
+            shared = set(r.blocks[:r.num_shared_full])
+            if r.cow_src is not None:
+                shared.add(r.cow_src[0])
+            if shared & bad:
+                self._preempt(r)
 
     def retire(self, req: Request, reason: str) -> None:
         """Finish a request: release its pages copy-free, free the slot.
@@ -377,7 +427,11 @@ class ContinuousBatchingScheduler:
         if self.reclaim_window is not None:
             bs = self.allocator.block_size
             for req in self.running:
-                horizon = req.num_cached - self.reclaim_window
+                # A mid-prefill request's oldest *future* query sits at
+                # num_prefilled, not num_cached — reclaim only behind it.
+                rows = (req.num_cached if req.prefill_done
+                        else req.num_prefilled)
+                horizon = rows - self.reclaim_window
                 for j, b in enumerate(req.blocks):
                     if (j + 1) * bs - 1 > horizon:
                         break
@@ -431,6 +485,7 @@ class ContinuousBatchingScheduler:
             self._commit_match(req, key,
                                matches[shard] if matches else None,
                                total, shard)
+            req.num_prefilled = req.num_matched
             req.slot = free_slots[0]
             req.state = RequestState.RUNNING
             self.slots[req.slot] = req

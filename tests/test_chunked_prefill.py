@@ -1,0 +1,226 @@
+"""Chunked ragged prefill: token-exact equivalence vs the deprecated
+monolithic path (plain, prefix-cached, speculative, every chunk/budget
+shape), the legacy shim's DeprecationWarning, exactly-once page and
+prefix-refcount release on preemption/deadline expiry mid-chunk, and
+the TTFT queue-vs-prefill histogram split."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import get_tokenizer
+from repro.metrics.runtime_metrics import collect_serve_stats
+from repro.serve import ServeEngine
+
+from repro.models.registry import build
+
+TOK = get_tokenizer()
+CFG = ModelConfig(
+    name="chunked-test", arch_type="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=TOK.vocab_size,
+)
+BUNDLE = build(CFG)
+PARAMS = BUNDLE.init(jax.random.PRNGKey(0))
+
+PROMPTS = [np.asarray(TOK.encode(p), np.int32)
+           for p in ("12+345=?#", "998-76=?#", "7*8=?#")]
+BUDGETS = [6, 9, 4]
+
+
+def _engine(**kw):
+    defaults = dict(num_blocks=64, block_size=4, max_batch=3,
+                    max_seq_len=64, temperature=1e-4, seed=0)
+    defaults.update(kw)
+    params = defaults.pop("params", PARAMS)
+    return ServeEngine(BUNDLE, params, **defaults)
+
+
+def _legacy(**kw):
+    with pytest.warns(DeprecationWarning):
+        return _engine(chunked_prefill=False, **kw)
+
+
+def _serve(eng, prompts=PROMPTS, budgets=BUDGETS):
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        eng.submit(p, b, request_id=f"r{i}")
+    return {t.request_id: np.asarray(t.tokens)
+            for t in eng.run(max_steps=600)}
+
+
+# --- token-exact equivalence (tentpole acceptance) ---------------------------
+
+
+@pytest.mark.parametrize("prefill_chunk,dispatch_budget",
+                         [(1, 2), (2, 3), (4, 4), (16, 32), (64, 64)])
+def test_chunked_matches_monolithic_token_exact(prefill_chunk,
+                                                dispatch_budget):
+    """Greedy output is bit-identical across every tile/budget shape —
+    including a 1-token chunk (maximal interleave) and a chunk larger
+    than any prompt (single-tile prefill)."""
+    want = _serve(_legacy())
+    got = _serve(_engine(prefill_chunk=prefill_chunk,
+                         dispatch_budget=dispatch_budget))
+    assert set(want) == set(got)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+
+
+def test_chunked_prefix_cache_token_exact():
+    """Chunked tiles re-match through the prefix cache (gated on the
+    owner's tiles landing) without changing a single greedy token."""
+    kw = dict(prefix_cache=True, max_batch=4)
+    want = {}
+    eng_legacy = _legacy(**kw)
+    for i, p in enumerate(PROMPTS[:2]):
+        for j in range(3):
+            eng_legacy.submit(p, 8, request_id=f"r{i}.{j}")
+    want = {t.request_id: np.asarray(t.tokens)
+            for t in eng_legacy.run(max_steps=600)}
+
+    eng = _engine(prefill_chunk=2, dispatch_budget=6, **kw)
+    for i, p in enumerate(PROMPTS[:2]):
+        for j in range(3):
+            eng.submit(p, 8, request_id=f"r{i}.{j}")
+    got = {t.request_id: np.asarray(t.tokens)
+           for t in eng.run(max_steps=600)}
+    assert set(want) == set(got)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+    assert eng.scheduler.prefix_hits > 0
+    # every reference dropped exactly once on retire
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+@pytest.mark.parametrize("chunked_kw", [
+    dict(prefill_chunk=2, dispatch_budget=4),
+    dict(prefill_chunk=8, dispatch_budget=16),
+])
+def test_chunked_speculative_token_exact(chunked_kw):
+    """Speculative rounds only run once no prefill is pending, so the
+    chunked engine must reproduce the legacy speculative stream."""
+    kw = dict(speculate_k=3, draft=("params", PARAMS))
+    want = _serve(_legacy(**kw))
+    eng = _engine(**kw, **chunked_kw)
+    got = _serve(eng)
+    assert set(want) == set(got)
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid])
+
+
+def test_chunked_is_default_and_monolithic_deprecated():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # default path must not warn
+        eng = _engine()
+    assert eng.chunked_prefill
+    with pytest.warns(DeprecationWarning, match="chunked_prefill"):
+        legacy = _engine(chunked_prefill=False)
+    assert not legacy.chunked_prefill
+
+
+def test_prefill_dispatches_respect_budget():
+    """A tight dispatch budget splits prompts into many small rounds;
+    a huge one prefills each admission wave in O(1) dispatches."""
+    tight = _engine(prefill_chunk=2, dispatch_budget=4)
+    _serve(tight)
+    loose = _engine(prefill_chunk=64, dispatch_budget=256)
+    _serve(loose)
+    assert tight.stats.prefill_dispatches > loose.stats.prefill_dispatches
+    # both computed every prompt row exactly once
+    total = sum(len(p) for p in PROMPTS)
+    assert tight.stats.prefill_tokens == total
+    assert loose.stats.prefill_tokens == total
+
+
+# --- mid-chunk aborts: exactly-once release ----------------------------------
+
+
+def _long_prompt(n=40):
+    row = np.asarray(TOK.encode("123+456=?#"), np.int32)
+    return np.tile(row, -(-n // len(row)))[:n]
+
+
+def test_preemption_mid_chunk_releases_pages_exactly_once():
+    """Preempting a request between tiles must release its pages once
+    (the hardened allocator raises on double-free) and re-admission
+    must reproduce the untouched engine's greedy tokens."""
+    prompt = _long_prompt()
+    eng = _engine(prefill_chunk=4, dispatch_budget=4, max_batch=2,
+                  num_blocks=32, block_size=4, max_seq_len=64)
+    req = eng.submit(prompt, 5, request_id="victim")
+    eng.step()                    # admission + first tile only
+    assert not req.prefill_done
+    assert 0 < req.num_prefilled < len(prompt)
+    eng.scheduler._preempt(req)   # mid-chunk eviction
+    assert req.num_prefilled == 0 and req.blocks == []
+    (traj,) = eng.run(max_steps=400)
+
+    want = _serve(_engine(), prompts=[prompt], budgets=[5])
+    np.testing.assert_array_equal(traj.tokens, want["r0"])
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+def test_deadline_expiry_mid_chunk_releases_pages_exactly_once():
+    """A deadline firing between tiles retires the half-prefilled
+    request through the one retire path: pages back exactly once, a
+    timeout trajectory out, and the pool fully free."""
+    prompt = _long_prompt()
+    eng = _engine(prefill_chunk=4, dispatch_budget=4, max_batch=2,
+                  num_blocks=32, block_size=4, max_seq_len=64,
+                  request_deadline_s=30.0)
+    req = eng.submit(prompt, 5, request_id="late")
+    eng.step()
+    assert not req.prefill_done and req.num_prefilled > 0
+    # jump the scheduler's clock past the deadline
+    eng.scheduler._clock = lambda: req.submit_time + 31.0
+    out = eng.run(max_steps=50)
+    assert [t.finish_reason for t in out] == ["timeout"]
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+    assert eng.scheduler.timeouts_by_state.get("running") == 1
+
+
+def test_prefix_abort_mid_chunk_unregisters_uncomputed_pages():
+    """With the prefix cache on, a mid-chunk abort must unregister the
+    pages whose rows were never computed — a later identical prompt
+    must not match garbage and must still produce exact tokens."""
+    prompt = _long_prompt()
+    eng = _engine(prefill_chunk=4, dispatch_budget=4, max_batch=2,
+                  num_blocks=32, block_size=4, max_seq_len=64,
+                  prefix_cache=True)
+    req = eng.submit(prompt, 5, request_id="aborted")
+    eng.step()
+    assert not req.prefill_done
+    eng.scheduler._preempt(req)
+    got = {t.request_id: np.asarray(t.tokens)
+           for t in eng.run(max_steps=400)}
+    eng.submit(prompt, 5, request_id="retry")
+    got.update({t.request_id: np.asarray(t.tokens)
+                for t in eng.run(max_steps=400)})
+
+    want = _serve(_engine(), prompts=[prompt], budgets=[5])
+    np.testing.assert_array_equal(got["aborted"], want["r0"])
+    np.testing.assert_array_equal(got["retry"], want["r0"])
+    assert eng.allocator.num_free == eng.allocator.num_blocks
+
+
+# --- TTFT decomposition (observability satellite) ----------------------------
+
+
+def test_ttft_splits_into_queue_and_prefill_histograms():
+    eng = _engine(prefill_chunk=2, dispatch_budget=4)
+    _serve(eng)
+    stats = collect_serve_stats(eng)
+    n = stats["ttft_count"]
+    assert n == len(PROMPTS)
+    # one (queue, prefill) observation per first token, ms keys present
+    assert stats["ttft_queue_count"] == n
+    assert stats["ttft_prefill_count"] == n
+    for key in ("ttft_queue_p50_ms", "ttft_queue_p99_ms",
+                "ttft_prefill_p50_ms", "ttft_prefill_p99_ms"):
+        assert stats[key] >= 0.0
+    # the split decomposes the mean exactly: ttft = queue + prefill
+    np.testing.assert_allclose(
+        stats["ttft_mean_ms"],
+        stats["ttft_queue_mean_ms"] + stats["ttft_prefill_mean_ms"],
+        rtol=1e-6, atol=1e-3)

@@ -7,7 +7,11 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.flash_attention_pallas import flash_attention
 from repro.kernels.fused_logprob_pallas import logprobs_pallas
-from repro.kernels.paged_attention_pallas import paged_attention
+from repro.kernels.paged_attention_pallas import (
+    paged_attention,
+    paged_attention_multi,
+    paged_attention_varlen,
+)
 from repro.kernels.vtrace_pallas import vtrace_pallas
 from repro.kernels.wkv6_pallas import wkv6_pallas
 from repro.kernels import ops
@@ -158,6 +162,124 @@ def test_paged_attention_matches_dense_attention():
     lens = jnp.asarray([s], jnp.int32)
     got = ref.ref_paged_attention(q_full[:, -1], kp, vp, tables, lens)
     np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention, varlen (one kernel family: prefill/decode/verify)
+# ---------------------------------------------------------------------------
+
+
+def _varlen_rows(rng, lens, t):
+    """Random per-slot ``(row_start, row_len)`` inside each context.
+
+    Mixes the three call shapes the serve engine issues: decode rows
+    (``row_len == 1``), ragged tiles (``1 < row_len <= t``) and dead
+    slots (``row_len == 0``) — plus a ``row_start`` anywhere in the
+    written context, as chunked prefill resumes mid-prompt."""
+    b = len(lens)
+    row_start = np.zeros((b,), np.int32)
+    row_len = np.zeros((b,), np.int32)
+    for i in range(b):
+        kind = i % 3
+        if kind == 0 and lens[i] >= 1:          # decode shape
+            row_len[i] = 1
+        elif kind == 1:                          # dead slot
+            row_len[i] = 0
+        else:                                    # ragged tile
+            row_len[i] = int(rng.integers(1, min(t, lens[i]) + 1))
+        row_start[i] = int(rng.integers(0, lens[i] - row_len[i] + 1))
+    return row_start, row_len
+
+
+@pytest.mark.parametrize(
+    "b,t,h,kv,d,bs,window",
+    [(4, 4, 4, 2, 16, 8, None), (3, 8, 4, 4, 32, 4, None),
+     (5, 3, 2, 1, 8, 16, None), (2, 6, 8, 2, 16, 8, 5),
+     (4, 5, 4, 2, 16, 8, 12), (6, 2, 2, 2, 8, 4, None)],
+)
+def test_paged_attention_varlen_ragged_sweep(b, t, h, kv, d, bs, window):
+    """Varlen Pallas kernel (interpret) vs the jnp oracle on shuffled
+    tables with mixed decode/tile/dead rows at ragged offsets."""
+    rng = np.random.default_rng(b * 131 + t * 7 + h)
+    num_blocks, max_blocks = 24, 4
+    ks = jax.random.split(jax.random.fold_in(KEY, b * t * h + d), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d))
+    kp = jax.random.normal(ks[1], (kv, num_blocks, bs, d))
+    vp = jax.random.normal(ks[2], (kv, num_blocks, bs, d))
+    tables, lens = _ragged_tables(rng, b, num_blocks, max_blocks, bs)
+    row_start, row_len = _varlen_rows(rng, lens, t)
+    got = paged_attention_varlen(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(row_start),
+        jnp.asarray(row_len), window=window, interpret=True)
+    want = ref.ref_paged_attention_varlen(
+        q, kp, vp, jnp.asarray(tables), jnp.asarray(row_start),
+        jnp.asarray(row_len), window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    # Padding rows and dead slots must be exactly zero, not just close.
+    got_np = np.asarray(got)
+    for i in range(b):
+        np.testing.assert_array_equal(got_np[i, row_len[i]:], 0.0)
+
+
+def test_paged_attention_varlen_subsumes_decode_and_verify():
+    """The three serve call shapes are one kernel: ``row_len == 1``
+    reproduces single-token decode and full-tail ``row_len == k``
+    reproduces the speculative-verify (multi) shape, numerically
+    identical to the dedicated entry points."""
+    rng = np.random.default_rng(7)
+    b, t, h, kv, d, bs = 4, 4, 4, 2, 16, 8
+    num_blocks, max_blocks = 24, 4
+    ks = jax.random.split(jax.random.fold_in(KEY, 977), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d))
+    kp = jax.random.normal(ks[1], (kv, num_blocks, bs, d))
+    vp = jax.random.normal(ks[2], (kv, num_blocks, bs, d))
+    tables, lens = _ragged_tables(rng, b, num_blocks, max_blocks, bs)
+    tables, lens = jnp.asarray(tables), jnp.asarray(lens)
+
+    # decode: the varlen row (row_start = ctx-1, row_len = 1) vs the
+    # single-token kernel on the same contexts.
+    dec = paged_attention_varlen(
+        q[:, :1], kp, vp, tables, lens - 1, jnp.ones((b,), jnp.int32),
+        interpret=True)
+    want_dec = paged_attention(q[:, 0], kp, vp, tables, lens,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(want_dec),
+                               rtol=2e-5, atol=2e-5)
+
+    # verify: the fixed-T wrapper is literally the varlen kernel with
+    # (ctx-T, T) rows — including its treatment of inactive slots.
+    lens_inact = lens.at[1].set(0)
+    multi = paged_attention_multi(q, kp, vp, tables, lens_inact,
+                                  interpret=True)
+    active = lens_inact > 0
+    var = paged_attention_varlen(
+        q, kp, vp, tables,
+        jnp.where(active, lens_inact - t, 0),
+        jnp.where(active, t, 0), interpret=True)
+    np.testing.assert_allclose(np.asarray(multi), np.asarray(var),
+                               rtol=0, atol=0)
+    np.testing.assert_array_equal(np.asarray(multi[1]), 0.0)
+
+
+def test_ops_varlen_dispatch_modes_agree():
+    """reference and pallas_interpret modes of the ops-layer varlen
+    entry agree on ragged mixed-shape rows."""
+    rng = np.random.default_rng(13)
+    b, t, h, kv, d, bs = 5, 3, 4, 2, 16, 4
+    num_blocks, max_blocks = 16, 4
+    ks = jax.random.split(jax.random.fold_in(KEY, 1933), 3)
+    q = jax.random.normal(ks[0], (b, t, h, d))
+    kp = jax.random.normal(ks[1], (kv, num_blocks, bs, d))
+    vp = jax.random.normal(ks[2], (kv, num_blocks, bs, d))
+    tables, lens = _ragged_tables(rng, b, num_blocks, max_blocks, bs)
+    row_start, row_len = _varlen_rows(rng, lens, t)
+    args = (q, kp, vp, jnp.asarray(tables), jnp.asarray(row_start),
+            jnp.asarray(row_len))
+    a = ops.paged_attention_varlen(*args, mode="reference")
+    bI = ops.paged_attention_varlen(*args, mode="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(bI),
                                rtol=2e-5, atol=2e-5)
 
 

@@ -323,7 +323,8 @@ def test_adaptive_k_ema_resets_on_admission():
     assert eng._accept_ema[0] < 1.0          # adversarial draft rejected
     before = eng._chosen_k_hist.snapshot().get(4, 0)
     eng.submit(PROMPTS[1], 4)
-    eng.step()   # admission resets the slot EMA -> this round drafts k=4
+    eng.step()   # admission round: chunked prefill tiles, no spec yet
+    eng.step()   # EMA was reset at admission -> this round drafts k=4
     assert eng._chosen_k_hist.snapshot().get(4, 0) == before + 1
 
 
@@ -460,9 +461,11 @@ def test_batched_prefill_token_exact_and_one_dispatch():
     prompts = PROMPTS + [np.asarray(TOK.encode("9-5=?#"), np.int32)]
     outs, dispatches = {}, {}
     for bp in (True, False):
-        eng = ServeEngine(
-            BUNDLE, PARAMS, num_blocks=32, block_size=8, max_batch=4,
-            max_seq_len=64, temperature=1e-4, seed=0, batch_prefill=bp)
+        with pytest.warns(DeprecationWarning):
+            eng = ServeEngine(
+                BUNDLE, PARAMS, num_blocks=32, block_size=8, max_batch=4,
+                max_seq_len=64, temperature=1e-4, seed=0,
+                batch_prefill=bp, chunked_prefill=False)
         reqs = [eng.submit(r, 6) for r in prompts]
         trajs = {t.request_id: t for t in eng.run(max_steps=200)}
         outs[bp] = [trajs[rq.request_id].tokens for rq in reqs]
@@ -478,9 +481,11 @@ def test_batched_prefill_mixed_lengths_grouped_separately():
     class gets its own, and tokens still match the dense reference."""
     short = PROMPTS[0]                      # 6 ids -> pads to 8
     long = np.concatenate([PROMPTS[1]] * 2)  # 12 ids -> pads to 16
-    eng = ServeEngine(
-        BUNDLE, PARAMS, num_blocks=32, block_size=8, max_batch=4,
-        max_seq_len=64, temperature=1e-4, seed=0)
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(
+            BUNDLE, PARAMS, num_blocks=32, block_size=8, max_batch=4,
+            max_seq_len=64, temperature=1e-4, seed=0,
+            chunked_prefill=False)
     r1 = eng.submit(short, 5)
     r2 = eng.submit(long, 5)
     trajs = {t.request_id: t for t in eng.run(max_steps=200)}
@@ -507,10 +512,12 @@ def test_batched_prefill_records_first_token_latency():
 
 def test_spec_engine_with_batched_prefill_and_mixed_lengths():
     """Speculation + batched prefill + mixed budgets, all at once."""
-    eng = ServeEngine(
-        BUNDLE, PARAMS, num_blocks=32, block_size=8, max_batch=3,
-        max_seq_len=64, temperature=1e-4, seed=0,
-        speculate_k=4, draft=("params", PARAMS))
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine(
+            BUNDLE, PARAMS, num_blocks=32, block_size=8, max_batch=3,
+            max_seq_len=64, temperature=1e-4, seed=0,
+            speculate_k=4, draft=("params", PARAMS),
+            chunked_prefill=False)
     reqs = [eng.submit(r, n) for r, n in zip(PROMPTS, BUDGETS)]
     trajs = {t.request_id: t for t in eng.run(max_steps=400)}
     for rq, w in zip(reqs, GREEDY_WANT):
